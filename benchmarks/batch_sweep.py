@@ -1,0 +1,43 @@
+"""Paper Fig 13 (speedup/energy vs batch) + Fig 11 bottom (throughput &
+BW-utilization vs batch)."""
+from __future__ import annotations
+
+from benchmarks.common import Row
+from repro.configs import get_config
+from repro.core import hardware
+from repro.sim.compiler import CompileOptions, compile_decode_step
+from repro.sim.engine import simulate_program
+from repro.sim.gpu_model import GPUSystemConfig, gpu_decode_latency
+from repro.sim.scaling import rpu_point
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    # Fig 13: 8k prefill/2k decode context; sweep batch on 70B vs 1xH100-pair
+    for name, n_gpus in [("llama3-8b", 1), ("llama3-70b", 2)]:
+        cfg = get_config(name)
+        gpu = GPUSystemConfig(chip=hardware.H100, n_gpus=n_gpus)
+        for batch in (1, 4, 16, 64):
+            g = gpu_decode_latency(cfg, gpu, batch=batch, seq_len=8192)
+            p = rpu_point(cfg, 128, batch=batch, seq_len=8192)
+            if p is None:
+                continue
+            rows.append(Row(
+                "Fig13", f"{name} BS={batch} RPU-128 vs {n_gpus}xH100 speedup",
+                g.total_s * 1e3 / p.ms_per_token,
+                "40-50" if batch <= 4 else "15-20", "x",
+                f"energy ratio {g.energy_j / max(p.sim.energy_j,1e-12):.1f}x"))
+
+    # Fig 11 bottom: per-query throughput + bw utilization vs batch (128 CU)
+    for name in ("llama3-405b", "llama4-maverick-400b-a17b",
+                 "llama4-scout-109b-a17b"):
+        cfg = get_config(name)
+        for batch in (1, 8, 32, 128):
+            prog = compile_decode_step(cfg, CompileOptions(
+                n_cus=128, batch=batch, seq_len=8192))
+            r = simulate_program(prog)
+            rows.append(Row(
+                "Fig11b", f"{name} BS={batch} tok/s/query",
+                1.0 / r.latency_s, None, "",
+                f"mem-bw util {r.mem_bw_utilization:.2f}"))
+    return rows

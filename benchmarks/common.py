@@ -1,0 +1,31 @@
+"""Shared benchmark plumbing: result rows + rendering."""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Any
+
+EXP_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments"
+
+
+@dataclasses.dataclass
+class Row:
+    figure: str           # paper anchor, e.g. "Fig5", "Fig11", "ours:roofline"
+    metric: str
+    value: Any
+    paper: Any = None     # the paper's number, when one exists
+    unit: str = ""
+    note: str = ""
+
+    def render(self) -> str:
+        p = f" (paper {self.paper}{self.unit})" if self.paper is not None else ""
+        v = f"{self.value:.4g}" if isinstance(self.value, float) else str(self.value)
+        return f"{self.figure:22s} {self.metric:46s} {v}{self.unit}{p} {self.note}"
+
+
+def dump(rows: list[Row], name: str):
+    EXP_DIR.mkdir(parents=True, exist_ok=True)
+    out = EXP_DIR / f"bench_{name}.json"
+    out.write_text(json.dumps([dataclasses.asdict(r) for r in rows], indent=1,
+                              default=str))

@@ -1,0 +1,73 @@
+"""Paper Fig 9 (Pareto of HBM-CO for 405B/64CU), Fig 12 (energy & cost vs
+scale), §IX decomposed contributions."""
+from __future__ import annotations
+
+from benchmarks.common import Row
+from repro.configs import get_config
+from repro.core.hbmco import (HBM3E_LIKE, enumerate_design_space,
+                              pareto_frontier)
+from repro.sim.scaling import rpu_point, system_cost
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    cfg405 = get_config("llama3-405b")
+    frontier = pareto_frontier(enumerate_design_space())
+
+    # Fig 9: 64-CU 405B — optimal SKU + energy vs an HBM3e-like choice
+    p_co = rpu_point(cfg405, 64, batch=1, seq_len=8192)
+    p_3e = rpu_point(cfg405, 64, batch=1, seq_len=8192, sku=HBM3E_LIKE)
+    rows += [
+        Row("Fig9", "405B/64CU optimal SKU", p_co.sku.name, None, "",
+            f"{p_co.sku.capacity_mb:.0f}MB, {p_co.sku.energy_pj_per_bit:.2f}pJ/b"),
+        Row("Fig9", "energy/token HBM-CO vs HBM3e",
+            p_3e.sim.energy_j / p_co.sim.energy_j, 1.7, "x",
+            "paper: 1.7x at system level (64 CU)"),
+    ]
+
+    # Fig 12: energy + cost across scales; HBM-CO vs fixed HBM3e
+    scales = [64, 128, 256, 268, 428]
+    e_curve, c_curve = [], []
+    for n in scales:
+        p = rpu_point(cfg405, n, batch=1, seq_len=8192)
+        if p is None:
+            continue
+        e_curve.append((n, p.sim.energy_j, p.sku.name))
+        c_curve.append((n, p.cost))
+    rows.append(Row("Fig12", "405B energy/token vs scale",
+                    " ".join(f"{n}:{e:.2f}J({s})" for n, e, s in e_curve),
+                    None, "", "energy falls with scale until max-BW/Cap SKU"))
+    # paper's 2.2x: HBM-CO vs an HBM3e-BW/Cap memory AT the same scale
+    n_best = e_curve[-1][0]
+    p_best = rpu_point(cfg405, n_best, batch=1, seq_len=8192)
+    p_best_3e = rpu_point(cfg405, n_best, batch=1, seq_len=8192,
+                          sku=HBM3E_LIKE)
+    rows.append(Row("Fig12", f"energy HBM3e/HBM-CO at {n_best}CU",
+                    p_best_3e.sim.energy_j / p_best.sim.energy_j, 2.2, "x",
+                    "paper: up to 2.2x"))
+
+    # cost: HBM-CO-selected vs fixed HBM3e at the latency-optimal scale
+    n = 428
+    p = rpu_point(cfg405, n, batch=1, seq_len=8192)
+    cost_co = system_cost(n, p.sku)
+    cost_3e = system_cost(n, HBM3E_LIKE)
+    rows += [
+        Row("Fig12", f"405B/{n}CU cost breakdown",
+            " ".join(f"{k}={v:.2f}" for k, v in cost_co.items())),
+        Row("Fig12", "total cost fixed-HBM3e / HBM-CO",
+            cost_3e["total"] / cost_co["total"], 12.4, "x",
+            "paper: up to 12.4x"),
+    ]
+
+    # EDP vs 4xH100 (§VIII: 412x)
+    from repro.core import hardware
+    from repro.sim.gpu_model import GPUSystemConfig, gpu_decode_latency
+    g = gpu_decode_latency(cfg405, GPUSystemConfig(n_gpus=4), batch=1,
+                           seq_len=8192)
+    edp = (g.total_s * g.energy_j) / (p.ms_per_token * 1e-3 * p.sim.energy_j)
+    rows.append(Row("Fig12", "EDP improvement vs 4xH100", edp, 412, "x",
+                    "energy accounting scope differs; see EXPERIMENTS.md"))
+    rows.append(Row("Fig12", "energy/token vs 4xH100",
+                    g.energy_j / p.sim.energy_j, 6.5, "x",
+                    "paper 6.5x; ours excludes prefill energy"))
+    return rows

@@ -1,0 +1,41 @@
+"""Paper Fig 4 (Goldilocks BW/Cap landscape) + Fig 5 (HBM-CO tradeoffs)."""
+from __future__ import annotations
+
+from benchmarks.common import Row
+from repro.core.hbmco import (CANDIDATE_CO, HBM3E_LIKE,
+                              enumerate_design_space, pareto_frontier)
+
+
+def run() -> list[Row]:
+    rows = [
+        Row("Fig5", "HBM3e-like energy", HBM3E_LIKE.energy_pj_per_bit, 3.44,
+            " pJ/b", "calibration target"),
+        Row("Fig5", "candidate (768MB/256GBps) energy",
+            CANDIDATE_CO.energy_pj_per_bit, 1.45, " pJ/b"),
+        Row("Fig5", "candidate BW/Cap", CANDIDATE_CO.bw_per_cap, 341, ""),
+        Row("Fig5", "energy ratio HBM3e/candidate",
+            HBM3E_LIKE.energy_pj_per_bit / CANDIDATE_CO.energy_pj_per_bit,
+            2.4, "x"),
+        Row("Fig5", "cost/GB ratio candidate/HBM3e",
+            CANDIDATE_CO.cost_per_gb / HBM3E_LIKE.cost_per_gb, 1.81, "x"),
+        Row("Fig5", "module cost ratio HBM3e/candidate",
+            HBM3E_LIKE.module_cost / CANDIDATE_CO.module_cost, 35, "x"),
+        Row("Fig5", "bandwidth-per-dollar ratio",
+            CANDIDATE_CO.bandwidth_per_cost / HBM3E_LIKE.bandwidth_per_cost,
+            5.0, "x", ">= paper"),
+        Row("Fig4", "candidate ideal token latency",
+            CANDIDATE_CO.ideal_token_latency_s * 1e3, 2.9, " ms",
+            "Goldilocks range"),
+        Row("Fig4", "HBM3e capacity utilization at candidate perf",
+            CANDIDATE_CO.bw_per_cap and
+            100.0 * HBM3E_LIKE.bw_per_cap / CANDIDATE_CO.bw_per_cap, 7.9,
+            " %", "overprovisioning paradox"),
+    ]
+    space = enumerate_design_space()
+    frontier = pareto_frontier(space)
+    rows.append(Row("Fig5", "design points enumerated", len(space)))
+    rows.append(Row("Fig9", "Pareto-frontier SKUs (256GB/s class)",
+                    len(frontier), None, "",
+                    " | ".join(f"{c.capacity_mb:.0f}MB@{c.energy_pj_per_bit:.2f}pJ"
+                               for c in frontier)))
+    return rows

@@ -1,0 +1,39 @@
+"""Paper Fig 9: HBM-CO Pareto frontier for Llama3-405B on a 64-CU RPU —
+energy per inference vs system memory capacity, with the optimal-SKU
+annotation rule."""
+from __future__ import annotations
+
+from benchmarks.common import Row
+from repro.configs import get_config
+from repro.core.hbmco import enumerate_design_space, pareto_frontier
+from repro.models.footprint import compute_footprint
+from repro.sim.scaling import rpu_point
+
+
+def run() -> list[Row]:
+    cfg = get_config("llama3-405b")
+    fp = compute_footprint(cfg)
+    frontier = pareto_frontier(enumerate_design_space())
+    need_per_chiplet = fp.capacity_bytes(1, 8192) / (64 * 2)
+
+    rows: list[Row] = []
+    curve = []
+    for sku in frontier:
+        fits = sku.capacity_bytes >= need_per_chiplet
+        p = rpu_point(cfg, 64, batch=1, seq_len=8192, sku=sku) if fits else None
+        curve.append(f"{sku.capacity_mb:.0f}MB:"
+                     f"{(p.sim.energy_j if p else float('nan')):.2f}J"
+                     f"{'' if fits else '(too small)'}")
+    rows.append(Row("Fig9", "energy/token across frontier SKUs (64CU, 405B)",
+                    "  ".join(curve), None, "",
+                    "smaller SKUs are more efficient but must fit the model"))
+    opt = rpu_point(cfg, 64, batch=1, seq_len=8192)
+    rows.append(Row("Fig9", "optimal SKU capacity per chiplet",
+                    opt.sku.capacity_mb, None, " MB",
+                    f"paper: 192MB/core-class optimum at 64 CUs; "
+                    f"need={need_per_chiplet/2**20:.0f}MB"))
+    rows.append(Row("Fig9", "unlocking smaller SKUs needs more CUs",
+                    " ".join(
+                        f"{n}CU:{rpu_point(cfg, n, batch=1, seq_len=8192).sku.capacity_mb:.0f}MB"
+                        for n in (64, 128, 256, 428))))
+    return rows

@@ -1,0 +1,73 @@
+"""The assigned-architecture roofline table: reads the dry-run JSONs in
+experiments/dryrun/ and renders the per-(arch x shape x mesh) three-term
+roofline with dominant-bottleneck calls (EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.common import EXP_DIR, Row
+
+DRYRUN_DIR = EXP_DIR / "dryrun"
+
+
+def load_cells() -> list[dict]:
+    cells = []
+    for p in sorted(DRYRUN_DIR.glob("*.json")):
+        cells.append(json.loads(p.read_text()))
+    return cells
+
+
+def render_markdown(cells: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | useful flops | plan |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for c in cells:
+        if c.get("status") != "ok":
+            continue
+        plan = c.get("plan", {})
+        pl = f"dp={'+'.join(plan.get('dp', []) or ['-'])}"
+        if plan.get("fsdp"):
+            pl += " fsdp"
+        if plan.get("seq_parallel"):
+            pl += " sp"
+        if plan.get("cache_seq"):
+            cs = plan["cache_seq"]
+            pl += f" kv/{'+'.join(cs) if isinstance(cs, list) else cs}"
+        u = c.get("useful_flops_ratio")
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} "
+            f"| {c['compute_s']:.3g} | {c['memory_s']:.3g} "
+            f"| {c['collective_s']:.3g} | {c['dominant']} "
+            f"| {u:.3f} | {pl} |" if u is not None else "")
+    return hdr + "\n".join(l for l in lines if l)
+
+
+def run() -> list[Row]:
+    cells = load_cells()
+    ok = [c for c in cells if c.get("status") == "ok"]
+    rows = [Row("ours:roofline", "dry-run cells recorded", len(ok), None, "",
+                f"of {len(cells)} json files")]
+    if not ok:
+        return rows
+    by_dom: dict[str, int] = {}
+    for c in ok:
+        by_dom[c["dominant"]] = by_dom.get(c["dominant"], 0) + 1
+    rows.append(Row("ours:roofline", "dominant-term distribution",
+                    str(by_dom)))
+    worst = min(ok, key=lambda c: (c.get("useful_flops_ratio") or 1.0))
+    rows.append(Row("ours:roofline", "worst useful-flops cell",
+                    f"{worst['arch']} x {worst['shape']}",
+                    None, "", f"ratio {worst.get('useful_flops_ratio'):.3f}"))
+    most_coll = max(ok, key=lambda c: c["collective_s"] / max(c["bound_s"], 1e-12))
+    rows.append(Row("ours:roofline", "most collective-bound cell",
+                    f"{most_coll['arch']} x {most_coll['shape']}",
+                    None, "",
+                    f"coll {most_coll['collective_s']*1e3:.1f}ms of bound "
+                    f"{most_coll['bound_s']*1e3:.1f}ms"))
+    return rows
+
+
+if __name__ == "__main__":
+    print(render_markdown(load_cells()))

@@ -1,0 +1,67 @@
+"""Benchmark orchestrator: one module per paper figure/table + the
+roofline table from the dry-run artifacts.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig5,fig8,...]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from benchmarks.common import EXP_DIR, Row, dump
+
+MODULES = [
+    ("hbmco_tradeoffs", "Fig 4/5 — HBM-CO design space & candidate device"),
+    ("pareto", "Fig 9 — HBM-CO Pareto frontier for 405B/64CU"),
+    ("sku_map", "Fig 10 — SKU selection map (Maverick, batch x seq)"),
+    ("cu_timeline", "Fig 8 — CU timeline BS=1/BS=32 + decoupling ablations"),
+    ("strong_scaling", "Fig 11 — strong scaling + ISO-TDP vs H100"),
+    ("batch_sweep", "Fig 13/11b — batch sweeps (speedup, energy, BW util)"),
+    ("energy_cost", "Fig 12 — energy & cost vs scale; EDP"),
+    ("spec_decode", "Fig 14 — speculative decoding comparison"),
+    ("roofline_table", "ours — 40-cell roofline table from the dry-run"),
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module names")
+    args = ap.parse_args(argv)
+    want = set(args.only.split(",")) if args.only else None
+
+    all_rows: list[Row] = []
+    failures = []
+    for name, title in MODULES:
+        if want and name not in want:
+            continue
+        print(f"\n=== {title} [{name}] " + "=" * max(1, 30 - len(name)))
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            rows = mod.run()
+        except Exception as e:  # pragma: no cover
+            import traceback
+            traceback.print_exc()
+            failures.append((name, repr(e)))
+            continue
+        for r in rows:
+            print(r.render())
+        dump(rows, name)
+        all_rows.extend(rows)
+        print(f"[{time.time()-t0:.1f}s]")
+
+    EXP_DIR.mkdir(parents=True, exist_ok=True)
+    (EXP_DIR / "bench_all.json").write_text(json.dumps(
+        [r.__dict__ for r in all_rows], indent=1, default=str))
+    print(f"\n{len(all_rows)} rows -> {EXP_DIR/'bench_all.json'}")
+    if failures:
+        print("FAILURES:", failures)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,35 @@
+"""Paper Fig 10: HBM-CO SKU selection map for Llama4-Maverick on 64 CUs
+(batch x sequence-length grid) + slowdown sub-metrics."""
+from __future__ import annotations
+
+from benchmarks.common import Row
+from repro.configs import get_config
+from repro.models.footprint import compute_footprint
+from repro.sim.scaling import rpu_point, select_sku_for
+
+
+def run() -> list[Row]:
+    cfg = get_config("llama4-maverick-400b-a17b")
+    fp = compute_footprint(cfg)
+    rows: list[Row] = []
+    base = rpu_point(cfg, 64, batch=1, seq_len=8192)
+    grid = []
+    for batch in (1, 8, 32, 128):
+        for seq in (8192, 32768, 131072):
+            sku = select_sku_for(cfg, 64, batch=batch, seq_len=seq)
+            if sku is None:
+                grid.append(f"b{batch}/s{seq//1024}k:none")
+                continue
+            p = rpu_point(cfg, 64, batch=batch, seq_len=seq, sku=sku)
+            kv_frac = fp.kv_bytes(batch, seq) / fp.capacity_bytes(batch, seq)
+            grid.append(
+                f"b{batch}/s{seq//1024}k:{sku.bw_per_cap:.0f}"
+                f"({p.ms_per_token/base.ms_per_token:.1f}x,kv={kv_frac:.0%})")
+    rows.append(Row("Fig10", "maverick 64CU SKU map (BW/Cap, slowdown, KV%)",
+                    "  ".join(grid), None, "",
+                    "high BW/Cap best for low-batch; KV$>50% at b8/128k"))
+    kv_frac_8_128k = fp.kv_bytes(8, 131072) / fp.capacity_bytes(8, 131072)
+    rows.append(Row("Fig10", "KV$ fraction of active bytes at BS=8 128k",
+                    kv_frac_8_128k, 0.5, "",
+                    "paper: >50% of active parameters are KV$"))
+    return rows

@@ -1,0 +1,72 @@
+"""Paper Fig 11 (top): strong scaling + ISO-TDP anchors vs H100."""
+from __future__ import annotations
+
+from benchmarks.common import Row
+from repro.configs import get_config
+from repro.core import hardware
+from repro.sim.gpu_model import GPUSystemConfig, gpu_decode_latency
+from repro.sim.scaling import rpu_point, strong_scaling
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    # peak points the paper quotes (§VIII)
+    for name, n_cus, paper_ms in [("llama3-70b", 204, 0.4),
+                                  ("llama3-405b", 428, 1.0),
+                                  ("llama4-maverick-400b-a17b", 128, 0.2)]:
+        p = rpu_point(get_config(name), n_cus, batch=1, seq_len=8192)
+        rows.append(Row("Fig11", f"{name} @ {n_cus} CUs", p.ms_per_token,
+                        paper_ms, " ms/tok", f"sku={p.sku.name}"))
+
+    # ISO-TDP anchors: the paper's GPU configs (2xH100 70B, 4xH100 405B)
+    for name, n_gpus, paper_x in [("llama3-70b", 2, 47.0),
+                                  ("llama3-405b", 4, 45.3)]:
+        cfg = get_config(name)
+        gpu = GPUSystemConfig(chip=hardware.H100, n_gpus=n_gpus)
+        g = gpu_decode_latency(cfg, gpu, batch=1, seq_len=8192)
+        # RPU at the same TDP with its best-fitting SKU
+        from repro.sim.scaling import (cu_tdp_w, select_sku_for)
+        n_cus, sku = 64, None
+        for _ in range(8):
+            sku = select_sku_for(cfg, n_cus, batch=1, seq_len=8192)
+            if sku is None:
+                n_cus *= 2
+                continue
+            new_n = max(1, int(gpu.tdp_w / cu_tdp_w(hardware.RPU_DEFAULT, sku)))
+            if new_n == n_cus:
+                break
+            n_cus = new_n
+        p = rpu_point(cfg, n_cus, batch=1, seq_len=8192, sku=sku)
+        rows.append(Row("Fig11", f"{name} ISO-TDP speedup vs {n_gpus}xH100",
+                        g.total_s * 1e3 / p.ms_per_token, paper_x, "x",
+                        f"{gpu.tdp_w:.0f}W: GPU {g.total_s*1e3:.1f}ms vs "
+                        f"RPU-{n_cus} {p.ms_per_token:.2f}ms"))
+
+    # scaling curve shape for 70B (plateau check)
+    pts = strong_scaling(get_config("llama3-70b"),
+                         [32, 64, 128, 204, 256, 384, 512], batch=1,
+                         seq_len=8192)
+    curve = " ".join(f"{p.n_cus}:{p.ms_per_token:.2f}ms" for p in pts)
+    rows.append(Row("Fig11", "llama3-70b scaling curve", curve, None, "",
+                    "plateaus as broadcast dominates"))
+    # edge/datacenter design points (§VIII): 220W edge, 1kW datacenter
+    from repro.sim.scaling import cu_tdp_w as _ctw, select_sku_for as _ssf
+    for tdp, paper_ms, label in [(220.0, 3.5, "edge"), (1000.0, 0.65, "datacenter")]:
+        cfg = get_config("llama3-70b")
+        n, sku = 16, None
+        for _ in range(8):
+            sku = _ssf(cfg, n, batch=1, seq_len=8192)
+            if sku is None:
+                n *= 2
+                continue
+            new_n = max(1, int(tdp / _ctw(hardware.RPU_DEFAULT, sku)))
+            if new_n == n:
+                break
+            n = new_n
+        p = rpu_point(cfg, n, batch=1, seq_len=8192, sku=sku)
+        if p:
+            rows.append(Row("Fig11", f"70B {label} ({tdp:.0f}W) latency",
+                            p.ms_per_token, paper_ms, " ms/tok",
+                            f"{n} CUs, tdp={p.tdp_w:.0f}W, "
+                            f"BW/Cap={p.sku.bw_per_cap:.0f}"))
+    return rows

@@ -1,0 +1,81 @@
+"""End-to-end serving driver (the paper's kind: low-latency decode).
+
+Prefill/decode disaggregation on a small model with batched requests:
+  * prefill pass fills the KV caches (compute-bound phase);
+  * the decode loop is ONE jitted lax.scan — no host round-trips (the JAX
+    analogue of the RPU's autonomous execution);
+  * optional speculative decoding (paper Fig 14: draft/target, lossless).
+
+  PYTHONPATH=src python examples/serve_decode.py [--arch h2o-danube-1.8b]
+      [--batch 8] [--new 48] [--speculative]
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced_config
+from repro.models.model import build_model
+from repro.runtime.engine import ServeEngine
+from repro.runtime.speculative import speculative_generate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o-danube-1.8b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new", type=int, default=48)
+    ap.add_argument("--temperature", type=float, default=0.7)
+    ap.add_argument("--speculative", action="store_true")
+    args = ap.parse_args()
+
+    cfg = reduced_config(get_config(args.arch))
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    prompts = jax.random.randint(jax.random.fold_in(key, 1),
+                                 (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+
+    eng = ServeEngine(model, params,
+                      max_len=args.prompt_len + args.new + 1,
+                      temperature=args.temperature)
+    # warm-up compile, then measure steady-state decode
+    eng.generate({"tokens": prompts}, max_new_tokens=2)
+    t0 = time.time()
+    out = eng.generate({"tokens": prompts}, max_new_tokens=args.new)
+    dt = time.time() - t0
+    total = args.batch * args.new
+    print(f"[batched decode] {args.batch} requests x {args.new} tokens in "
+          f"{dt:.2f}s = {total/dt:.0f} tok/s")
+    print("  first request:", out.tokens[0, :16].tolist())
+
+    if args.speculative:
+        # With an agreeing draft (here: the target itself) every window
+        # accepts all gamma tokens; real deployments use a small trained
+        # draft (paper: Llama3-8B drafting for 70B, 4.6/8 accepted).
+        # Untrained random drafts accept ~0 — run one of each to show the
+        # acceptance machinery.
+        stats = speculative_generate(
+            model, params, model, params, prompts[:1],
+            max_new_tokens=args.new, gamma=4, temperature=0.0)
+        print(f"[speculative, ideal draft] {stats.windows} windows, "
+              f"{stats.mean_accepted:.2f}/4 accepted  tokens: "
+              f"{stats.tokens[:8].tolist()}")
+        draft_cfg = dataclasses.replace(cfg, name="draft",
+                                        n_layers=max(2, cfg.n_layers // 2))
+        draft = build_model(draft_cfg)
+        dparams = draft.init(jax.random.fold_in(key, 2))
+        stats = speculative_generate(
+            draft, dparams, model, params, prompts[:1],
+            max_new_tokens=args.new, gamma=4, temperature=0.0)
+        print(f"[speculative, random draft] {stats.windows} windows, "
+              f"{stats.mean_accepted:.2f}/4 accepted (untrained draft: "
+              f"low acceptance expected; output stays lossless)")
+
+
+if __name__ == "__main__":
+    main()

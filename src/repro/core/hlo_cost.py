@@ -1,0 +1,460 @@
+"""Trip-count-aware cost analysis of compiled HLO text.
+
+``compiled.cost_analysis()`` counts every while-loop body ONCE, but all our
+layer stacks (and the blocked-attention / SSD inner loops) are
+``lax.scan``s, so FLOPs/bytes/collective-bytes would be undercounted by the
+trip count (up to ~50x for a 48-layer stack).  This module walks the HLO
+module text recursively:
+
+  * ``while`` ops multiply their body+condition cost by the trip count,
+    recovered from the canonical scan pattern in the condition computation
+    (``compare(iv, constant N), direction=LT``).
+  * ``fusion`` / ``call`` / ``conditional`` descend into the called
+    computations (fusion FLOPs = dots inside the fused computation; fusion
+    bytes = top-level operand + result bytes).
+  * ``dot`` FLOPs = 2 x prod(result dims) x prod(contracting dims).
+  * collective ops are tallied per kind with ring wire-byte estimates, so
+    collectives inside scanned layers are correctly multiplied.
+
+Bytes are the same op-level "operands + result" accounting that XLA's own
+cost model uses (no cache modeling) — the right proxy for the HBM-stream
+roofline term.
+
+The walker is validated in tests/test_hlo_cost.py against fully-unrolled
+lowerings of the same program (exact match for dot flops).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Iterable
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 0.25, "u2": 0.25, "s4": 0.5, "u4": 0.5,
+    "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "f8e4m3b11fnuz": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "f8e8m0fnu": 1,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+# computation header: params may contain nested tuple parens
+_COMP_HDR_RE = re.compile(
+    r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*"
+    r"(?:\((?:[^()]|\((?:[^()]|\([^()]*\))*\))*\))?\s*->.*\{\s*$")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(?P<ty>\((?:[^()]|\([^()]*\))*\)|"
+    r"[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?)\s+(?P<op>[\w\-]+)"
+    r"(?P<rest>\(.*)$")
+_CALLS_RE = re.compile(
+    r"(?:calls|to_apply|body|condition|branch_computations)=\s*"
+    r"(\{[^}]*\}|%?[\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_TRIP_RE = re.compile(r"constant\((\d+)\)")
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(ty: str) -> float:
+    total = 0.0
+    for m in _SHAPE_RE.finditer(ty):
+        size = _DTYPE_BYTES.get(m.group(1))
+        if size is None:
+            continue
+        n = 1
+        dims = m.group(2)
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * size
+    return total
+
+
+def _shape_elems(ty: str) -> int:
+    m = _SHAPE_RE.search(ty)
+    if not m:
+        return 0
+    n = 1
+    if m.group(2):
+        for d in m.group(2).split(","):
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: dict = dataclasses.field(default_factory=dict)
+    coll_wire_bytes: dict = dataclasses.field(default_factory=dict)
+    coll_count: dict = dataclasses.field(default_factory=dict)
+    unknown_trip_loops: int = 0
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] = self.coll_bytes.get(k, 0.0) + v * mult
+        for k, v in other.coll_wire_bytes.items():
+            self.coll_wire_bytes[k] = self.coll_wire_bytes.get(k, 0.0) + v * mult
+        for k, v in other.coll_count.items():
+            self.coll_count[k] = self.coll_count.get(k, 0) + v * mult
+        self.unknown_trip_loops += other.unknown_trip_loops * int(mult > 0)
+
+    @property
+    def total_coll_bytes(self) -> float:
+        return sum(self.coll_bytes.values())
+
+    @property
+    def total_coll_wire_bytes(self) -> float:
+        return sum(self.coll_wire_bytes.values())
+
+
+class HloModule:
+    """Minimal HLO-text parser: computations as lists of op lines.
+
+    ``discount_pure_converts``: XLA:CPU upcasts bf16 weights to f32 via
+    wrapped_convert fusions (CPU has no bf16 GEMM); these copies don't
+    exist on the TPU target, so they are skipped by default — the
+    downstream f32 reads still count (conservative by 2x on weight
+    streams; see EXPERIMENTS.md §Roofline methodology).
+    """
+
+    discount_pure_converts = True
+
+    def __init__(self, text: str):
+        self.comps: dict[str, list[str]] = {}
+        self.entry: str | None = None
+        cur: list[str] | None = None
+        cur_name = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if cur is None:
+                m = _COMP_HDR_RE.match(line)
+                # `= ` guard rejects op lines; strip /*index=N*/ comments
+                # first (they contain '=')
+                head = re.sub(r"/\*[^*]*\*/", "", line.split("->")[0])
+                if m and " = " not in head:
+                    cur_name = m.group(1)
+                    cur = []
+                    if line.lstrip().startswith("ENTRY"):
+                        self.entry = cur_name
+                continue
+            if line.strip() == "}":
+                self.comps[cur_name] = cur
+                cur = None
+                continue
+            cur.append(line)
+        if self.entry is None and self.comps:
+            # fall back: the computation containing the most ops
+            self.entry = max(self.comps, key=lambda k: len(self.comps[k]))
+
+    # ---- helpers ----
+    def _called(self, rest: str) -> list[str]:
+        names: list[str] = []
+        for m in _CALLS_RE.finditer(rest):
+            blob = m.group(1)
+            for n in re.findall(r"%?([\w.\-]+)", blob):
+                if n in self.comps:
+                    names.append(n)
+        return names
+
+    def _trip_count(self, cond_comp: str) -> int | None:
+        """Scan-style loop: condition compares induction var < constant."""
+        lines = self.comps.get(cond_comp, [])
+        consts = []
+        for ln in lines:
+            if "constant(" in ln:
+                m = _TRIP_RE.search(ln)
+                if m:
+                    consts.append(int(m.group(1)))
+        if not consts:
+            return None
+        # the loop bound is the largest integer constant in the condition
+        return max(consts)
+
+    @staticmethod
+    def _operand_names(rest: str) -> list[str]:
+        m = re.match(r"\((?:[^()]|\([^()]*\))*\)", rest)
+        if not m:
+            return []
+        return re.findall(r"%([\w.\-]+)", m.group(0))
+
+    def _operand_bytes(self, rest: str, symtab: dict) -> float:
+        """Sum of operand sizes, resolved through the symbol table."""
+        total = 0.0
+        for name in self._operand_names(rest):
+            ty = symtab.get(name)
+            if ty:
+                total += _shape_bytes(ty)
+        return total
+
+    # ops that touch only a slice of their big operand (XLA's cost model
+    # likewise counts sliced bytes, not the full operand)
+    _SLICING_OPS = ("dynamic-slice", "gather", "slice")
+
+    def _root_dus_update_bytes(self, fused_comp: str) -> float | None:
+        """If the fused computation's root is a dynamic-update-slice (the
+        scan write-back pattern), return the update region's size; the root
+        may be wrapped in bitcast/copy/convert."""
+        lines = self.comps.get(fused_comp, [])
+        symtab: dict[str, str] = {}
+        defs: dict[str, "re.Match"] = {}
+        root = None
+        for ln in lines:
+            m = _OP_RE.match(ln)
+            if m:
+                symtab[m.group(1)] = m.group("ty")
+                defs[m.group(1)] = m
+                if ln.lstrip().startswith("ROOT"):
+                    root = m
+        hops = 0
+        while root is not None and hops < 4 and root.group("op") in (
+                "bitcast", "copy", "convert", "reshape", "transpose"):
+            names = self._operand_names(root.group("rest"))
+            root = defs.get(names[0]) if names else None
+            hops += 1
+        if root is not None and root.group("op") == "dynamic-update-slice":
+            names = self._operand_names(root.group("rest"))
+            if len(names) > 1:
+                upd = symtab.get(names[1], "")
+                if upd:
+                    return _shape_bytes(upd)
+        return None
+
+    def _fusion_result_bytes(self, fused_comp: str, default_ty: str) -> float:
+        """Write bytes of a fusion: if the root is a dynamic-update-slice
+        (scan writing one layer's slice into the stacked output), only the
+        update region is written, not the whole stack."""
+        dus = self._root_dus_update_bytes(fused_comp)
+        return dus if dus is not None else _shape_bytes(default_ty)
+
+    def _is_pure_convert(self, fused_comp: str) -> bool:
+        """kLoop wrapped_convert fusions (dtype-only copies).  XLA:CPU
+        inserts them to upcast bf16 weights for f32 GEMMs; they don't exist
+        on the TPU target, so callers may discount them."""
+        ops = []
+        for ln in self.comps.get(fused_comp, []):
+            m = _OP_RE.match(ln)
+            if m and m.group("op") not in ("parameter",):
+                ops.append(m.group("op"))
+        return all(o in ("convert", "bitcast", "copy") for o in ops) and ops
+
+    def _fusion_param_bytes(self, fused_comp: str, operand_tys: list[str]) -> float:
+        """HBM reads of a fusion: for each parameter, count the full size
+        unless every consumer inside the fused computation is a slicing op,
+        in which case count the slice results (the scan-over-stacked-weights
+        pattern: dynamic-slice of the (L, ...) stack reads one layer)."""
+        lines = self.comps.get(fused_comp, [])
+        # param index -> defined name
+        param_names: dict[int, str] = {}
+        for ln in lines:
+            m = _OP_RE.match(ln)
+            if m and m.group("op") == "parameter":
+                idx_m = re.search(r"parameter\((\d+)\)", ln)
+                if idx_m:
+                    param_names[int(idx_m.group(1))] = m.group(1)
+        # symbol table for update-operand lookups inside the fusion
+        symtab: dict[str, str] = {}
+        op_lines: list = []
+        for ln in lines:
+            m = _OP_RE.match(ln)
+            if m:
+                symtab[m.group(1)] = m.group("ty")
+                op_lines.append(m)
+
+        # see-through ops: XLA:CPU's bf16 legalization wraps tensors in
+        # converts; on the TPU target those don't exist, so usage
+        # classification must look through pure dtype/layout hops.
+        _THROUGH = ("convert", "bitcast", "copy", "reshape")
+
+        def usage(pname, depth=0):
+            """Returns (sliced_bytes, whole: bool) for one value name."""
+            sliced = 0.0
+            whole = False
+            used = False
+            for m in op_lines:
+                names = self._operand_names(m.group("rest") or "")
+                if pname not in names:
+                    continue
+                used = True
+                op = m.group("op")
+                if op in self._SLICING_OPS:
+                    sliced += _shape_bytes(m.group("ty"))
+                elif op == "dynamic-update-slice" and names[0] == pname:
+                    # DUS destination: only the update region is touched
+                    upd = symtab.get(names[1], "") if len(names) > 1 else ""
+                    sliced += _shape_bytes(upd)
+                elif op in _THROUGH and depth < 4:
+                    s2, w2, u2 = usage(m.group(1), depth + 1)
+                    sliced += s2
+                    whole = whole or w2
+                    if w2:
+                        break
+                else:
+                    whole = True
+                    break
+            return sliced, whole, used
+
+        total = 0.0
+        for i, ty in enumerate(operand_tys):
+            pname = param_names.get(i)
+            if pname is None:
+                total += _shape_bytes(ty)
+                continue
+            sliced, whole, used = usage(pname)
+            if not used:
+                continue
+            total += _shape_bytes(ty) if whole else sliced
+        return total
+
+    @staticmethod
+    def _group_size(line: str) -> int:
+        m = _GROUPS_IOTA_RE.search(line)
+        if m:
+            return int(m.group(2))
+        m = _GROUPS_RE.search(line)
+        if m:
+            first = m.group(1).split("},{")[0].strip("{}")
+            if first:
+                return len(first.split(","))
+        return 1
+
+    def _dot_flops(self, ty: str, rest: str, symtab: dict) -> float:
+        """dot FLOPs = 2 x prod(result dims) x prod(lhs contracting dims).
+
+        Operand shapes aren't inline in scheduled HLO — resolve the lhs
+        operand's result type through the computation's symbol table.
+        """
+        out_elems = _shape_elems(ty)
+        contract = 1
+        m = _CONTRACT_RE.search(rest)
+        if m:
+            ops_m = re.match(r"\(\s*%?([\w.\-]+)", rest)
+            lhs_ty = symtab.get(ops_m.group(1), "") if ops_m else ""
+            sm = _SHAPE_RE.search(lhs_ty)
+            if sm and sm.group(2):
+                lhs_dims = [int(d) for d in sm.group(2).split(",") if d]
+                for idx in (int(i) for i in m.group(1).split(",") if i):
+                    if idx < len(lhs_dims):
+                        contract *= lhs_dims[idx]
+        return 2.0 * out_elems * contract
+
+    # ---- recursive walk ----
+    def cost(self, comp: str | None = None,
+             _memo: dict | None = None) -> Cost:
+        if comp is None:
+            comp = self.entry
+        if _memo is None:
+            _memo = {}
+        if comp in _memo:
+            return _memo[comp]
+        total = Cost()
+        _memo[comp] = total          # cycles impossible in HLO, safe
+        lines = self.comps.get(comp, [])
+        # first pass: symbol table (op name -> result type) for operand lookups
+        symtab: dict[str, str] = {}
+        for line in lines:
+            m = _OP_RE.match(line)
+            if m:
+                symtab[m.group(1)] = m.group("ty")
+        for line in lines:
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            op = m.group("op")
+            ty = m.group("ty")
+            rest = m.group("rest")
+            if op == "while":
+                called = self._called(rest)
+                body_m = re.search(r"body=%?([\w.\-]+)", rest)
+                cond_m = re.search(r"condition=%?([\w.\-]+)", rest)
+                body = body_m.group(1) if body_m else (called[0] if called else None)
+                cond = cond_m.group(1) if cond_m else None
+                trip = self._trip_count(cond) if cond else None
+                if trip is None:
+                    trip = 1
+                    total.unknown_trip_loops += 1
+                if body and body in self.comps:
+                    total.add(self.cost(body, _memo), trip)
+                if cond and cond in self.comps:
+                    total.add(self.cost(cond, _memo), trip)
+                continue
+            if op in ("fusion", "call", "conditional", "map", "reduce",
+                      "reduce-window", "sort", "async-start"):
+                callees = self._called(rest)
+                for callee in callees:
+                    sub = self.cost(callee, _memo)
+                    # fused computations: count their dot flops +
+                    # collectives, NOT their internal bytes
+                    contrib = Cost(flops=sub.flops,
+                                   coll_bytes=dict(sub.coll_bytes),
+                                   coll_wire_bytes=dict(sub.coll_wire_bytes),
+                                   coll_count=dict(sub.coll_count))
+                    contrib.unknown_trip_loops = sub.unknown_trip_loops
+                    total.add(contrib)
+                if op == "fusion" and callees:
+                    if (self.discount_pure_converts
+                            and self._is_pure_convert(callees[0])):
+                        continue
+                    operand_tys = [symtab.get(n, "")
+                                   for n in self._operand_names(rest)
+                                   if n in symtab]
+                    total.bytes += (self._fusion_result_bytes(callees[0], ty)
+                                    + self._fusion_param_bytes(callees[0],
+                                                               operand_tys))
+                else:
+                    total.bytes += _shape_bytes(ty) + self._operand_bytes(rest, symtab)
+                continue
+            base_kind = op[:-6] if op.endswith("-start") else op
+            if base_kind in _COLL_KINDS:
+                if op.endswith("-done"):
+                    continue
+                size = _shape_bytes(ty)
+                if op.endswith("-start") and ty.startswith("("):
+                    size /= 2.0     # tuple aliases (operand, result)
+                g = self._group_size(line)
+                k = base_kind
+                total.coll_count[k] = total.coll_count.get(k, 0) + 1
+                total.coll_bytes[k] = total.coll_bytes.get(k, 0.0) + size
+                if k == "all-reduce":
+                    wire = 2.0 * (g - 1) / max(g, 1) * size
+                elif k == "collective-permute":
+                    wire = size
+                else:
+                    wire = (g - 1) / max(g, 1) * size
+                total.coll_wire_bytes[k] = total.coll_wire_bytes.get(k, 0.0) + wire
+                total.bytes += _shape_bytes(ty) + self._operand_bytes(rest, symtab)
+                continue
+            if op == "dot":
+                total.flops += self._dot_flops(ty, rest, symtab)
+            elif op == "convolution":
+                # rare here; approximate as dot over the window
+                total.flops += 2.0 * _shape_elems(ty)
+            elif op in ("parameter", "constant", "get-tuple-element", "tuple",
+                        "bitcast", "after-all", "copy"):
+                continue
+            if op in self._SLICING_OPS:
+                # read the slice, write the slice (+ tiny index operands)
+                total.bytes += 2.0 * _shape_bytes(ty)
+                continue
+            if op in ("dynamic-update-slice", "scatter"):
+                # read+write only the updated region (operand 1 = update)
+                names = self._operand_names(rest)
+                upd = symtab.get(names[1], "") if len(names) > 1 else ""
+                total.bytes += 2.0 * _shape_bytes(upd)
+                if op == "scatter":
+                    for callee in self._called(rest):
+                        total.add(self.cost(callee, _memo))
+                continue
+            # op-level bytes: result + operands (same proxy as XLA cost model)
+            total.bytes += _shape_bytes(ty) + self._operand_bytes(rest, symtab)
+        return total
+
+
+def analyze_hlo_text(text: str) -> Cost:
+    return HloModule(text).cost()

@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the paper's compute hot-spots:
+   mxfp4_vmm        — Stream Decoder + TMAC stripe VMM (paper SSV, Fig 7)
+   decode_attention — KV$-streaming flash-decode GQA (the memory-bound SDPA phase)
+Each has kernel.py (pallas_call + BlockSpec), ops.py (jit'd wrapper), ref.py (jnp oracle)."""

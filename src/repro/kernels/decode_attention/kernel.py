@@ -1,0 +1,109 @@
+"""Flash-decode GQA attention Pallas kernel — the RPU's memory-bound SDPA
+phase (paper §VI Fig 8: "KV$ entries are query-unique ... inherently
+memory-bandwidth-bound").
+
+One new query token per sequence attends over the whole KV cache.  The
+cache is streamed block-wise HBM->VMEM (the Pallas grid pipeline plays the
+role of the RPU's decoupled memory DMA running ahead of compute) with an
+online-softmax accumulator living in VMEM scratch across the sequence walk
+(the analogue of the TMAC accumulation register file).
+
+Grid: (B, KV_HEADS, S / block_s), sequence innermost.  Each step loads a
+(block_s, D) K-tile and V-tile for one kv head and folds them into the
+(rep, D) accumulator, where rep = H / KV_HEADS query heads share the tile
+— exactly the paper's GQA reuse argument (reuse only among GQA heads).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_attn_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                        m_ref, l_ref, acc_ref, *,
+                        block_s: int, n_s_steps: int, scale: float):
+    s_step = pl.program_id(2)
+
+    @pl.when(s_step == 0)
+    def _init():
+        m_ref[...] = jnp.full(m_ref.shape, NEG_INF, jnp.float32)
+        l_ref[...] = jnp.zeros(l_ref.shape, jnp.float32)
+        acc_ref[...] = jnp.zeros(acc_ref.shape, jnp.float32)
+
+    q = q_ref[0, 0].astype(jnp.float32)                 # (rep, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)              # (bs, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)              # (bs, D)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (rep, bs)
+    # mask out positions beyond the valid cache length
+    base = s_step * block_s
+    pos = base + jax.lax.broadcasted_iota(jnp.int32, (1, block_s), 1)
+    valid = pos < len_ref[0, 0]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]                                  # (rep, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(s_step == n_s_steps - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention(
+    q: jnp.ndarray,          # (B, H, D)
+    k_cache: jnp.ndarray,    # (B, S, KVH, D)
+    v_cache: jnp.ndarray,    # (B, S, KVH, D)
+    cur_len: jnp.ndarray,    # (B,) int32 valid cache length per sequence
+    *,
+    block_s: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Single-token GQA decode attention; returns (B, H, D) in q.dtype."""
+    b, h, d = q.shape
+    _, s, kvh, _ = k_cache.shape
+    rep = h // kvh
+    assert h % kvh == 0
+    block_s = min(block_s, s)
+    assert s % block_s == 0, f"S={s} % block_s={block_s} != 0"
+    n_s = s // block_s
+    scale = 1.0 / math.sqrt(d)
+
+    qg = q.reshape(b, kvh, rep, d)
+    lens = cur_len.astype(jnp.int32).reshape(b, 1)
+
+    grid = (b, kvh, n_s)
+    out = pl.pallas_call(
+        functools.partial(_decode_attn_kernel, block_s=block_s,
+                          n_s_steps=n_s, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bb, g, ss: (bb, 0)),             # len
+            pl.BlockSpec((1, 1, rep, d), lambda bb, g, ss: (bb, g, 0, 0)),
+            pl.BlockSpec((1, block_s, 1, d), lambda bb, g, ss: (bb, ss, g, 0)),
+            pl.BlockSpec((1, block_s, 1, d), lambda bb, g, ss: (bb, ss, g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, d), lambda bb, g, ss: (bb, g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, rep, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lens, qg, k_cache, v_cache)
+    return out.reshape(b, h, d)

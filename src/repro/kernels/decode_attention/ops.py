@@ -1,0 +1,23 @@
+"""Public op wrapper for the decode-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def gqa_decode_attention(q, k_cache, v_cache, cur_len, *, block_s: int = 512):
+    """(B,H,D) x (B,S,KVH,D) cache -> (B,H,D); kernel when tiles fit,
+    jnp oracle otherwise (tiny smoke shapes / ragged S)."""
+    s = k_cache.shape[1]
+    bs = min(block_s, s)
+    if s % bs != 0 or q.shape[1] % k_cache.shape[2] != 0:
+        return decode_attention_ref(q, k_cache, v_cache, cur_len)
+    return decode_attention(q, k_cache, v_cache, cur_len, block_s=bs,
+                            interpret=_on_cpu())

@@ -1,0 +1,2 @@
+"""Pure-jnp oracle for flash-decode GQA attention."""
+from repro.models.common import decode_attention_ref  # noqa: F401

@@ -1,0 +1,112 @@
+"""Flash-attention (forward) Pallas TPU kernel — the fix for the dominant
+memory-roofline term of the train/prefill cells (EXPERIMENTS.md §Perf
+"beyond-paper"): pure-XLA blocked attention materializes every
+(q_block, kv_block) score/probability tile to HBM (~70% of qwen3
+train_4k's device traffic); this kernel keeps them in VMEM so the HBM
+stream is exactly q + k + v + o.
+
+Mapping onto the RPU story: this is the same insight as the paper's
+decoupled memory pipeline + on-chip buffer — keep the phase-local
+working set on-chip and stream only the irreducible operands.
+
+Grid: (batch x kv-head groups, q blocks, kv blocks); the kv dimension is
+innermost so the (bq, bk) score tile and the output accumulator stay
+resident while KV streams.  Causal masking skips fully-masked kv blocks
+via ``pl.when``.  fp32 online-softmax state, bf16 streams.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               block_q: int, block_k: int, scale: float, causal: bool,
+               n_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 1)
+
+    run = (not causal) or (ki * block_k <= qi * block_q + block_q - 1)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)                  # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        m_ref[...] = m_new
+        v = v_ref[0].astype(jnp.float32)                  # (bk, dv)
+        acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+
+    @pl.when(ki == n_k - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k", "causal",
+                                             "interpret"))
+def flash_attention(
+    q: jnp.ndarray,      # (BH, Sq, D)  — batch x heads flattened
+    k: jnp.ndarray,      # (BH, Skv, D)
+    v: jnp.ndarray,      # (BH, Skv, Dv)
+    *,
+    block_q: int = 512,
+    block_k: int = 512,
+    causal: bool = True,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fused attention forward; returns (BH, Sq, Dv)."""
+    bh, sq, d = q.shape
+    skv, dv = k.shape[1], v.shape[2]
+    assert k.shape == (bh, skv, d) and v.shape == (bh, skv, dv)
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    assert sq % bq == 0 and skv % bk == 0, "pad sequences to block multiples"
+    n_q, n_k = sq // bq, skv // bk
+    scale = 1.0 / math.sqrt(d)
+
+    grid = (bh, n_q, n_k)
+    return pl.pallas_call(
+        functools.partial(_fa_kernel, block_q=bq, block_k=bk, scale=scale,
+                          causal=causal, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, dv), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dv), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),    # m  (online-softmax max)
+            pltpu.VMEM((bq, 1), jnp.float32),    # l  (normalizer)
+            pltpu.VMEM((bq, dv), jnp.float32),   # acc (output accumulator)
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,39 @@
+"""Public op: GQA-aware fused attention for train/prefill.
+
+Flattens (B, S, H, D) attention onto the kernel's (BH, S, D) layout,
+expanding GQA KV heads.  Dispatches to the Pallas kernel (interpret mode
+on CPU, compiled on TPU); shapes the kernel's tiling can't cover fall
+back to the jnp oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def gqa_flash_attention(q, k, v, *, causal: bool = True,
+                        block_q: int = 512, block_k: int = 512):
+    """q: (B, Sq, H, D); k/v: (B, Skv, KVH, D) -> (B, Sq, H, Dv)."""
+    b, sq, h, d = q.shape
+    skv, kvh, dv = k.shape[1], k.shape[2], v.shape[3]
+    rep = h // kvh
+    kf = jnp.repeat(k, rep, axis=2) if rep > 1 else k
+    vf = jnp.repeat(v, rep, axis=2) if rep > 1 else v
+    qt = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kt = kf.transpose(0, 2, 1, 3).reshape(b * h, skv, d)
+    vt = vf.transpose(0, 2, 1, 3).reshape(b * h, skv, dv)
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    if sq % bq or skv % bk:
+        out = flash_attention_ref(qt, kt, vt, causal=causal)
+    else:
+        out = flash_attention(qt, kt, vt, block_q=bq, block_k=bk,
+                              causal=causal, interpret=_on_cpu())
+    return out.reshape(b, h, sq, dv).transpose(0, 2, 1, 3)

@@ -1,0 +1,3 @@
+from repro.kernels.mxfp4_vmm.kernel import mxfp4_vmm
+from repro.kernels.mxfp4_vmm.ops import mxfp4_matmul
+from repro.kernels.mxfp4_vmm.ref import mxfp4_vmm_ref

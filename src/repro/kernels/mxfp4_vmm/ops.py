@@ -1,0 +1,37 @@
+"""Public op wrapper for the MXFP4 VMM kernel.
+
+``mxfp4_matmul`` is the user-facing op: takes a ``PackedMXFP4`` weight and
+(B, K) activations, dispatches to the Pallas kernel (interpret-mode on CPU,
+compiled on TPU), and falls back to the jnp oracle for shapes the kernel's
+tiling can't cover (tiny smoke configs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.formats import MX_BLOCK, PackedMXFP4
+from repro.kernels.mxfp4_vmm.kernel import mxfp4_vmm
+from repro.kernels.mxfp4_vmm.ref import mxfp4_vmm_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def mxfp4_matmul(x: jnp.ndarray, w: PackedMXFP4, *,
+                 block_n: int = 256, block_k: int = 512,
+                 out_dtype=jnp.bfloat16) -> jnp.ndarray:
+    """x: (..., K) @ dequant(w): (K, N) -> (..., N)."""
+    k, n = w.shape
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, k).astype(jnp.bfloat16)
+    bk = min(block_k, k)
+    bn = min(block_n, n)
+    tileable = (k % bk == 0 and bk % MX_BLOCK == 0 and n % bn == 0)
+    if not tileable:
+        out = mxfp4_vmm_ref(x2, w.codes, w.scales)
+    else:
+        out = mxfp4_vmm(x2, w.codes, w.scales, block_n=bn, block_k=bk,
+                        interpret=_on_cpu())
+    return out.reshape(*lead, n).astype(out_dtype)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the MXFP4 stream-decoded VMM."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.quant.formats import PackedMXFP4, dequantize_mxfp4
+
+
+def mxfp4_vmm_ref(x: jnp.ndarray, codes: jnp.ndarray, scales: jnp.ndarray
+                  ) -> jnp.ndarray:
+    """Dequantize the whole matrix, then a plain fp32-accumulating matmul."""
+    k = x.shape[1]
+    n = codes.shape[1]
+    w = dequantize_mxfp4(PackedMXFP4(codes, scales, (k, n)), jnp.bfloat16)
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)

@@ -1,0 +1,265 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input shape x mesh) cell this lowers + compiles
+the real step function (train_step / prefill / serve_step) against
+ShapeDtypeStruct stand-ins on the production mesh — 16x16 single-pod and
+2x16x16 multi-pod — and records:
+
+  * ``compiled.memory_analysis()``  (bytes/device: proves the cell fits)
+  * ``compiled.cost_analysis()``    (FLOPs / bytes for the roofline terms)
+  * the collective schedule parsed from the compiled HLO
+
+Results land in ``experiments/dryrun/<arch>__<shape>__<mesh>.json`` and are
+summarized into EXPERIMENTS.md §Dry-run / §Roofline by
+``benchmarks/roofline_table.py``.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+  PYTHONPATH=src python -m repro.launch.dryrun --list
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.core import hardware, roofline
+from repro.launch.mesh import make_production_mesh, mesh_chip_count
+from repro.launch import shapes as shp
+from repro.models.footprint import compute_footprint
+from repro.models.model import build_model
+from repro.parallel.hints import sharding_rules
+from repro.parallel.plan import make_plan
+from repro.runtime.engine import serve_step_fn
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import init_train_state, make_train_step, TrainState
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+# bf16 AdamW accumulators above this weight budget (400B-class cells).
+_BF16_OPT_THRESHOLD_PARAMS = 5e10
+
+
+def _model_flops(cfg, fp, shape: shp.ShapeSpec) -> float:
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * fp.active_params * b * s
+    if shape.kind == "prefill":
+        return 2.0 * fp.active_params * b * s
+    return fp.decode_flops_per_token(b, s)
+
+
+def _lower_cell(cfg, shape: shp.ShapeSpec, mesh):
+    """Build (step_fn, args_sds, in_shardings) for one cell."""
+    model = build_model(cfg)
+    plan = make_plan(cfg, mesh, global_batch=shape.global_batch,
+                     shape_kind=shape.kind)
+    fp = compute_footprint(cfg)
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig(
+            state_dtype=("bfloat16" if fp.total_params > _BF16_OPT_THRESHOLD_PARAMS
+                         else "float32"))
+        # shard_map EP crashes XLA:CPU's partitioner under AD (see
+        # models/moe.py); training uses the GSPMD-hinted capacity path.
+        model = build_model(cfg, moe_impl="capacity")
+        step = make_train_step(model, opt_cfg, remat=True)
+        state_sds = jax.eval_shape(
+            lambda: init_train_state(model, jax.random.PRNGKey(0),
+                                     state_dtype=opt_cfg.state_dtype))
+        state_sh = TrainState(
+            params=plan.param_shardings(state_sds.params),
+            opt_state=plan.param_shardings(state_sds.opt_state),
+            err=None)
+        batch_sds = shp.batch_specs(cfg, shape)
+        batch_sh = plan.batch_shardings(batch_sds)
+        return plan, step, (state_sds, batch_sds), (state_sh, batch_sh)
+
+    if shape.kind == "prefill":
+        params_sds = shp.param_specs(model)
+        params_sh = plan.param_shardings(params_sds)
+        batch_sds = shp.batch_specs(cfg, shape)
+        batch_sh = plan.batch_shardings(batch_sds)
+        if not cfg.has_decode:
+            def step(params, batch):
+                return model.forward(params, batch)
+            return plan, step, (params_sds, batch_sds), (params_sh, batch_sh)
+        model_nc = build_model(cfg)
+        cache_sds = jax.eval_shape(
+            lambda: model_nc.init_cache(shape.global_batch, shape.seq_len))
+        cache_sh = plan.cache_shardings(cache_sds)
+
+        def step(params, batch, cache):
+            return model_nc.prefill(params, batch, cache)
+        return plan, step, (params_sds, batch_sds, cache_sds), \
+            (params_sh, batch_sh, cache_sh)
+
+    # decode / long_decode
+    params_sds = shp.param_specs(model)
+    params_sh = plan.param_shardings(params_sds)
+    tokens_sds, cache_sds, pos_sds = shp.decode_specs(cfg, shape, model)
+    tokens_sh = plan.batch_shardings({"t": tokens_sds})["t"]
+    cache_sh = plan.cache_shardings(cache_sds)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    pos_sh = NamedSharding(mesh, P())
+    step = serve_step_fn(model)
+    return plan, step, (params_sds, tokens_sds, cache_sds, pos_sds), \
+        (params_sh, tokens_sh, cache_sh, pos_sh)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: pathlib.Path = OUT_DIR) -> dict:
+    cfg = get_config(arch)
+    shape = shp.SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cell = f"{arch}__{shape_name}__{mesh_name}"
+    ok, reason = shp.cell_supported(cfg, shape)
+    record: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                    "status": "skip", "reason": reason}
+    if not ok:
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh_chip_count(mesh)
+    fp = compute_footprint(cfg)
+
+    t0 = time.time()
+    plan, step, args_sds, in_sh = _lower_cell(cfg, shape, mesh)
+    with mesh, sharding_rules(plan.rules()):
+        lowered = jax.jit(step, in_shardings=in_sh).lower(*args_sds)
+        compiled = lowered.compile()
+    t1 = time.time()
+
+    mem = compiled.memory_analysis()
+    mem_info = {}
+    if mem is not None:
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes"):
+            if hasattr(mem, attr):
+                mem_info[attr] = int(getattr(mem, attr))
+
+    report = roofline.analyze_compiled(
+        compiled, name=cell, chip=hardware.TPU_V5E, n_chips=n_chips,
+        model_flops_total=_model_flops(cfg, fp, shape))
+
+    record.update({
+        "status": "ok",
+        "compile_s": round(t1 - t0, 2),
+        "chips": n_chips,
+        "plan": {"dp": list(plan.dp), "tp": list(plan.tp) if isinstance(plan.tp, tuple) else plan.tp,
+                 "fsdp": list(plan.fsdp), "cache_seq": (list(plan.cache_seq) if isinstance(plan.cache_seq, tuple) else plan.cache_seq),
+                 "seq_parallel": plan.seq_parallel},
+        "memory_analysis": mem_info,
+        "flops_per_device": report.flops_per_device,
+        "bytes_per_device": report.bytes_per_device,
+        "collective_bytes_per_device": report.collective_bytes_per_device,
+        "collective_wire_bytes_per_device": report.collective_wire_bytes_per_device,
+        "collectives": {k: dataclasses.asdict(v)
+                        for k, v in report.collective_detail.items()},
+        "compute_s": report.compute_s,
+        "memory_s": report.memory_s,
+        "collective_s": report.collective_s,
+        "dominant": report.dominant,
+        "bound_s": report.bound_s,
+        "model_flops_total": report.model_flops_total,
+        "useful_flops_ratio": report.useful_flops_ratio,
+    })
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / f"{cell}.json").write_text(json.dumps(record, indent=1))
+    return record
+
+
+def _print_record(r: dict):
+    if r["status"] == "skip":
+        print(f"SKIP {r['arch']} x {r['shape']} [{r['mesh']}]: {r['reason']}")
+        return
+    print(f"OK   {r['arch']} x {r['shape']} [{r['mesh']}] "
+          f"compile={r['compile_s']}s dominant={r['dominant']} "
+          f"comp={r['compute_s']*1e3:.2f}ms mem={r['memory_s']*1e3:.2f}ms "
+          f"coll={r['collective_s']*1e3:.2f}ms "
+          f"useful={r['useful_flops_ratio'] and round(r['useful_flops_ratio'],3)}")
+    if r.get("memory_analysis"):
+        m = r["memory_analysis"]
+        args = m.get("argument_size_in_bytes", 0)
+        tmp = m.get("temp_size_in_bytes", 0)
+        print(f"     memory/device: args={args/2**30:.2f}GiB temp={tmp/2**30:.2f}GiB "
+              f"(v5e HBM 16GiB)")
+
+
+def all_cells(multi_pod_only: bool | None = None):
+    for arch in ASSIGNED_ARCHS:
+        for shape_name in shp.SHAPES:
+            for mp in ((False, True) if multi_pod_only is None else (multi_pod_only,)):
+                yield arch, shape_name, mp
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(shp.SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--subprocess", action="store_true",
+                    help="with --all: isolate each cell in a subprocess")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for arch, shape_name, mp in all_cells():
+            cfg = get_config(arch)
+            ok, reason = shp.cell_supported(cfg, shp.SHAPES[shape_name])
+            mesh = "2x16x16" if mp else "16x16"
+            print(f"{arch:28s} {shape_name:12s} {mesh:8s} "
+                  f"{'RUN' if ok else 'SKIP: ' + reason}")
+        return 0
+
+    if args.all:
+        mp_filter = True if args.multi_pod else (False if args.single_pod else None)
+        failures = []
+        for arch, shape_name, mp in all_cells(mp_filter):
+            if args.subprocess:
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape_name]
+                cmd.append("--multi-pod" if mp else "--single-pod")
+                rc = subprocess.run(cmd, env={**os.environ}).returncode
+                if rc != 0:
+                    failures.append((arch, shape_name, mp))
+            else:
+                try:
+                    _print_record(run_cell(arch, shape_name, mp))
+                except Exception:
+                    traceback.print_exc()
+                    failures.append((arch, shape_name, mp))
+        if failures:
+            print(f"\n{len(failures)} FAILURES:")
+            for f in failures:
+                print("  ", f)
+            return 1
+        print("\nall cells green")
+        return 0
+
+    assert args.arch and args.shape, "--arch and --shape (or --all / --list)"
+    mp = bool(args.multi_pod)
+    try:
+        rec = run_cell(args.arch, args.shape, mp)
+    except Exception:
+        traceback.print_exc()
+        return 1
+    _print_record(rec)
+    return 0 if rec["status"] in ("ok", "skip") else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state; the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import and then calls this.
+
+Mesh layout:
+  single pod : (data=16, model=16)            — 256 chips (one v5e pod)
+  multi-pod  : (pod=2, data=16, model=16)     — 512 chips
+
+The ``model`` axis carries TP/EP/CP (weights, experts, KV$-context); the
+``data`` axis carries DP and the FSDP weight shard; ``pod`` is the slow
+(DCN-ish) axis used for DP + gradient-compressed cross-pod reduction.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_small_mesh(n_devices: int | None = None, model_axis: int | None = None):
+    """A (data, model) mesh over whatever devices exist (tests/examples)."""
+    devs = jax.devices()
+    n = n_devices or len(devs)
+    model = model_axis or 1
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def mesh_chip_count(mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in mesh.axis_names]))

@@ -1,0 +1,87 @@
+"""Assigned input shapes and ShapeDtypeStruct stand-ins per (arch x shape).
+
+The four assigned LM shapes (seq_len x global_batch):
+  train_4k     4,096 x 256    lowers ``train_step``
+  prefill_32k  32,768 x 32    lowers the prefill forward
+  decode_32k   32,768 x 128   lowers ``serve_step`` (1 new token, KV$ of S)
+  long_500k    524,288 x 1    lowers ``serve_step``; sub-quadratic archs only
+
+``input_specs`` returns weak-type-correct ``jax.ShapeDtypeStruct`` trees for
+every model input (params / batch / cache) — shardable, no allocation.
+Frontends are stubs per the assignment: ``[audio]`` provides frame
+embeddings, ``[vlm]`` provides patch embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+from repro.models.model import Model
+
+# image tokens prepended for the VLM frontend stub (InternViT 448px ~ 256
+# patch tokens per tile).
+VLM_IMAGE_TOKENS = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode | long_decode
+    seq_len: int
+    global_batch: int
+
+    @property
+    def step_kind(self) -> str:
+        return {"train": "train", "prefill": "prefill",
+                "decode": "decode", "long_decode": "decode"}[self.kind]
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "long_decode", 524288, 1),
+}
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """Whether this (arch x shape) cell is runnable, with the skip reason."""
+    if shape.kind in ("decode", "long_decode") and not cfg.has_decode:
+        return False, "encoder-only: no decode step"
+    if shape.kind == "long_decode" and not cfg.subquadratic:
+        return False, "pure full-attention arch: 500k decode needs sub-quadratic attention"
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStructs for the data batch of a train/prefill step."""
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.frontend == "audio":
+        return {"features": _sds((b, s, cfg.d_model), jnp.bfloat16),
+                "labels": _sds((b, s), jnp.int32)}
+    batch = {"tokens": _sds((b, s - (VLM_IMAGE_TOKENS if cfg.frontend == "vision" else 0)),
+                            jnp.int32)}
+    if cfg.frontend == "vision":
+        batch["image_embeds"] = _sds((b, VLM_IMAGE_TOKENS, cfg.d_model),
+                                     jnp.bfloat16)
+    return batch
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeSpec, model: Model):
+    """(tokens, cache, cur_pos) ShapeDtypeStructs for a serve_step."""
+    b, s = shape.global_batch, shape.seq_len
+    tokens = _sds((b,), jnp.int32)
+    cache = jax.eval_shape(lambda: model.init_cache(b, s))
+    cur_pos = _sds((), jnp.int32)
+    return tokens, cache, cur_pos
+
+
+def param_specs(model: Model):
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))

@@ -1,0 +1,3 @@
+"""Model zoo: unified config + functional models for all assigned archs."""
+from repro.models.common import ModelConfig, count_params
+from repro.models.model import Model, build_model, build_plan, Segment

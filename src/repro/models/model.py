@@ -1,0 +1,414 @@
+"""Model assembly: config -> executable model (init / forward / prefill /
+decode_step) for all assigned architecture families.
+
+A model is a sequence of **segments**; each segment is a homogeneous run of
+layers executed with ``jax.lax.scan`` over stacked parameters (O(1) HLO in
+depth).  A segment step may contain several block kinds (e.g. Llama4's
+alternating dense/MoE pair), so heterogeneous-period stacks still scan.
+Layers that differ in attention window (Hymba's global/SWA mix) are split
+into separate segments so the window — and hence the KV-cache geometry —
+stays static per segment.
+
+Block kinds:
+  attn_dense   GQA attention + SwiGLU MLP            (qwen*, phi3, danube, hubert, internvl2 backbone)
+  attn_moe     GQA attention + MoE                    (llama4-maverick)
+  mla_dense    MLA attention + SwiGLU MLP             (deepseek first layer)
+  mla_moe      MLA attention + MoE(+shared)           (deepseek)
+  ssm          Mamba2 SSD mixer (no MLP)              (mamba2)
+  hybrid       attention ∥ SSM heads, then MLP        (hymba)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, moe as moe_lib, ssm as ssm_lib
+from repro.models.common import (
+    ModelConfig, count_params, dense_init, embed_init, rmsnorm, split_keys,
+)
+from repro.parallel.hints import shard_hint
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    kinds: tuple[str, ...]
+    reps: int
+    window: int | None = None     # attention window; None = full attention
+
+
+# ---------------------------------------------------------------------------
+# Plan construction
+# ---------------------------------------------------------------------------
+
+
+def build_plan(cfg: ModelConfig) -> list[Segment]:
+    if cfg.family == "ssm":
+        return [Segment(("ssm",), cfg.n_layers)]
+    if cfg.family == "hybrid":
+        # per-layer window: global attention at layers 0, every
+        # ``global_attn_every``, and the last layer; SWA elsewhere.
+        wins = []
+        for i in range(cfg.n_layers):
+            is_global = (cfg.global_attn_every and
+                         (i % cfg.global_attn_every == 0 or i == cfg.n_layers - 1))
+            wins.append(None if is_global else cfg.sliding_window)
+        segs: list[Segment] = []
+        for w in wins:
+            if segs and segs[-1].window == w:
+                segs[-1] = dataclasses.replace(segs[-1], reps=segs[-1].reps + 1)
+            else:
+                segs.append(Segment(("hybrid",), 1, w))
+        return segs
+    w = cfg.sliding_window
+    if cfg.mla:
+        segs = []
+        nd = cfg.first_dense_layers
+        if nd:
+            segs.append(Segment(("mla_dense",), nd, w))
+        segs.append(Segment(("mla_moe",), cfg.n_layers - nd, w))
+        return segs
+    if cfg.moe:
+        if cfg.moe_layer_period == 1:
+            segs = []
+            nd = cfg.first_dense_layers
+            if nd:
+                segs.append(Segment(("attn_dense",), nd, w))
+            segs.append(Segment(("attn_moe",), cfg.n_layers - nd, w))
+            return segs
+        assert cfg.n_layers % cfg.moe_layer_period == 0
+        kinds = tuple(["attn_dense"] * (cfg.moe_layer_period - 1) + ["attn_moe"])
+        return [Segment(kinds, cfg.n_layers // cfg.moe_layer_period, w)]
+    return [Segment(("attn_dense",), cfg.n_layers, w)]
+
+
+# ---------------------------------------------------------------------------
+# Block dispatch
+# ---------------------------------------------------------------------------
+
+
+def _init_block(kind: str, key, cfg: ModelConfig) -> dict:
+    ks = split_keys(key, 4)
+    d = cfg.d_model
+    ln = lambda: jnp.ones((d,), jnp.float32)
+    if kind == "attn_dense":
+        return {"ln1": ln(), "attn": layers.init_attn(ks[0], cfg),
+                "ln2": ln(), "mlp": layers.init_mlp(ks[1], cfg)}
+    if kind == "attn_moe":
+        return {"ln1": ln(), "attn": layers.init_attn(ks[0], cfg),
+                "ln2": ln(), "moe": moe_lib.init_moe(ks[1], cfg)}
+    if kind == "mla_dense":
+        return {"ln1": ln(), "attn": layers.init_mla(ks[0], cfg),
+                "ln2": ln(), "mlp": layers.init_mlp(ks[1], cfg, cfg.d_ff)}
+    if kind == "mla_moe":
+        return {"ln1": ln(), "attn": layers.init_mla(ks[0], cfg),
+                "ln2": ln(), "moe": moe_lib.init_moe(ks[1], cfg)}
+    if kind == "ssm":
+        return {"ln1": ln(), "ssm": ssm_lib.init_ssm(ks[0], cfg)}
+    if kind == "hybrid":
+        return {"ln1": ln(), "attn": layers.init_attn(ks[0], cfg),
+                "ssm": ssm_lib.init_ssm(ks[1], cfg),
+                "attn_out_norm": ln(), "ssm_out_norm": ln(),
+                "ln2": ln(), "mlp": layers.init_mlp(ks[2], cfg)}
+    raise ValueError(kind)
+
+
+def _init_block_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int,
+                      window: int | None):
+    if kind in ("attn_dense", "attn_moe"):
+        return layers.init_attn_cache(cfg, batch, max_len, window)
+    if kind in ("mla_dense", "mla_moe"):
+        return layers.init_mla_cache(cfg, batch, max_len)
+    if kind == "ssm":
+        return ssm_lib.init_ssm_state(cfg, batch)
+    if kind == "hybrid":
+        return {"attn": layers.init_attn_cache(cfg, batch, max_len, window),
+                "ssm": ssm_lib.init_ssm_state(cfg, batch)}
+    raise ValueError(kind)
+
+
+def _ffn(kind: str, p: dict, x, cfg: ModelConfig, moe_impl: str):
+    if kind.endswith("_moe") or kind == "attn_moe":
+        return moe_lib.moe_forward(x, p["moe"], cfg, impl=moe_impl)
+    return layers.mlp_forward(p["mlp"], x)
+
+
+def _block_forward(kind: str, p: dict, x, cfg: ModelConfig, window,
+                   moe_impl: str):
+    if kind == "ssm":
+        out, _ = ssm_lib.ssm_forward(rmsnorm(x, p["ln1"], cfg.norm_eps), p["ssm"], cfg)
+        return x + out
+    if kind == "hybrid":
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        a = layers.attn_forward(p["attn"], h, cfg, window=window)
+        s, _ = ssm_lib.ssm_forward(h, p["ssm"], cfg)
+        mix = 0.5 * (rmsnorm(a, p["attn_out_norm"], cfg.norm_eps)
+                     + rmsnorm(s, p["ssm_out_norm"], cfg.norm_eps))
+        x = x + mix
+        x = x + layers.mlp_forward(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps))
+        return x
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if kind.startswith("mla"):
+        a = layers.mla_forward(p["attn"], h, cfg)
+    else:
+        a = layers.attn_forward(p["attn"], h, cfg, window=window)
+    x = x + a
+    x = x + _ffn(kind, p, rmsnorm(x, p["ln2"], cfg.norm_eps), cfg, moe_impl)
+    return shard_hint(x, "act_bsd")
+
+
+def _block_prefill(kind: str, p: dict, x, cfg: ModelConfig, window, cache,
+                   moe_impl: str):
+    if kind == "ssm":
+        out, st = ssm_lib.ssm_forward(rmsnorm(x, p["ln1"], cfg.norm_eps),
+                                      p["ssm"], cfg, None)
+        return x + out, st
+    if kind == "hybrid":
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        a, ac = layers.attn_prefill(p["attn"], h, cfg, cache["attn"], window=window)
+        s, sc = ssm_lib.ssm_forward(h, p["ssm"], cfg, None)
+        mix = 0.5 * (rmsnorm(a, p["attn_out_norm"], cfg.norm_eps)
+                     + rmsnorm(s, p["ssm_out_norm"], cfg.norm_eps))
+        x = x + mix
+        x = x + layers.mlp_forward(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps))
+        return x, {"attn": ac, "ssm": sc}
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if kind.startswith("mla"):
+        a, c = layers.mla_prefill(p["attn"], h, cfg, cache)
+    else:
+        a, c = layers.attn_prefill(p["attn"], h, cfg, cache, window=window)
+    x = x + a
+    x = x + _ffn(kind, p, rmsnorm(x, p["ln2"], cfg.norm_eps), cfg, moe_impl)
+    return x, c
+
+
+def _block_decode(kind: str, p: dict, x, cfg: ModelConfig, window, cache,
+                  cur_pos, moe_impl: str):
+    """x: (B, D) single-token representations."""
+    if kind == "ssm":
+        out, st = ssm_lib.ssm_decode_step(rmsnorm(x, p["ln1"], cfg.norm_eps),
+                                          p["ssm"], cfg, cache)
+        return x + out, st
+    if kind == "hybrid":
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        a, ac = layers.attn_decode(p["attn"], h, cfg, cache["attn"], cur_pos,
+                                   window=window)
+        s, sc = ssm_lib.ssm_decode_step(h, p["ssm"], cfg, cache["ssm"])
+        mix = 0.5 * (rmsnorm(a, p["attn_out_norm"], cfg.norm_eps)
+                     + rmsnorm(s, p["ssm_out_norm"], cfg.norm_eps))
+        x = x + mix
+        x = x + layers.mlp_forward(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps))
+        return x, {"attn": ac, "ssm": sc}
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if kind.startswith("mla"):
+        a, c = layers.mla_decode(p["attn"], h, cfg, cache, cur_pos)
+    else:
+        a, c = layers.attn_decode(p["attn"], h, cfg, cache, cur_pos, window=window)
+    x = x + a
+    x = x + _ffn(kind, p, rmsnorm(x[:, None, :], p["ln2"], cfg.norm_eps), cfg,
+                 moe_impl)[:, 0]
+    return x, c
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+
+class Model:
+    """Executable model for one ``ModelConfig``.
+
+    Stateless: all state lives in explicit ``params`` / ``cache`` pytrees.
+    """
+
+    def __init__(self, cfg: ModelConfig, moe_impl: str = "auto"):
+        self.cfg = cfg
+        self.plan = build_plan(cfg)
+        self.moe_impl = moe_impl
+        assert sum(len(s.kinds) * s.reps for s in self.plan) == cfg.n_layers
+
+    # ----- init -----
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        keys = split_keys(key, len(self.plan) + 3)
+        stacks = []
+        for seg, k in zip(self.plan, keys[:-3]):
+            kinds_params = []
+            for ki, kind in enumerate(seg.kinds):
+                kk = jax.random.fold_in(k, ki)
+                if seg.reps == 1:
+                    kinds_params.append(_init_block(kind, kk, cfg))
+                else:
+                    kinds_params.append(jax.vmap(
+                        lambda kkk: _init_block(kind, kkk, cfg))(
+                            jax.random.split(kk, seg.reps)))
+            stacks.append(tuple(kinds_params))
+        params: dict[str, Any] = {"stacks": stacks,
+                                  "final_norm": jnp.ones((cfg.d_model,), jnp.float32)}
+        if cfg.frontend == "audio":
+            params["in_proj"] = dense_init(keys[-3], cfg.d_model, cfg.d_model)
+            params["head"] = dense_init(keys[-2], cfg.d_model, cfg.padded_vocab)
+        else:
+            params["embed"] = embed_init(keys[-3], cfg.padded_vocab, cfg.d_model)
+            if not cfg.tie_embeddings:
+                params["head"] = dense_init(keys[-2], cfg.d_model, cfg.padded_vocab)
+        return params
+
+    # ----- shared pieces -----
+    def _embed_inputs(self, params: dict, batch: dict) -> jnp.ndarray:
+        cfg = self.cfg
+        if cfg.frontend == "audio":
+            x = batch["features"].astype(jnp.bfloat16) @ params["in_proj"]
+        elif cfg.frontend == "vision":
+            tok = params["embed"][batch["tokens"]]
+            x = jnp.concatenate([batch["image_embeds"].astype(tok.dtype), tok],
+                                axis=1)
+        else:
+            x = params["embed"][batch["tokens"]]
+        return shard_hint(x, "act_bsd")
+
+    def _head(self, params: dict, x: jnp.ndarray) -> jnp.ndarray:
+        cfg = self.cfg
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        if cfg.tie_embeddings:
+            logits = x @ params["embed"].T
+        else:
+            logits = x @ params["head"]
+        if cfg.padded_vocab != cfg.vocab_size:   # mask pad columns to -inf
+            pad = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+            logits = jnp.where(pad, jnp.asarray(-1e30, logits.dtype), logits)
+        return shard_hint(logits, "logits")
+
+    # ----- forward (training / no-cache prefill) -----
+    def forward(self, params: dict, batch: dict, *, remat: bool = False) -> jnp.ndarray:
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+
+        for si, seg in enumerate(self.plan):
+            stack = params["stacks"][si]
+
+            def seg_step(xc, ps, seg=seg):
+                for kind, p in zip(seg.kinds, ps):
+                    xc = _block_forward(kind, p, xc, cfg, seg.window,
+                                        self.moe_impl)
+                return xc
+
+            if remat:
+                # Save ONLY the scan carry (layer boundary); recompute all
+                # within-layer activations on the backward pass.  At 4k x 256
+                # x 40L saving dot outputs too would need >100 GiB/device.
+                seg_step = jax.checkpoint(seg_step)
+
+            if seg.reps == 1:
+                x = seg_step(x, stack)
+            else:
+                x, _ = jax.lax.scan(lambda c, ps: (seg_step(c, ps), None),
+                                    x, stack)
+        return self._head(params, x)
+
+    # ----- loss -----
+    @staticmethod
+    def _xent(logits: jnp.ndarray, targets: jnp.ndarray) -> jnp.ndarray:
+        """Mean cross-entropy without materializing (B,S,V) log-probs.
+
+        ``logsumexp`` and ``take_along_axis`` reduce the vocab axis in f32
+        on the fly, so the only (B,S,V) buffer is the bf16 logits (which
+        shard over TP via the "logits" rule) — essential for 200k-vocab
+        training cells.
+        """
+        lf = logits.astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(lf, axis=-1)
+        tgt = jnp.take_along_axis(lf, targets[..., None], axis=-1)[..., 0]
+        return jnp.mean(lse - tgt)
+
+    def loss(self, params: dict, batch: dict, *, remat: bool = False) -> jnp.ndarray:
+        cfg = self.cfg
+        logits = self.forward(params, batch, remat=remat)
+        if cfg.frontend == "audio":
+            return self._xent(logits, batch["labels"])
+        tokens = batch["tokens"]
+        if cfg.frontend == "vision":
+            ni = batch["image_embeds"].shape[1]
+            logits = logits[:, ni:, :]
+        return self._xent(logits[:, :-1], tokens[:, 1:])
+
+    # ----- cache -----
+    def init_cache(self, batch: int, max_len: int) -> list:
+        cfg = self.cfg
+        caches = []
+        for seg in self.plan:
+            kinds_caches = []
+            for kind in seg.kinds:
+                single = _init_block_cache(kind, cfg, batch, max_len, seg.window)
+                if seg.reps == 1:
+                    kinds_caches.append(single)
+                else:
+                    kinds_caches.append(jax.tree.map(
+                        lambda a: jnp.tile(a[None], (seg.reps,) + (1,) * a.ndim),
+                        single))
+            caches.append(tuple(kinds_caches))
+        return caches
+
+    # ----- prefill -----
+    def prefill(self, params: dict, batch: dict, cache: list):
+        """Run the full prompt, fill the cache; returns (last_logits, cache)."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        new_caches = []
+        for si, seg in enumerate(self.plan):
+            stack = params["stacks"][si]
+
+            def seg_step(xc, layer, seg=seg):
+                ps, cs = layer
+                new_cs = []
+                for kind, p, c in zip(seg.kinds, ps, cs):
+                    xc, nc = _block_prefill(kind, p, xc, cfg, seg.window, c,
+                                            self.moe_impl)
+                    new_cs.append(nc)
+                return xc, tuple(new_cs)
+
+            if seg.reps == 1:
+                x, nc = seg_step(x, (stack, cache[si]))
+            else:
+                x, nc = jax.lax.scan(seg_step, x, (stack, cache[si]))
+            new_caches.append(nc)
+        logits = self._head(params, x[:, -1:, :])[:, 0]
+        return logits, new_caches
+
+    # ----- decode -----
+    def decode_step(self, params: dict, tokens: jnp.ndarray, cache: list,
+                    cur_pos) -> tuple[jnp.ndarray, list]:
+        """One decode step.  tokens: (B,) int32; cur_pos: scalar position."""
+        cfg = self.cfg
+        assert cfg.frontend != "audio", "encoder-only models have no decode step"
+        x = params["embed"][tokens]
+        x = shard_hint(x, "act_bd")
+        new_caches = []
+        for si, seg in enumerate(self.plan):
+            stack = params["stacks"][si]
+
+            def seg_step(xc, layer, seg=seg):
+                ps, cs = layer
+                new_cs = []
+                for kind, p, c in zip(seg.kinds, ps, cs):
+                    xc, nc = _block_decode(kind, p, xc, cfg, seg.window, c,
+                                           cur_pos, self.moe_impl)
+                    new_cs.append(nc)
+                return xc, tuple(new_cs)
+
+            if seg.reps == 1:
+                x, nc = seg_step(x, (stack, cache[si]))
+            else:
+                x, nc = jax.lax.scan(seg_step, x, (stack, cache[si]))
+            new_caches.append(nc)
+        logits = self._head(params, x[:, None, :])[:, 0]
+        return logits, new_caches
+
+    def param_count(self, params) -> int:
+        return count_params(params)
+
+
+def build_model(cfg: ModelConfig, **kw) -> Model:
+    return Model(cfg, **kw)

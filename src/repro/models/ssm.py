@@ -1,0 +1,219 @@
+"""Mamba2 SSD (state-space duality) layer — chunked prefill + recurrent decode.
+
+Follows the Mamba-2 formulation (arXiv:2405.21060):
+  in_proj -> [z, x, B, C, dt]; depthwise causal conv over [x, B, C];
+  SSD:  h_t = h_{t-1} * exp(dt_t * A) + dt_t * (B_t ⊗ x_t)
+        y_t = C_t · h_t + D * x_t
+  gated RMSNorm(y, z) -> out_proj.
+
+Prefill/training uses the **chunked** algorithm: within chunks of length Q
+the recurrence is expanded into a (Q x Q) lower-triangular attention-like
+form; across chunks the state is carried by a sequential ``lax.scan`` (one
+step per chunk — S/Q steps, tiny matmuls, O(1) HLO).  Decode is the exact
+single-step recurrence over the carried state — this is the attention-free
+fast path that makes the ``long_500k`` shape trivial (constant state).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init, gated_rmsnorm, split_keys
+
+
+def init_ssm(key, cfg: ModelConfig) -> dict:
+    """SSM mixer parameters.
+
+    The input projection is stored as four separate matrices (w_z, w_x,
+    w_bc, w_dt) rather than one fused [z|x|B|C|dt] matrix: the fused
+    layout cannot be column-sharded without slicing across segment
+    boundaries, which is why naive TP replicates SSM blocks (the 16x
+    redundancy the §Perf SSM hillclimb removes).  w_z/w_x column-shard
+    over the model axis (head dim); w_bc/w_dt are small and replicated.
+    """
+    d, di = cfg.d_model, cfg.d_inner
+    h, p, n, g = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    conv_dim = di + 2 * g * n
+    ks = split_keys(key, 6)
+    return {
+        "w_z": dense_init(ks[0], d, di),
+        "w_x": dense_init(ks[1], d, di),
+        "w_bc": dense_init(ks[2], d, 2 * g * n),
+        "w_dt": dense_init(ks[3], d, h),
+        "conv_w": (jax.random.normal(ks[4], (cfg.conv_kernel, conv_dim), jnp.float32)
+                   * 0.1).astype(jnp.bfloat16),
+        "conv_b": jnp.zeros((conv_dim,), jnp.bfloat16),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h).astype(jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm_w": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[5], di, d),
+    }
+
+
+def _in_proj(x: jnp.ndarray, p: dict, cfg: ModelConfig):
+    """Split input projections -> (z, x_in, b, c, dt)."""
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    z = x @ p["w_z"]
+    xin = x @ p["w_x"]
+    bc = x @ p["w_bc"]
+    dt = x @ p["w_dt"]
+    b, c = jnp.split(bc, 2, axis=-1)
+    return z, xin, b, c, dt
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: jnp.ndarray | None = None):
+    """Depthwise causal conv1d.  x: (B, S, C); w: (K, C).
+
+    Returns (out, new_state) where state is the last (K-1) inputs.
+    """
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)          # (B, S+K-1, C)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :] for i in range(k))
+    out = jax.nn.silu((out + b[None, None, :]).astype(jnp.float32)).astype(x.dtype)
+    new_state = xp[:, -(k - 1):] if k > 1 else state
+    return out, new_state
+
+
+def _ssd_chunked(x, b, c, dt, A, cfg: ModelConfig, h0=None):
+    """Chunked SSD scan.
+
+    x : (B, S, H, P)   b,c : (B, S, G, N)   dt : (B, S, H)   A : (H,)
+    Returns (y (B,S,H,P), h_final (B,H,P,N)).
+    """
+    B_, S, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    Q = min(cfg.ssm_chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // Q
+
+    # heads share groups: expand group-wise B/C to heads
+    rep = H // G
+    bh = jnp.repeat(b, rep, axis=2)                    # (B, S, H, N)
+    ch = jnp.repeat(c, rep, axis=2)
+
+    xc = x.reshape(B_, nc, Q, H, P).astype(jnp.float32)
+    bc_ = bh.reshape(B_, nc, Q, H, N).astype(jnp.float32)
+    cc = ch.reshape(B_, nc, Q, H, N).astype(jnp.float32)
+    dtc = dt.reshape(B_, nc, Q, H).astype(jnp.float32)
+
+    dA = dtc * (-A)[None, None, None, :]               # decay exponents <= 0
+    # cumulative within chunk: L[i,j] = exp(sum_{j<k<=i} dA_k), j<=i
+    cum = jnp.cumsum(dA, axis=2)                       # (B, nc, Q, H)
+
+    # intra-chunk ("diagonal block") output:
+    # y_intra[i] = sum_{j<=i} C_i . B_j exp(cum_i - cum_j) dt_j x_j
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]        # (B,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    # mask BEFORE exp: masked entries can have seg >> 0, whose exp is +inf
+    # and poisons the backward pass through jnp.where (NaN x 0 = NaN).
+    seg = jnp.where(tri[None, None, :, :, None], seg, -jnp.inf)
+    decay = jnp.exp(seg)
+    scores = jnp.einsum("bnqhs,bnkhs->bnqkh", cc, bc_)          # (B,nc,Q,Q,H)
+    att = scores * decay
+    xdt = xc * dtc[..., None]                                   # (B,nc,Q,H,P)
+    y_intra = jnp.einsum("bnqkh,bnkhp->bnqhp", att, xdt)
+
+    # chunk-final states: h_chunk = sum_j exp(cum_Q - cum_j) dt_j B_j x_j^T
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)             # (B,nc,Q,H)
+    hc = jnp.einsum("bnqh,bnqhs,bnqhp->bnhps", decay_to_end, bc_, xdt)
+
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                     # (B,nc,H)
+
+    def scan_fn(h, inp):
+        hc_n, cd_n = inp                                        # (B,H,P,N),(B,H)
+        h_out = h                                               # state entering chunk
+        h_next = h * cd_n[..., None, None] + hc_n
+        return h_next, h_out
+
+    h_init = (jnp.zeros((B_, H, P, N), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+    hcs = jnp.moveaxis(hc, 1, 0)                                # (nc,B,H,P,N)
+    cds = jnp.moveaxis(chunk_decay, 1, 0)                       # (nc,B,H)
+    h_final, h_enter = jax.lax.scan(scan_fn, h_init, (hcs, cds))
+    # inter-chunk contribution: y_inter[i] = C_i . (exp(cum_i) h_enter)
+    h_enter = jnp.moveaxis(h_enter, 0, 1)                       # (B,nc,H,P,N)
+    y_inter = jnp.einsum("bnqhs,bnqh,bnhps->bnqhp",
+                         cc, jnp.exp(cum), h_enter)
+
+    y = (y_intra + y_inter).reshape(B_, Sp, H, P)[:, :S]
+    return y, h_final
+
+
+def ssm_forward(x: jnp.ndarray, p: dict, cfg: ModelConfig,
+                state: dict | None = None):
+    """Full SSM mixer over (B, S, D).  Returns (out, new_state)."""
+    B_, S, D = x.shape
+    H, P, N, G = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    z, xin, b, c, dt = _in_proj(x, p, cfg)
+
+    conv_in = jnp.concatenate([xin, b, c], axis=-1)
+    conv_state = None if state is None else state["conv"]
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"], conv_state)
+    xin, b, c = jnp.split(conv_out, [cfg.d_inner, cfg.d_inner + G * N], axis=-1)
+
+    xh = xin.reshape(B_, S, H, P)
+    bg = b.reshape(B_, S, G, N)
+    cg = c.reshape(B_, S, G, N)
+    dt_sp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = jnp.exp(p["A_log"])
+
+    h0 = None if state is None else state["ssm"]
+    y, h_final = _ssd_chunked(xh, bg, cg, dt_sp, A, cfg, h0)
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B_, S, cfg.d_inner).astype(x.dtype)
+
+    out = gated_rmsnorm(y, z, p["norm_w"], cfg.norm_eps) @ p["out_proj"]
+    new_state = {"conv": new_conv, "ssm": h_final}
+    return out, new_state
+
+
+def ssm_decode_step(x: jnp.ndarray, p: dict, cfg: ModelConfig, state: dict):
+    """Single-token recurrent step.  x: (B, D); state carries conv+ssm."""
+    B_, D = x.shape
+    H, P, N, G = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    z, xin, b, c, dt = _in_proj(x, p, cfg)
+
+    conv_in = jnp.concatenate([xin, b, c], axis=-1)               # (B, C)
+    k = p["conv_w"].shape[0]
+    window = jnp.concatenate([state["conv"], conv_in[:, None, :]], axis=1)  # (B,K,C)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    conv_out = jax.nn.silu(conv_out).astype(x.dtype)
+    new_conv = window[:, 1:]
+
+    xin, b, c = jnp.split(conv_out, [cfg.d_inner, cfg.d_inner + G * N], axis=-1)
+    xh = xin.reshape(B_, H, P).astype(jnp.float32)
+    bg = jnp.repeat(b.reshape(B_, G, N), H // G, axis=1).astype(jnp.float32)
+    cg = jnp.repeat(c.reshape(B_, G, N), H // G, axis=1).astype(jnp.float32)
+    dt_sp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, :])  # (B,H)
+    A = jnp.exp(p["A_log"])
+
+    h = state["ssm"]                                              # (B,H,P,N)
+    decay = jnp.exp(-dt_sp * A[None, :])                          # (B,H)
+    h_new = (h * decay[..., None, None]
+             + jnp.einsum("bh,bhn,bhp->bhpn", dt_sp, bg, xh))
+    y = jnp.einsum("bhn,bhpn->bhp", cg, h_new)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(B_, cfg.d_inner).astype(x.dtype)
+
+    out = gated_rmsnorm(y, z, p["norm_w"], cfg.norm_eps) @ p["out_proj"]
+    return out, {"conv": new_conv, "ssm": h_new}
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int) -> dict:
+    H, P, N, G = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    conv_dim = cfg.d_inner + 2 * G * N
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, conv_dim), jnp.bfloat16),
+        "ssm": jnp.zeros((batch, H, P, N), jnp.float32),
+    }

@@ -1,0 +1,11 @@
+"""Distribution layer: sharding plans, RPU-style ring collective matmuls,
+and cross-pod gradient compression."""
+from repro.parallel.hints import shard_hint, sharding_rules
+from repro.parallel.plan import ParallelPlan, make_plan
+from repro.parallel.collective_matmul import (
+    ring_allgather_matmul, ring_matmul_reducescatter, tp_linear_overlapped,
+)
+from repro.parallel.compression import (
+    compressed_mean, tree_compressed_mean, init_error_state,
+    int8_quantize, int8_dequantize,
+)

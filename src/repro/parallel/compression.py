@@ -1,0 +1,66 @@
+"""Gradient compression for cross-pod data parallelism.
+
+At 1000+ node scale the inter-pod (DCN / outer-ring) links are the slow
+tier, exactly like the paper's off-package UCIe vs in-package hops.  We
+keep the *intra-pod* gradient reduction in full bf16/f32 (fast ICI) and
+compress only the *cross-pod* sync: int8 per-tensor quantization with
+error feedback (the residual is carried to the next step, so the scheme
+is unbiased over time and provably converges for smooth objectives).
+
+Wire cost per device: all_gather of int8 shards = (P-1)/P x N bytes vs
+2 x (P-1)/P x 4N bytes for a ring all-reduce in f32 — an ~8x reduction.
+
+Usage: inside ``jax.shard_map(..., axis_names={"pod"})`` with grads
+replicated over the pod axis *after* the intra-pod reduction; see
+``train.train_step.make_train_step(compress_pods=True)``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_quantize(g: jnp.ndarray):
+    """Symmetric per-tensor int8 quantization."""
+    amax = jnp.max(jnp.abs(g))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_mean(g: jnp.ndarray, err: jnp.ndarray, axis_name: str):
+    """Error-feedback compressed mean over ``axis_name``.
+
+    Returns (mean_g, new_err).  Both inputs are the *local* values inside a
+    shard_map manual over ``axis_name``.
+    """
+    p = jax.lax.psum(1, axis_name)
+    target = g.astype(jnp.float32) + err
+    q, scale = int8_quantize(target)
+    sent = int8_dequantize(q, scale)
+    new_err = target - sent
+    # all_gather int8 + local dequant-sum: the wire carries 1 byte/elem.
+    qs = jax.lax.all_gather(q, axis_name)              # (P, ...)
+    ss = jax.lax.all_gather(scale, axis_name)          # (P,)
+    mean = jnp.tensordot(ss, qs.astype(jnp.float32), axes=(0, 0)) / p
+    return mean.astype(g.dtype), new_err
+
+
+def tree_compressed_mean(grads, err_tree, axis_name: str):
+    """Apply ``compressed_mean`` leaf-wise over a gradient pytree."""
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(err_tree)
+    out_g, out_e = [], []
+    for g, e in zip(flat_g, flat_e):
+        mg, ne = compressed_mean(g, e, axis_name)
+        out_g.append(mg)
+        out_e.append(ne)
+    return treedef.unflatten(out_g), treedef.unflatten(out_e)
+
+
+def init_error_state(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)

@@ -1,0 +1,133 @@
+"""Logical sharding hints — decouples model code from mesh layout.
+
+Model layers call ``shard_hint(x, "act_btd")`` at layer boundaries; the
+launcher installs a rules table mapping logical names to
+``PartitionSpec``s for the active mesh (see ``parallel.plan``).  Outside a
+rules context the hints are no-ops, so models stay pure single-device code
+for CPU tests.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Mapping
+
+import jax
+
+_RULES: contextvars.ContextVar[Mapping | None] = contextvars.ContextVar(
+    "shard_rules", default=None)
+
+
+@contextlib.contextmanager
+def sharding_rules(rules: Mapping):
+    """Install logical-name -> PartitionSpec rules for the enclosed trace."""
+    token = _RULES.set(rules)
+    try:
+        yield
+    finally:
+        _RULES.reset(token)
+
+
+def _drop_uneven(sharding, shape):
+    """Drop sharded axes on dims the array size doesn't divide (e.g. 25
+    heads over a 16-way model axis) — the hint then constrains only the
+    dims that partition cleanly."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    if not isinstance(sharding, NamedSharding):
+        return sharding
+    mesh = sharding.mesh
+    spec = sharding.spec
+    new = []
+    changed = False
+    for dim in range(len(shape)):
+        entry = spec[dim] if dim < len(spec) else None
+        if entry is None:
+            new.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        prod = 1
+        for a in axes:
+            prod *= mesh.shape[a]
+        if shape[dim] % prod != 0:
+            new.append(None)
+            changed = True
+        else:
+            new.append(entry)
+    if not changed:
+        return sharding
+    return NamedSharding(mesh, PartitionSpec(*new))
+
+
+_SUSPENDED: contextvars.ContextVar[bool] = contextvars.ContextVar(
+    "shard_hints_suspended", default=False)
+
+
+@contextlib.contextmanager
+def suspend_hints():
+    """Disable shard hints for the enclosed trace — used inside shard_map
+    manual regions, where constraints built from the launcher's (all-Auto)
+    mesh are invalid and break the backward pass."""
+    token = _SUSPENDED.set(True)
+    try:
+        yield
+    finally:
+        _SUSPENDED.reset(token)
+
+
+def _in_manual_region() -> bool:
+    return _SUSPENDED.get()
+
+
+def _rebuild_for_context(sharding):
+    """Rebuild the rule's NamedSharding against the ambient abstract mesh.
+
+    Inside a partial-manual shard_map region the context mesh marks some
+    axes Manual; a constraint built from the launcher's all-Auto Mesh is
+    rejected (including by the backward pass).  Keep only spec axes that
+    are Auto in the ambient mesh and bind the spec to that mesh.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec
+    try:
+        am = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return sharding
+    if am is None or not getattr(am, "axis_names", ()):
+        return sharding
+    if tuple(am.axis_names) != tuple(sharding.mesh.axis_names):
+        return sharding
+    types = dict(zip(am.axis_names, am.axis_types))
+    manual = {a for a, t in types.items() if "Manual" in str(t)}
+    if not manual:
+        return sharding
+    new = []
+    for entry in sharding.spec:
+        if entry is None:
+            new.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        kept = tuple(a for a in axes if a not in manual)
+        new.append(kept if len(kept) > 1 else (kept[0] if kept else None))
+    return NamedSharding(am, PartitionSpec(*new))
+
+
+def shard_hint(x, name: str):
+    """Apply a sharding constraint if a rule for ``name`` is installed."""
+    rules = _RULES.get()
+    if rules is None:
+        return x
+    spec = rules.get(name)
+    if spec is None:
+        return x
+    if _in_manual_region():
+        return x
+    sh = _rebuild_for_context(spec)
+    return jax.lax.with_sharding_constraint(x, _drop_uneven(sh, x.shape))
+
+
+def ep_context():
+    """(mesh, model_axis_name) for expert-parallel shard_map regions, or
+    None outside a sharded launch (single-device tests)."""
+    rules = _RULES.get()
+    if rules is None:
+        return None
+    return rules.get("__ep__")

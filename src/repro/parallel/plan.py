@@ -1,0 +1,279 @@
+"""ParallelPlan: maps model parameters / batches / caches onto the mesh.
+
+The production mesh is ``(pod, data, model)`` (multi-pod) or
+``(data, model)`` (single pod):
+
+  * DP  — batch over ``(pod, data)``
+  * TP  — weight columns/rows + heads over ``model`` (Megatron-style
+          column->row pairing so each block needs one reduction, which is
+          exactly the paper's column-shard + reduce dichotomy in §IV)
+  * EP  — MoE expert axis over ``model``
+  * FSDP — for memory-bound cells (training state, 400B-class weights) the
+          non-TP dimension of every matrix is additionally sharded over the
+          DP axes (ZeRO-3 / GSPMD style); XLA all-gathers per layer inside
+          the scan, overlapped with compute.
+  * SP  — training activations shard their sequence dim over ``model``
+          (Megatron sequence parallelism) so the scan carry fits at 4k x 256.
+  * CP  — decode KV caches shard the sequence dim over ``model`` (the
+          paper's "KV$ sharded across CUs"); batch shards over DP axes.
+  * long-context — when batch=1 (the ``long_500k`` shape) batch sharding
+    is impossible, so the plan widens TP over every mesh axis — the
+    paper's "scale bandwidth by adding CUs to the ring" move.
+
+Assignment is by parameter-tree path pattern, so it covers every block kind
+in the zoo (attention, MLA, MoE, SSM, hybrid) without per-arch tables.
+SSM mixer weights keep TP-unsharded columns in the baseline plan (their
+concatenated projection layout doesn't column-shard cleanly); see
+EXPERIMENTS.md §Perf for the sharded-SSM hillclimb.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig
+
+# parameter name -> (kind) tables ------------------------------------------
+
+_COL_SHARD = {"wq", "wk", "wv", "w_gate", "w_up", "w_uk", "w_uv",
+              "head", "in_proj"}
+_BIAS_COL = {"bq", "bk", "bv"}
+_ROW_SHARD = {"wo", "w_down", "out_proj"}
+_REPLICATE = {"ln1", "ln2", "q_norm", "k_norm", "kv_norm", "final_norm",
+              "router", "w_dkv", "norm_w", "conv_w", "conv_b", "A_log", "D",
+              "dt_bias", "attn_out_norm", "ssm_out_norm"}
+_VOCAB_SHARD = {"embed"}
+
+# Per-device HBM the serve/prefill plans are willing to spend on weights
+# before turning on FSDP weight sharding (v5e has 16 GiB total).
+_WEIGHT_FIT_BYTES = 8 * 2**30
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            out.append(str(k.key))
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            out.append(f"[{k.idx}]")
+        elif isinstance(k, jax.tree_util.GetAttrKey):
+            out.append(k.name)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelPlan:
+    """Sharding plan for one (config x shape) cell."""
+
+    mesh: Mesh
+    dp: tuple[str, ...]            # axes sharding the batch
+    tp: tuple[str, ...] | str      # axes sharding weights/heads
+    fsdp: tuple[str, ...] = ()     # axes sharding the non-TP weight dim
+    cache_seq: tuple[str, ...] | str | None = None   # axes sharding KV$ seq
+    seq_parallel: bool = False     # shard train activations' seq dim over tp
+    ep: bool = True                # advertise shard_map expert parallelism
+                                   # (False for train: EP under AD crashes
+                                   # XLA:CPU's partitioner; see models/moe.py)
+    shard_ssm: bool = True         # shard SSM inner dim (False = replicated
+                                   # baseline for the §Perf before/after)
+
+    # ---------------- parameters ----------------
+    def _param_spec(self, names: list[str], ndim: int, shape) -> P:
+        name = names[-1]
+        in_moe = any(n in ("moe",) for n in names) and "shared" not in names
+        in_ssm = any(n == "ssm" for n in names)
+        fsdp = self.fsdp if self.fsdp else None
+        lead = max(0, ndim - 2)
+
+        if in_moe and name in ("w_gate", "w_up", "w_down"):
+            # experts (L?, E, D, F): shard experts (EP) + FSDP the D dim
+            spec: list = [None] * ndim
+            spec[lead - 1 if lead >= 1 else 0] = self.tp
+            if fsdp:
+                spec[ndim - 2] = fsdp
+            return P(*spec)
+        if in_ssm:
+            # the big projections shard over the model axis (w_z/w_x
+            # columns = the head dim; out_proj rows); the SSD internals
+            # (conv_w, A_log, D, dt_bias, norm_w, w_bc, w_dt) are small
+            # and stay replicated.  ``shard_ssm=False`` reproduces the
+            # fused-projection baseline (fully replicated SSM — the §Perf
+            # hillclimb's "before").
+            if name in ("w_z", "w_x"):
+                return P(*([None] * (ndim - 2)), fsdp,
+                         self.tp if self.shard_ssm else None)
+            if name == "out_proj":
+                return P(*([None] * (ndim - 2)),
+                         self.tp if self.shard_ssm else fsdp,
+                         fsdp if self.shard_ssm else None)
+            if name in ("w_bc", "w_dt") and fsdp:
+                return P(*([None] * (ndim - 2)), fsdp, None)
+            return P()
+        if name in _BIAS_COL:   # per-layer 1-D bias (possibly layer-stacked)
+            return P(*([None] * (ndim - 1)), self.tp)
+        if name in _VOCAB_SHARD:
+            return P(*([None] * (ndim - 2)), self.tp, fsdp)
+        if name in _COL_SHARD:
+            if ndim >= 2:
+                return P(*([None] * (ndim - 2)), fsdp, self.tp)
+            return P(*([None] * (ndim - 1)), self.tp)
+        if name in _ROW_SHARD:
+            return P(*([None] * (ndim - 2)), self.tp, fsdp)
+        return P()
+
+    def param_shardings(self, params) -> Any:
+        from repro.parallel.hints import _drop_uneven
+
+        def assign(path, leaf):
+            names = _path_names(path)
+            sh = NamedSharding(self.mesh,
+                               self._param_spec(names, leaf.ndim, leaf.shape))
+            # in_shardings require even divisibility; drop axes that don't
+            # divide (e.g. 25-head projections on a 16-way model axis).
+            return _drop_uneven(sh, leaf.shape)
+        return jax.tree_util.tree_map_with_path(assign, params)
+
+    # ---------------- batches ----------------
+    def batch_shardings(self, batch: dict) -> dict:
+        def assign(leaf):
+            if leaf.ndim == 0:
+                return NamedSharding(self.mesh, P())
+            if not self.dp:
+                return NamedSharding(self.mesh, P())
+            return NamedSharding(self.mesh,
+                                 P(self.dp, *([None] * (leaf.ndim - 1))))
+        return jax.tree.map(assign, batch)
+
+    # ---------------- caches ----------------
+    def cache_shardings(self, cache) -> Any:
+        """KV caches: shard batch over DP and the sequence dim over
+        ``cache_seq`` (context parallelism — the paper's KV$-across-CUs);
+        SSM states / conv buffers / slot maps stay replicated apart from
+        their batch dim (they are small).
+        """
+        cs = self.cache_seq if self.cache_seq else None
+
+        def assign(path, leaf):
+            names = _path_names(path)
+            name = names[-1]
+            nd = leaf.ndim
+            if name == "slot_pos":
+                return NamedSharding(self.mesh, P())
+            # batch dim position: 0 if unstacked, 1 if layer-stacked.
+            # attn k/v: (B,S,KVH,hd) or (L,B,S,KVH,hd); ssm state (B,H,P,N)
+            # or (L,B,H,P,N); mla c_kv (B,S,r) / (L,B,S,r); conv (B,K,C)/(L,..)
+            if name in ("k", "v", "ssm"):
+                bdim = 1 if nd == 5 else 0
+            else:
+                bdim = 1 if nd == 4 else 0
+            spec: list = [None] * nd
+            if self.dp:
+                spec[bdim] = self.dp
+            # sequence dim (only attn k/v and MLA caches have one)
+            if cs is not None and name in ("k", "v", "c_kv", "k_rope"):
+                sdim = bdim + 1
+                if nd > sdim + (1 if name in ("c_kv", "k_rope") else 2) - 1:
+                    spec[sdim] = cs
+            return NamedSharding(self.mesh, P(*spec))
+        return jax.tree_util.tree_map_with_path(assign, cache)
+
+    def rules(self) -> dict:
+        """Logical activation rules for ``parallel.hints.shard_hint``.
+
+        Returned as NamedShardings so ``shard_hint`` can drop axes on dims
+        that don't divide (25 heads x 16-way TP etc.).
+        """
+        dp = self.dp if self.dp else None
+        sp = self.tp if self.seq_parallel else None
+        specs = {
+            "act_bsd": P(dp, sp, None),
+            "act_bd": P(dp, None),
+            "act_bshd": P(dp, None, self.tp, None),
+            "act_bskd": P(dp, None, None, None),
+            "logits": P(dp, None, self.tp),
+            "logits_bv": P(dp, self.tp),
+            # MoE dispatch intermediates: capacity axis / token streams
+            # shard over DP (the expert axis is handled by the EP
+            # shard_map; 'model' would be invalid inside its manual region)
+            "moe_ecd": P(None, dp, None),
+            "moe_tkd": P(dp, None),
+        }
+        rules = {k: NamedSharding(self.mesh, v) for k, v in specs.items()}
+        # expert-parallel context: MoE layers shard_map over the model axis
+        # (manual EP) when it exists; see models.moe.moe_ep.
+        if self.ep and self.tp == "model" and "model" in self.mesh.axis_names:
+            rules["__ep__"] = (self.mesh, "model")
+        return rules
+
+
+def _as_tuple(x) -> tuple:
+    return x if isinstance(x, tuple) else (x,)
+
+
+def _full_tp_ok(cfg: ModelConfig, mesh: Mesh) -> bool:
+    """Dense archs whose projection widths divide the WHOLE mesh can run
+    decode fully tensor-parallel (MoE/SSM/hybrid keep the DP plan: expert
+    counts / head layouts don't span 256-512 shards)."""
+    if cfg.moe or cfg.ssm or cfg.family in ("ssm", "hybrid") or cfg.mla:
+        return False
+    total = 1
+    for a in mesh.axis_names:
+        total *= mesh.shape[a]
+    dims = (cfg.n_heads * cfg.hd, cfg.n_kv_heads * cfg.hd, cfg.d_ff,
+            cfg.padded_vocab)
+    return all(d % total == 0 for d in dims)
+
+
+def make_plan(cfg: ModelConfig, mesh: Mesh, *, global_batch: int,
+              shape_kind: str,
+              param_bytes: float | None = None) -> ParallelPlan:
+    """Choose the plan for an (arch x shape x mesh) cell.
+
+    ``shape_kind``: train | prefill | decode | long_decode.
+    ``param_bytes``: total bf16 weight bytes (for the FSDP fit decision);
+    computed from the footprint when omitted.
+    """
+    axes = mesh.axis_names
+    dp_axes = tuple(a for a in axes if a in ("pod", "data"))
+    model_size = mesh.shape.get("model", 1)
+    dp_size = 1
+    for a in dp_axes:
+        dp_size *= mesh.shape[a]
+
+    if param_bytes is None:
+        from repro.models.footprint import compute_footprint
+        param_bytes = compute_footprint(cfg).total_params * 2.0
+
+    needs_fsdp = param_bytes / max(model_size, 1) > _WEIGHT_FIT_BYTES
+
+    if shape_kind == "train":
+        # FSDP always on for training: params + AdamW state shard over DP.
+        # ep=False: MoE training uses the GSPMD-hinted capacity path.
+        return ParallelPlan(mesh, dp=dp_axes, tp="model", fsdp=dp_axes,
+                            cache_seq=None, seq_parallel=True, ep=False)
+
+    if shape_kind == "long_decode" or global_batch < dp_size:
+        # batch unshardable: the KV$/state context shards over EVERY mesh
+        # axis (the paper's "scale bandwidth by adding CUs to the ring" —
+        # at 500k tokens the context stream IS the memory roofline term);
+        # weights keep model-axis TP (KV-projection widths of the small
+        # sub-quadratic archs don't divide a 512-way ring).
+        all_axes: tuple[str, ...] = tuple(axes)
+        return ParallelPlan(mesh, dp=(), tp="model", cache_seq=all_axes)
+
+    if shape_kind == "decode" and _full_tp_ok(cfg, mesh):
+        # The paper's Contribution-2 regime for dense decode: weights
+        # column-shard across EVERY chip, so the whole batch shares ONE
+        # weight stream (vs one stream per DP replica — 16x the weight
+        # traffic at dp=16); the KV$ context shards over the same ring
+        # and activations pay small per-layer all-reduces.
+        all_axes = tuple(axes)
+        return ParallelPlan(mesh, dp=(), tp=all_axes, cache_seq=all_axes)
+
+    fsdp = dp_axes if needs_fsdp else ()
+    cache_seq = "model" if shape_kind in ("decode", "prefill") else None
+    return ParallelPlan(mesh, dp=dp_axes, tp="model", fsdp=fsdp,
+                        cache_seq=cache_seq)

@@ -1,0 +1,10 @@
+"""Block-quantized formats for weight streaming (paper §V Stream Decoder)."""
+from repro.quant.formats import (
+    MX_BLOCK, BFP_BLOCK, FP4_LUT, FP4_VALUES, FORMATS,
+    PackedMXFP4, PackedMXFP8, PackedBFP, PackedNXFP4,
+    quantize, dequantize, bits_per_element,
+    quantize_mxfp4, dequantize_mxfp4,
+    quantize_mxfp8, dequantize_mxfp8,
+    quantize_bfp, dequantize_bfp,
+    quantize_nxfp4, dequantize_nxfp4,
+)

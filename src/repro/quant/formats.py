@@ -1,0 +1,296 @@
+"""Block-quantized weight formats for the Stream Decoder (paper §V).
+
+The RPU stores weights compressed in memory and dequantizes on-the-fly in
+the Stream Decoder before feeding the TMACs.  Supported formats (paper:
+"BFP [53], MxFP [15], and NxFP [39], with configurable bitwidths 4-8"):
+
+  * **MXFP4** — OCP Microscaling: 32-element blocks, E8M0 shared scale,
+    E2M1 (fp4) elements.  The serving-path default (paper's deployment:
+    "MXFP4 Weights ... BF16 Activations").
+  * **MXFP8** — 32-element blocks, E8M0 scale, E4M3 elements.
+  * **BFP16** — Microsoft Block Floating Point: 16-element blocks, shared
+    8-bit exponent, 8-bit two's-complement mantissas.
+  * **NXFP4** — Nanoscaling: MXFP4 plus adaptive 1-bit micro-exponent per
+    8-element sub-block (a faithful simplification of [39]).
+
+All functions are pure ``jnp`` (jit-safe) and quantize along the **last**
+axis, which for a ``(K, N)`` weight stored K-major means blocks run along
+the contraction dim — the order the stripe dataflow streams them.
+
+Packing layout for MXFP4/NXFP4 (consumed by ``kernels/mxfp4_vmm``):
+  codes  : uint8[..., K/2, N]   two fp4 codes per byte, low nibble = even k
+  scales : uint8[..., K/32, N]  E8M0 biased exponents (bias 127)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MX_BLOCK = 32
+BFP_BLOCK = 16
+NX_SUB = 8
+
+# E2M1 representable magnitudes; code = sign<<3 | idx
+FP4_VALUES = np.array([0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0], np.float32)
+FP4_LUT = np.concatenate([FP4_VALUES, -FP4_VALUES]).astype(np.float32)
+_FP4_MAX = 6.0
+_E8M0_BIAS = 127
+
+
+def _e8m0_scale_exp(amax: jnp.ndarray, elem_emax: float) -> jnp.ndarray:
+    """Shared-scale exponent: floor(log2(amax)) - elem_emax (OCP MX spec)."""
+    safe = jnp.where(amax > 0, amax, 1.0)
+    e = jnp.floor(jnp.log2(safe)) - elem_emax
+    return jnp.where(amax > 0, e, 0.0)
+
+
+def _quantize_fp4_codes(x_scaled: jnp.ndarray) -> jnp.ndarray:
+    """Round scaled values to nearest E2M1; returns uint8 codes 0..15."""
+    sign = (x_scaled < 0).astype(jnp.uint8)
+    mag = jnp.abs(x_scaled)
+    # nearest-even over the 8 magnitudes via midpoint thresholds
+    grid = jnp.asarray(FP4_VALUES)
+    mids = (grid[1:] + grid[:-1]) / 2.0  # 7 midpoints
+    idx = jnp.sum(mag[..., None] > mids, axis=-1).astype(jnp.uint8)
+    return (sign << 3) | idx
+
+
+# ---------------------------------------------------------------------------
+# MXFP4
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedMXFP4:
+    """MXFP4-packed tensor, blocks along the (second-to-last-after-packing)
+    original last axis.  ``shape`` is the logical unpacked shape."""
+
+    codes: jnp.ndarray    # uint8 [..., K/2, N] (packed pairs along K)
+    scales: jnp.ndarray   # uint8 [..., K/32, N] biased exponents
+    shape: tuple          # logical (…, K, N)
+
+    def tree_flatten(self):
+        return (self.codes, self.scales), self.shape
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux)
+
+    @property
+    def nbytes(self) -> int:
+        return self.codes.size + self.scales.size
+
+    @property
+    def bits_per_element(self) -> float:
+        n = int(np.prod(self.shape))
+        return 8.0 * self.nbytes / n
+
+
+def quantize_mxfp4(w: jnp.ndarray) -> PackedMXFP4:
+    """Quantize ``w`` (..., K, N) to MXFP4 with blocks along K (axis -2)."""
+    *lead, K, N = w.shape
+    assert K % MX_BLOCK == 0, f"K={K} must be a multiple of {MX_BLOCK}"
+    x = w.astype(jnp.float32).reshape(*lead, K // MX_BLOCK, MX_BLOCK, N)
+    amax = jnp.max(jnp.abs(x), axis=-2, keepdims=True)
+    e = _e8m0_scale_exp(amax, 2.0)
+    codes4 = _quantize_fp4_codes(x * jnp.exp2(-e))
+    codes4 = codes4.reshape(*lead, K, N)
+    lo, hi = codes4[..., 0::2, :], codes4[..., 1::2, :]
+    packed = (lo | (hi << 4)).astype(jnp.uint8)
+    scales = (e[..., 0, :] + _E8M0_BIAS).astype(jnp.uint8)
+    return PackedMXFP4(packed, scales, tuple(w.shape))
+
+
+def dequantize_mxfp4(p: PackedMXFP4, dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Reference stream-decoder: unpack to ``dtype`` (pure jnp oracle)."""
+    *lead, K, N = p.shape
+    lut = jnp.asarray(FP4_LUT)
+    lo = (p.codes & 0xF).astype(jnp.int32)
+    hi = (p.codes >> 4).astype(jnp.int32)
+    vals = jnp.stack([lut[lo], lut[hi]], axis=-2)            # [..., K/2, 2, N]
+    vals = vals.reshape(*lead, K, N)
+    e = p.scales.astype(jnp.float32) - _E8M0_BIAS            # [..., K/32, N]
+    scale = jnp.repeat(jnp.exp2(e), MX_BLOCK, axis=-2)
+    return (vals * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# MXFP8 (E4M3 elements)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedMXFP8:
+    codes: jnp.ndarray    # float8_e4m3fn [..., K, N]
+    scales: jnp.ndarray   # uint8 [..., K/32, N]
+    shape: tuple
+
+    def tree_flatten(self):
+        return (self.codes, self.scales), self.shape
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux)
+
+    @property
+    def nbytes(self) -> int:
+        return self.codes.size + self.scales.size
+
+
+def quantize_mxfp8(w: jnp.ndarray) -> PackedMXFP8:
+    *lead, K, N = w.shape
+    assert K % MX_BLOCK == 0
+    x = w.astype(jnp.float32).reshape(*lead, K // MX_BLOCK, MX_BLOCK, N)
+    amax = jnp.max(jnp.abs(x), axis=-2, keepdims=True)
+    e = _e8m0_scale_exp(amax, 8.0)    # E4M3 emax = 8 (448 = 1.75*2^8)
+    # saturate to the E4M3 range before casting (the cast NaNs on overflow)
+    scaled = jnp.clip(x * jnp.exp2(-e), -448.0, 448.0)
+    codes = scaled.astype(jnp.float8_e4m3fn).reshape(*lead, K, N)
+    scales = (e[..., 0, :] + _E8M0_BIAS).astype(jnp.uint8)
+    return PackedMXFP8(codes, scales, tuple(w.shape))
+
+
+def dequantize_mxfp8(p: PackedMXFP8, dtype=jnp.bfloat16) -> jnp.ndarray:
+    *lead, K, N = p.shape
+    e = p.scales.astype(jnp.float32) - _E8M0_BIAS
+    scale = jnp.repeat(jnp.exp2(e), MX_BLOCK, axis=-2)
+    return (p.codes.astype(jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# BFP16 (shared-exponent int8 mantissas)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedBFP:
+    mantissas: jnp.ndarray  # int8 [..., K, N]
+    exponents: jnp.ndarray  # int8 [..., K/16, N] unbiased shared exponents
+    shape: tuple
+
+    def tree_flatten(self):
+        return (self.mantissas, self.exponents), self.shape
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux)
+
+    @property
+    def nbytes(self) -> int:
+        return self.mantissas.size + self.exponents.size
+
+
+def quantize_bfp(w: jnp.ndarray) -> PackedBFP:
+    *lead, K, N = w.shape
+    assert K % BFP_BLOCK == 0
+    x = w.astype(jnp.float32).reshape(*lead, K // BFP_BLOCK, BFP_BLOCK, N)
+    amax = jnp.max(jnp.abs(x), axis=-2, keepdims=True)
+    # mantissa in [-127, 127]: value = m * 2^(e - 7)  with amax -> ~127
+    e = jnp.where(amax > 0, jnp.ceil(jnp.log2(amax / 127.0 + 1e-45)) + 7.0, 0.0)
+    m = jnp.clip(jnp.round(x * jnp.exp2(-(e - 7.0))), -127, 127)
+    mant = m.reshape(*lead, K, N).astype(jnp.int8)
+    exps = e[..., 0, :].astype(jnp.int8)
+    return PackedBFP(mant, exps, tuple(w.shape))
+
+
+def dequantize_bfp(p: PackedBFP, dtype=jnp.bfloat16) -> jnp.ndarray:
+    *lead, K, N = p.shape
+    e = p.exponents.astype(jnp.float32)
+    scale = jnp.repeat(jnp.exp2(e - 7.0), BFP_BLOCK, axis=-2)
+    return (p.mantissas.astype(jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# NXFP4: MXFP4 + per-8-element 1-bit micro-exponent
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedNXFP4:
+    codes: jnp.ndarray     # uint8 [..., K/2, N]
+    scales: jnp.ndarray    # uint8 [..., K/32, N]
+    micro: jnp.ndarray     # uint8 [..., K/8, N] in {0,1}: extra 2^-micro
+    shape: tuple
+
+    def tree_flatten(self):
+        return (self.codes, self.scales, self.micro), self.shape
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], children[2], aux)
+
+    @property
+    def nbytes(self) -> int:
+        return self.codes.size + self.scales.size + self.micro.size
+
+
+def quantize_nxfp4(w: jnp.ndarray) -> PackedNXFP4:
+    *lead, K, N = w.shape
+    assert K % MX_BLOCK == 0
+    x = w.astype(jnp.float32).reshape(*lead, K // MX_BLOCK, MX_BLOCK, N)
+    amax = jnp.max(jnp.abs(x), axis=-2, keepdims=True)
+    e = _e8m0_scale_exp(amax, 2.0)
+    # sub-blocks of 8: if the sub-block max is < half the block max, shift
+    # the local grid down one exponent step (micro-exponent = 1).
+    xs = x.reshape(*lead, K // MX_BLOCK, MX_BLOCK // NX_SUB, NX_SUB, N)
+    sub_amax = jnp.max(jnp.abs(xs), axis=-2, keepdims=True)
+    micro = (sub_amax * 2.0 <= jnp.exp2(e[..., None, :, :]) * _FP4_MAX).astype(jnp.float32)
+    eff_e = e[..., None, :, :] - micro
+    codes4 = _quantize_fp4_codes(xs * jnp.exp2(-eff_e))
+    codes4 = codes4.reshape(*lead, K, N)
+    lo, hi = codes4[..., 0::2, :], codes4[..., 1::2, :]
+    packed = (lo | (hi << 4)).astype(jnp.uint8)
+    scales = (e[..., 0, :] + _E8M0_BIAS).astype(jnp.uint8)
+    micro_u8 = micro[..., 0, :].reshape(*lead, K // NX_SUB, N).astype(jnp.uint8)
+    return PackedNXFP4(packed, scales, micro_u8, tuple(w.shape))
+
+
+def dequantize_nxfp4(p: PackedNXFP4, dtype=jnp.bfloat16) -> jnp.ndarray:
+    *lead, K, N = p.shape
+    lut = jnp.asarray(FP4_LUT)
+    lo = (p.codes & 0xF).astype(jnp.int32)
+    hi = (p.codes >> 4).astype(jnp.int32)
+    vals = jnp.stack([lut[lo], lut[hi]], axis=-2).reshape(*lead, K, N)
+    e = p.scales.astype(jnp.float32) - _E8M0_BIAS
+    scale = jnp.repeat(jnp.exp2(e), MX_BLOCK, axis=-2)
+    micro = jnp.repeat(jnp.exp2(-p.micro.astype(jnp.float32)), NX_SUB, axis=-2)
+    return (vals * scale * micro).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Registry — the software stream decoder
+# ---------------------------------------------------------------------------
+
+FORMATS = {
+    "mxfp4": (quantize_mxfp4, dequantize_mxfp4),
+    "mxfp8": (quantize_mxfp8, dequantize_mxfp8),
+    "bfp": (quantize_bfp, dequantize_bfp),
+    "bfp16": (quantize_bfp, dequantize_bfp),    # alias: 16-elem BFP blocks
+    "nxfp4": (quantize_nxfp4, dequantize_nxfp4),
+}
+
+
+def quantize(w: jnp.ndarray, fmt: str):
+    return FORMATS[fmt][0](w)
+
+
+def dequantize(p, fmt: str, dtype=jnp.bfloat16) -> jnp.ndarray:
+    return FORMATS[fmt][1](p, dtype)
+
+
+def bits_per_element(fmt: str) -> float:
+    """Average storage bits/element including scale overheads."""
+    return {
+        "mxfp4": 4 + 8.0 / MX_BLOCK,
+        "mxfp8": 8 + 8.0 / MX_BLOCK,
+        "bfp": 8 + 8.0 / BFP_BLOCK,
+        "nxfp4": 4 + 8.0 / MX_BLOCK + 8.0 / NX_SUB / 8,
+    }[fmt]

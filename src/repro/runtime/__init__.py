@@ -1,0 +1,4 @@
+"""Serving runtime: engine, sampling, speculative decoding."""
+from repro.runtime.engine import ServeEngine, serve_step_fn, prefill_step_fn
+from repro.runtime.sampling import greedy, sample, probs
+from repro.runtime.speculative import speculative_generate, SpecStats, make_speculative_window

@@ -1,0 +1,107 @@
+"""Serving engine: prefill/decode disaggregation + autonomous decode loop.
+
+Mirrors the paper's deployment model (§VI "Deployment"): prefill and decode
+are separate entry points (Splitwise/Dynamo-style phase splitting, the
+paper's prerequisite architecture), and the decode loop runs as ONE jitted
+``lax.scan`` over steps — no host round-trip per token, the JAX analogue of
+the RPU's host-free autonomous execution ("eliminating the host-driven
+offload model used by GPUs").
+
+The engine is mesh-agnostic: pass shardings built by ``parallel.plan`` to
+run the same code distributed; CPU tests run it single-device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.runtime import sampling
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: jnp.ndarray          # (B, n_new) int32
+    logprobs: jnp.ndarray | None
+    steps: int
+
+
+class ServeEngine:
+    """Batched request serving for one model."""
+
+    def __init__(self, model: Model, params: Any, *, max_len: int,
+                 temperature: float = 0.0, top_k: int = 0,
+                 donate_cache: bool = True):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self.temperature = temperature
+        self.top_k = top_k
+        self._decode_loop = jax.jit(
+            self._decode_loop_impl,
+            static_argnames=("n_steps",),
+            donate_argnums=(1,) if donate_cache else (),
+        )
+        self._prefill = jax.jit(self.model.prefill)
+
+    # -- phase 1: prefill ---------------------------------------------------
+    def prefill(self, batch: dict):
+        """Run the prompt; returns (first_token_logits, cache, prompt_len)."""
+        b = (batch["features"] if "features" in batch else batch["tokens"]).shape[0]
+        cache = self.model.init_cache(b, self.max_len)
+        logits, cache = self._prefill(self.params, batch, cache)
+        plen = batch["tokens"].shape[1]
+        if "image_embeds" in batch:
+            plen += batch["image_embeds"].shape[1]
+        return logits, cache, plen
+
+    # -- phase 2: autonomous decode loop -------------------------------------
+    def _decode_loop_impl(self, first_tokens, cache, start_pos, key, *,
+                          n_steps: int):
+        def step(carry, _):
+            tokens, cache, pos, key = carry
+            logits, cache = self.model.decode_step(self.params, tokens, cache, pos)
+            key, sub = jax.random.split(key)
+            nxt = sampling.sample(sub, logits, self.temperature, self.top_k)
+            return (nxt, cache, pos + 1, key), nxt
+
+        (_, cache, _, _), toks = jax.lax.scan(
+            step, (first_tokens, cache, start_pos, key), length=n_steps)
+        return jnp.moveaxis(toks, 0, 1), cache     # (B, n_steps)
+
+    def generate(self, batch: dict, *, max_new_tokens: int,
+                 key=None) -> GenerationResult:
+        """prefill + decode max_new_tokens; returns all generated tokens."""
+        key = key if key is not None else jax.random.PRNGKey(0)
+        logits, cache, plen = self.prefill(batch)
+        key, sub = jax.random.split(key)
+        first = sampling.sample(sub, logits, self.temperature, self.top_k)
+        toks, cache = self._decode_loop(
+            first, cache, jnp.int32(plen), key, n_steps=max_new_tokens - 1)
+        all_toks = jnp.concatenate([first[:, None], toks], axis=1)
+        return GenerationResult(tokens=all_toks, logprobs=None,
+                                steps=max_new_tokens)
+
+
+def serve_step_fn(model: Model):
+    """The bare decode step (one token, KV cache) — the function the
+    dry-run lowers for ``decode_*`` / ``long_*`` shapes."""
+
+    def serve_step(params, tokens, cache, cur_pos):
+        logits, new_cache = model.decode_step(params, tokens, cache, cur_pos)
+        return sampling.greedy(logits), new_cache
+
+    return serve_step
+
+
+def prefill_step_fn(model: Model):
+    """Forward over the full prompt — lowered for ``prefill_*`` shapes."""
+
+    def prefill_step(params, batch):
+        return model.forward(params, batch)
+
+    return prefill_step

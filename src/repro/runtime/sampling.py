@@ -1,0 +1,26 @@
+"""Token sampling for the serve path (fp32 HP-VOPs analogue)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits: jnp.ndarray) -> jnp.ndarray:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample(key, logits: jnp.ndarray, temperature: float = 1.0,
+           top_k: int = 0) -> jnp.ndarray:
+    """Temperature / top-k sampling.  logits: (..., V) -> (...) int32."""
+    if temperature <= 0.0:
+        return greedy(logits)
+    lg = logits.astype(jnp.float32) / temperature
+    if top_k:
+        kth = jnp.sort(lg, axis=-1)[..., -top_k][..., None]
+        lg = jnp.where(lg < kth, -jnp.inf, lg)
+    return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
+
+
+def probs(logits: jnp.ndarray, temperature: float = 1.0) -> jnp.ndarray:
+    return jax.nn.softmax(logits.astype(jnp.float32) / max(temperature, 1e-6),
+                          axis=-1)

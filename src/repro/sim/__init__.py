@@ -1,0 +1,11 @@
+"""RPU simulation framework (paper contribution C4).
+
+  isa       — CISC-style phase/program representation
+  compiler  — ModelConfig -> per-CU decode-step programs (paper §VI)
+  engine    — event-driven decoupled-pipeline simulator (paper Fig 8)
+  gpu_model — H100/H200 analytical baseline calibrated to §II measurements
+  scaling   — strong scaling, ISO-TDP, energy & cost studies (Figs 11-13)
+"""
+from repro.sim.isa import Phase, LayerProgram, Program
+from repro.sim.compiler import CompileOptions, compile_decode_step
+from repro.sim.engine import SimResult, simulate_program

@@ -1,0 +1,7 @@
+"""Training substrate: optimizer, train step (w/ remat + cross-pod
+compression), atomic sharded checkpointing, fault-tolerant loop."""
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state, lr_schedule
+from repro.train.train_step import TrainState, init_train_state, make_train_step
+from repro.train.checkpoint import (
+    save_checkpoint, restore_checkpoint, restore_latest, list_checkpoints)
+from repro.train.loop import LoopConfig, LoopResult, run_training

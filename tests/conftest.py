@@ -1,0 +1,26 @@
+"""Shared fixtures.  NOTE: no XLA device-count flag here — smoke tests and
+benches must see the real (single) CPU device; only launch/dryrun.py forces
+512 host devices, in its own process."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config, reduced_config
+from repro.models.model import build_model
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, key, b=2, s=32):
+    if cfg.frontend == "audio":
+        return {"features": jax.random.normal(key, (b, s, cfg.d_model),
+                                              jnp.bfloat16),
+                "labels": jax.random.randint(key, (b, s), 0, cfg.vocab_size)}
+    batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size)}
+    if cfg.frontend == "vision":
+        batch["image_embeds"] = jax.random.normal(
+            jax.random.fold_in(key, 7), (b, 8, cfg.d_model), jnp.bfloat16)
+    return batch

@@ -1,0 +1,74 @@
+"""HBM-CO analytical model vs the paper's §III numbers."""
+import pytest
+
+from repro.core.hbmco import (CANDIDATE_CO, HBM3E_LIKE, enumerate_design_space,
+                              pareto_frontier, select_sku)
+
+
+def test_hbm3e_calibration():
+    """Paper: 'We validate our HBM-CO model against HBM3e reported
+    3.44 pJ/bit'; 48GB, 1024 GB/s-class stack."""
+    assert HBM3E_LIKE.energy_pj_per_bit == pytest.approx(3.44, rel=0.02)
+    assert HBM3E_LIKE.capacity_gb == pytest.approx(48, rel=0.01)
+    assert HBM3E_LIKE.bandwidth_gbs == pytest.approx(1024, rel=0.01)
+
+
+def test_candidate_pareto_point():
+    """Paper: candidate = 768MB, 256GB/s, BW/Cap=341, ~1.45pJ/b."""
+    assert CANDIDATE_CO.capacity_mb == pytest.approx(768, rel=0.01)
+    assert CANDIDATE_CO.bandwidth_gbs == pytest.approx(256, rel=0.01)
+    assert CANDIDATE_CO.bw_per_cap == pytest.approx(341, rel=0.02)
+    assert CANDIDATE_CO.energy_pj_per_bit == pytest.approx(1.45, rel=0.05)
+
+
+def test_candidate_tradeoffs_vs_hbm3e():
+    """Paper §III takeaways: 2.4x energy, ~1.8x cost/GB, 35x module cost,
+    >=5x bandwidth per dollar; 2.9ms ideal token latency."""
+    e_ratio = HBM3E_LIKE.energy_pj_per_bit / CANDIDATE_CO.energy_pj_per_bit
+    assert e_ratio == pytest.approx(2.4, rel=0.05)
+    assert (CANDIDATE_CO.cost_per_gb / HBM3E_LIKE.cost_per_gb
+            == pytest.approx(1.81, rel=0.05))
+    assert (HBM3E_LIKE.module_cost / CANDIDATE_CO.module_cost
+            == pytest.approx(35, rel=0.10))
+    assert CANDIDATE_CO.bandwidth_per_cost / HBM3E_LIKE.bandwidth_per_cost >= 5.0
+    assert CANDIDATE_CO.ideal_token_latency_s == pytest.approx(2.9e-3, rel=0.05)
+
+
+def test_same_shoreline_bandwidth():
+    """HBM-CO 'retains shoreline bandwidth': GB/s per mm equal."""
+    r1 = HBM3E_LIKE.bandwidth_gbs / HBM3E_LIKE.shoreline_mm
+    r2 = CANDIDATE_CO.bandwidth_gbs / CANDIDATE_CO.shoreline_mm
+    assert r1 == pytest.approx(r2, rel=1e-6)
+
+
+def test_bandwidth_independent_of_capacity_knobs():
+    """Paper key insight: ranks / banks-per-group / bank size change
+    capacity but not bandwidth."""
+    from repro.core.hbmco import HBMCOConfig
+    base = HBMCOConfig(ranks=1, banks_per_group=1, bank_mb=6.0)
+    for ranks in (1, 2, 4):
+        for banks in (1, 2, 4):
+            for mb in (1.5, 6.0, 24.0):
+                c = HBMCOConfig(ranks=ranks, banks_per_group=banks, bank_mb=mb)
+                assert c.bandwidth_gbs == base.bandwidth_gbs
+                if (ranks, banks, mb) > (1, 1, 6.0):
+                    assert c.capacity_mb > base.capacity_mb or mb < 6.0
+
+
+def test_pareto_frontier_monotone():
+    f = pareto_frontier(enumerate_design_space())
+    assert len(f) >= 4
+    caps = [c.capacity_mb for c in f]
+    es = [c.energy_pj_per_bit for c in f]
+    assert caps == sorted(caps)
+    assert es == sorted(es)          # more capacity => more energy/bit
+
+
+def test_sku_selection_rule():
+    """Fig 9/10 rule: smallest frontier capacity that fits."""
+    f = pareto_frontier(enumerate_design_space())
+    sku = select_sku(100e6, f)
+    assert sku is not None and sku.capacity_bytes >= 100e6
+    smaller = [c for c in f if c.capacity_bytes < sku.capacity_bytes]
+    assert all(c.capacity_bytes < 100e6 for c in smaller)
+    assert select_sku(1e15, f) is None

@@ -1,0 +1,134 @@
+"""Trip-count-aware HLO cost walker: exactness vs fully-unrolled lowerings."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hlo_cost import HloModule, analyze_hlo_text
+
+
+def _walk(fn, *args):
+    c = jax.jit(fn).lower(*args).compile()
+    return analyze_hlo_text(c.as_text())
+
+
+def test_scan_flops_match_unrolled_exactly():
+    def body(x, w):
+        return x @ w, None
+
+    def scanned(x, ws):
+        return jax.lax.scan(body, x, ws)[0]
+
+    def unrolled(x, ws):
+        return jax.lax.scan(body, x, ws, unroll=True)[0]
+
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((12, 128, 128), jnp.float32)
+    cs = _walk(scanned, x, ws)
+    cu = _walk(unrolled, x, ws)
+    expect = 2 * 64 * 128 * 128 * 12
+    assert cs.flops == pytest.approx(expect, rel=1e-6)
+    assert cu.flops == pytest.approx(expect, rel=1e-6)
+    assert cs.unknown_trip_loops == 0
+    # bytes agree within fusion-boundary noise
+    assert cs.bytes == pytest.approx(cu.bytes, rel=0.35)
+
+
+def test_nested_scan_trip_multiplication():
+    def f(x, ws):
+        def outer(c, w):
+            def inner(ci, _):
+                return ci @ w, None
+            return jax.lax.scan(inner, c, None, length=5)[0], None
+        return jax.lax.scan(outer, x, ws)[0]
+
+    x = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((7, 64, 64), jnp.float32)
+    cost = _walk(f, x, ws)
+    assert cost.flops == pytest.approx(2 * 32 * 64 * 64 * 35, rel=1e-6)
+
+
+def test_xla_cost_analysis_undercounts_scans():
+    """Document WHY the walker exists: XLA counts loop bodies once."""
+    def body(x, w):
+        return x @ w, None
+
+    def scanned(x, ws):
+        return jax.lax.scan(body, x, ws)[0]
+
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((12, 128, 128), jnp.float32)
+    c = jax.jit(scanned).lower(x, ws).compile()
+    ca = c.cost_analysis()
+    ca = ca[0] if isinstance(ca, list) else ca
+    assert float(ca.get("flops", 0)) < 2 * 64 * 128 * 128 * 12 * 0.5
+
+
+def test_scan_weight_slices_not_overcounted():
+    """Bytes: scanning over stacked weights must stream each layer ONCE,
+    not (the full stack x trip count)."""
+    L, K, N = 16, 64, 64
+
+    def f(x, ws):
+        return jax.lax.scan(lambda c, w: (jnp.tanh(c @ w), None), x, ws)[0]
+
+    x = jax.ShapeDtypeStruct((8, K), jnp.float32)
+    ws = jax.ShapeDtypeStruct((L, K, N), jnp.float32)
+    cost = _walk(f, x, ws)
+    stack_bytes = L * K * N * 4
+    # each layer's slice is streamed a handful of times (slice r/w + dot
+    # read, the op-level no-fusion accounting XLA's cost model also uses)
+    # — crucially FAR below the L x blowup of counting the whole stack
+    # per iteration (16x here).
+    assert cost.bytes < stack_bytes * 6
+    assert cost.bytes > stack_bytes * 0.9
+
+
+def test_dot_general_batch_dims():
+    def f(a, b):
+        return jnp.einsum("bij,bjk->bik", a, b)
+
+    a = jax.ShapeDtypeStruct((4, 32, 48), jnp.float32)
+    b = jax.ShapeDtypeStruct((4, 48, 16), jnp.float32)
+    cost = _walk(f, a, b)
+    assert cost.flops == pytest.approx(2 * 4 * 32 * 48 * 16, rel=1e-6)
+
+
+def test_collectives_inside_scan_are_multiplied():
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >1 device")
+    from jax.sharding import PartitionSpec as P
+    n = len(jax.devices())
+    mesh = jax.make_mesh((n,), ("x",))
+
+    def f(xs):
+        def step(c, x):
+            return c + jax.lax.psum(x, "x"), None
+        return jax.lax.scan(step, jnp.zeros_like(xs[0]), xs)[0]
+
+    g = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P(None, "x"),
+                              out_specs=P("x")))
+    xs = jax.ShapeDtypeStruct((10, 8 * n), jnp.float32)
+    cost = analyze_hlo_text(g.lower(xs).compile().as_text())
+    ar = cost.coll_count.get("all-reduce", 0)
+    assert ar >= 10        # one per scan step, trip-multiplied
+
+
+def test_parser_handles_tuple_headers():
+    text = """
+HloModule test
+
+%cond (p: (s32[], f32[4])) -> pred[] {
+  %p = (s32[], f32[4]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(9)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (a: f32[4]) -> f32[4] {
+  ROOT %a = f32[4] parameter(0)
+}
+"""
+    mod = HloModule(text)
+    assert "cond" in mod.comps
+    assert mod._trip_count("cond") == 9

@@ -1,0 +1,190 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret=True executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention.kernel import decode_attention
+from repro.kernels.decode_attention.ops import gqa_decode_attention
+from repro.kernels.mxfp4_vmm.kernel import mxfp4_vmm
+from repro.kernels.mxfp4_vmm.ops import mxfp4_matmul
+from repro.kernels.mxfp4_vmm.ref import mxfp4_vmm_ref
+from repro.models.common import decode_attention_ref
+from repro.quant import formats
+
+
+def _rel_err(a, b):
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    return np.max(np.abs(a - b)) / (np.max(np.abs(b)) + 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# MXFP4 VMM (Stream Decoder + TMAC stripe dataflow)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,k,n,bk,bn", [
+    (1, 128, 256, 64, 128),        # single-token VMM (the paper's case)
+    (4, 512, 512, 512, 256),
+    (8, 1024, 384, 256, 128),
+    (16, 256, 1024, 128, 512),
+    (3, 160, 128, 32, 64),         # odd batch, minimal K tile
+])
+def test_mxfp4_vmm_shapes(b, k, n, bk, bn):
+    key = jax.random.PRNGKey(b * 1000 + k + n)
+    x = jax.random.normal(key, (b, k), jnp.bfloat16)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, n), jnp.float32)
+    qw = formats.quantize_mxfp4(w)
+    out = mxfp4_vmm(x, qw.codes, qw.scales, block_n=bn, block_k=bk,
+                    interpret=True)
+    ref = mxfp4_vmm_ref(x, qw.codes, qw.scales)
+    assert _rel_err(out, ref) < 0.02    # bf16 tile rounding only
+
+
+def test_mxfp4_matmul_wrapper_fallback():
+    """Non-tileable shapes fall back to the oracle transparently."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2, 96), jnp.bfloat16)   # 96 % 64 != 0 tiles
+    w = jax.random.normal(key, (96, 100), jnp.float32)
+    qw = formats.quantize_mxfp4(w)
+    out = mxfp4_matmul(x, qw)
+    ref = mxfp4_vmm_ref(x, qw.codes, qw.scales)
+    assert _rel_err(out, ref.astype(out.dtype)) < 0.02
+
+
+def test_mxfp4_vmm_matches_float_matmul_loosely():
+    """End-to-end quantization error vs the unquantized matmul is bounded
+    (MXFP4 ~ 4.25 b/elem: expect a few percent on gaussian data)."""
+    key = jax.random.PRNGKey(7)
+    x = jax.random.normal(key, (4, 1024), jnp.bfloat16)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (1024, 256), jnp.float32)
+    qw = formats.quantize_mxfp4(w)
+    out = mxfp4_vmm(x, qw.codes, qw.scales, interpret=True)
+    exact = x.astype(jnp.float32) @ w
+    assert _rel_err(out, exact) < 0.2
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (KV$-streaming flash-decode)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,h,kvh,d,s,block_s", [
+    (1, 8, 8, 64, 256, 128),       # MHA
+    (2, 8, 2, 64, 512, 256),       # GQA 4:1
+    (4, 16, 2, 128, 384, 128),     # GQA 8:1, odd block count
+    (2, 32, 8, 128, 1024, 512),    # llama-like
+])
+def test_decode_attention_shapes(b, h, kvh, d, s, block_s):
+    key = jax.random.PRNGKey(b + h + s)
+    q = jax.random.normal(key, (b, h, d), jnp.bfloat16)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, kvh, d),
+                          jnp.bfloat16)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kvh, d),
+                          jnp.bfloat16)
+    cur = jnp.asarray([(s * (i + 1)) // (b + 1) + 1 for i in range(b)],
+                      jnp.int32)
+    out = gqa_decode_attention(q, k, v, cur, block_s=block_s)
+    ref = decode_attention_ref(q, k, v, cur)
+    assert _rel_err(out, ref) < 0.02
+
+
+def test_decode_attention_ignores_invalid_tail():
+    """Garbage beyond cur_len must not leak into the output."""
+    key = jax.random.PRNGKey(3)
+    b, h, kvh, d, s = 2, 4, 2, 64, 256
+    q = jax.random.normal(key, (b, h, d), jnp.bfloat16)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, kvh, d), jnp.bfloat16)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kvh, d), jnp.bfloat16)
+    cur = jnp.asarray([64, 128], jnp.int32)
+    out1 = gqa_decode_attention(q, k, v, cur)
+    k2 = k.at[:, 200:].set(1e4)
+    v2 = v.at[:, 200:].set(-1e4)
+    out2 = gqa_decode_attention(q, k2, v2, cur)
+    np.testing.assert_allclose(np.asarray(out1, np.float32),
+                               np.asarray(out2, np.float32), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Quantization formats (Stream Decoder input formats)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fmt,tol", [
+    # worst-case relative step near block amax: E2M1 ~ 1/4; E4M3 with a
+    # floor()ed shared E8M0 scale ~ 2^-3 (x2 scale slack); BFP16 8-bit
+    # mantissa ~ 2^-7 (x2 slack).
+    ("mxfp4", 0.3), ("nxfp4", 0.3), ("mxfp8", 0.15), ("bfp16", 0.02),
+])
+def test_format_roundtrip_error(fmt, tol):
+    key = jax.random.PRNGKey(11)
+    w = jax.random.normal(key, (256, 128), jnp.float32)
+    p = formats.quantize(w, fmt)
+    wd = formats.dequantize(p, fmt, jnp.float32)
+    err = np.abs(np.asarray(wd) - np.asarray(w))
+    # per-block relative error bounded by the format's quantile step
+    rel = np.max(err) / np.max(np.abs(np.asarray(w)))
+    assert rel < tol, rel
+
+
+def test_mxfp4_packing_layout():
+    w = jnp.arange(64 * 4, dtype=jnp.float32).reshape(64, 4) / 64.0
+    p = formats.quantize_mxfp4(w)
+    assert p.codes.shape == (32, 4)
+    assert p.scales.shape == (2, 4)
+    assert p.codes.dtype == jnp.uint8
+    assert formats.bits_per_element("mxfp4") == pytest.approx(4.25)
+
+
+def test_nxfp4_beats_mxfp4_on_skewed_blocks():
+    """NxFP's micro-exponents should help when sub-blocks differ in scale."""
+    key = jax.random.PRNGKey(5)
+    base = jax.random.normal(key, (128, 64), jnp.float32)
+    scale = jnp.where((jnp.arange(128) % 32) < 8, 8.0, 0.25)[:, None]
+    w = base * scale
+    e4 = np.abs(np.asarray(formats.dequantize(formats.quantize(w, "mxfp4"),
+                                              "mxfp4", jnp.float32) - w)).mean()
+    en = np.abs(np.asarray(formats.dequantize(formats.quantize(w, "nxfp4"),
+                                              "nxfp4", jnp.float32) - w)).mean()
+    assert en <= e4 * 1.02
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (train/prefill fused SDPA — the §Perf beyond-paper kernel)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,s,h,kvh,d,bq,bk,causal", [
+    (2, 256, 4, 2, 64, 128, 128, True),
+    (1, 512, 8, 8, 64, 256, 128, False),
+    (2, 128, 4, 1, 32, 64, 64, True),      # MQA
+    (1, 384, 2, 2, 128, 128, 128, True),   # odd block count
+])
+def test_flash_attention_vs_blocked(b, s, h, kvh, d, bq, bk, causal):
+    from repro.kernels.flash_attention.ops import gqa_flash_attention
+    from repro.models.common import blocked_attention
+    key = jax.random.PRNGKey(s + h)
+    q = jax.random.normal(key, (b, s, h, d), jnp.bfloat16)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, kvh, d),
+                          jnp.bfloat16)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kvh, d),
+                          jnp.bfloat16)
+    out = gqa_flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk)
+    ref = blocked_attention(q, k, v, causal=causal)
+    assert _rel_err(out, ref) < 0.02
+
+
+def test_flash_attention_fallback_unaligned():
+    from repro.kernels.flash_attention.ops import gqa_flash_attention
+    from repro.models.common import blocked_attention
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (1, 100, 2, 32), jnp.bfloat16)  # 100 % 64 != 0
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 100, 2, 32),
+                          jnp.bfloat16)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 100, 2, 32),
+                          jnp.bfloat16)
+    out = gqa_flash_attention(q, k, v, block_q=64, block_k=64)
+    ref = blocked_attention(q, k, v, causal=True)
+    assert _rel_err(out, ref) < 0.02

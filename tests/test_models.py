@@ -1,0 +1,155 @@
+"""Per-architecture smoke tests (reduced configs, per the assignment) +
+prefill/decode equivalence for every family."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import (ASSIGNED_ARCHS, PAPER_ARCHS, get_config,
+                           list_configs, reduced_config)
+from repro.models.footprint import compute_footprint
+from repro.models.model import build_model
+from tests.conftest import make_batch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_forward_and_train_step(arch, key):
+    """One forward + one train step on a reduced same-family config;
+    asserts output shapes and finiteness (the assignment's smoke test)."""
+    cfg = reduced_config(get_config(arch))
+    model = build_model(cfg)
+    params = model.init(key)
+    batch = make_batch(cfg, key)
+    logits = model.forward(params, batch)
+    s_expect = 32 + (8 if cfg.frontend == "vision" else 0)
+    assert logits.shape == (2, s_expect, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+    loss, grads = jax.value_and_grad(lambda p: model.loss(p, batch))(params)
+    assert np.isfinite(float(loss))
+    gn = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32))))
+             for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_prefill_decode_matches_forward(arch, key):
+    """Teacher-forced prefill+decode logits == full-forward logits."""
+    cfg = reduced_config(get_config(arch))
+    if not cfg.has_decode:
+        pytest.skip("encoder-only")
+    model = build_model(cfg)
+    params = model.init(key)
+    B, S, G = 2, 16, 4
+    ni = 8 if cfg.frontend == "vision" else 0
+    toks = jax.random.randint(key, (B, S + G), 0, cfg.vocab_size)
+    batch = {"tokens": toks[:, :S]}
+    if ni:
+        batch["image_embeds"] = jax.random.normal(
+            jax.random.fold_in(key, 7), (B, ni, cfg.d_model), jnp.bfloat16)
+    cache = model.init_cache(B, ni + S + G)
+    logits, cache = model.prefill(params, batch, cache)
+    got = [logits]
+    for i in range(G):
+        logits, cache = model.decode_step(params, toks[:, S + i], cache,
+                                          jnp.int32(ni + S + i))
+        got.append(logits)
+    full_b = dict(batch)
+    full_b["tokens"] = toks
+    full = model.forward(params, full_b)
+    want = full[:, ni + S - 1:ni + S + G].astype(np.float32)
+    got = jnp.stack(got, 1).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=0.15, rtol=0.05)
+
+
+def test_all_configs_loadable():
+    for name in list_configs():
+        cfg = get_config(name)
+        assert cfg.n_layers > 0 and cfg.d_model > 0
+
+
+@pytest.mark.parametrize("arch,expected_b", [
+    ("qwen2.5-14b", 14.8), ("qwen3-14b", 14.8), ("phi3-mini-3.8b", 3.8),
+    ("h2o-danube-1.8b", 1.8), ("mamba2-370m", 0.37), ("hymba-1.5b", 1.5),
+    ("deepseek-v2-lite-16b", 15.7), ("llama4-maverick-400b-a17b", 400.0),
+    ("internvl2-26b", 20.0), ("hubert-xlarge", 1.26),
+])
+def test_param_counts_match_published(arch, expected_b):
+    """Total params from the exact configs land near the published sizes.
+    (internvl2: LM backbone only — the ViT frontend is a stub per the
+    assignment; hubert: the assigned dims with this framework's gated MLP
+    give 1.26B vs the original ~0.96B non-gated encoder.)"""
+    fp = compute_footprint(get_config(arch))
+    got_b = fp.total_params / 1e9
+    assert got_b == pytest.approx(expected_b, rel=0.30), got_b
+
+
+def test_sliding_window_bounds_attention(key):
+    """SWA: moving a token far outside the window must not change logits."""
+    cfg = reduced_config(get_config("h2o-danube-1.8b"))
+    assert cfg.sliding_window == 8
+    model = build_model(cfg)
+    params = model.init(key)
+    S = 32
+    t1 = jax.random.randint(key, (1, S), 0, cfg.vocab_size)
+    t2 = t1.at[0, 0].set((t1[0, 0] + 1) % cfg.vocab_size)
+    l1 = model.forward(params, {"tokens": t1})
+    l2 = model.forward(params, {"tokens": t2})
+    # last position attends only to the trailing window: unaffected
+    np.testing.assert_allclose(
+        np.asarray(l1[0, -1].astype(np.float32)),
+        np.asarray(l2[0, -1].astype(np.float32)), atol=1e-3)
+    # within-window positions DO change
+    assert float(jnp.max(jnp.abs((l1[0, 1] - l2[0, 1]).astype(np.float32)))) > 1e-3
+
+
+def test_vocab_padding_masks_logits(key):
+    cfg = dataclasses.replace(reduced_config(get_config("qwen3-14b")),
+                              vocab_size=250, vocab_pad_multiple=128)
+    assert cfg.padded_vocab == 256
+    model = build_model(cfg)
+    params = model.init(key)
+    logits = model.forward(params, {"tokens": jnp.zeros((1, 8), jnp.int32)})
+    assert logits.shape[-1] == 256
+    assert bool(jnp.all(logits[..., 250:] <= -1e29))
+    loss = model.loss(params, {"tokens": jnp.zeros((1, 8), jnp.int32)})
+    assert np.isfinite(float(loss))
+
+
+def test_moe_capacity_matches_dense_when_ample(key):
+    """With generous capacity, the production MoE path == dense reference."""
+    from repro.models import moe as moe_lib
+    cfg = reduced_config(get_config("llama4-maverick-400b-a17b"))
+    p = moe_lib.init_moe(key, cfg)
+    x = jax.random.normal(jax.random.fold_in(key, 3), (2, 16, cfg.d_model),
+                          jnp.bfloat16)
+    dense = moe_lib.moe_dense(x, p, cfg)
+    cap = moe_lib.moe_capacity(x, p, cfg, capacity_factor=float(cfg.n_experts))
+    np.testing.assert_allclose(np.asarray(cap.astype(np.float32)),
+                               np.asarray(dense.astype(np.float32)),
+                               atol=0.08, rtol=0.05)
+
+
+def test_mamba2_chunked_equals_decode_chain(key):
+    """SSD chunked prefill state == sequential decode recurrence state."""
+    from repro.models import ssm as ssm_lib
+    cfg = reduced_config(get_config("mamba2-370m"))
+    p = ssm_lib.init_ssm(key, cfg)
+    B, S = 1, 24
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, S, cfg.d_model),
+                          jnp.bfloat16) * 0.3
+    y_seq, st_seq = ssm_lib.ssm_forward(x, p, cfg, None)
+    st = ssm_lib.init_ssm_state(cfg, B)
+    ys = []
+    for t in range(S):
+        y, st = ssm_lib.ssm_decode_step(x[:, t], p, cfg, st)
+        ys.append(y)
+    y_dec = jnp.stack(ys, 1)
+    np.testing.assert_allclose(np.asarray(y_dec.astype(np.float32)),
+                               np.asarray(y_seq.astype(np.float32)),
+                               atol=0.08, rtol=0.1)
+    np.testing.assert_allclose(np.asarray(st["ssm"]), np.asarray(st_seq["ssm"]),
+                               atol=0.05, rtol=0.1)

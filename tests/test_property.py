@@ -1,0 +1,180 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hbmco import HBMCOConfig
+from repro.models.common import blocked_attention, decode_attention_ref
+from repro.quant import formats
+
+_settings = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# Blocked (flash-style) attention == naive attention
+# ---------------------------------------------------------------------------
+
+
+def _naive_attention(q, k, v, causal, window):
+    b, sq, h, d = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    rep = h // kvh
+    kf = jnp.repeat(k, rep, axis=2).astype(jnp.float32)
+    vf = jnp.repeat(v, rep, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kf)
+    s = s / np.sqrt(d)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vf)
+
+
+@given(
+    sq=st.integers(1, 48),
+    h=st.sampled_from([1, 2, 4]),
+    grp=st.sampled_from([1, 2]),
+    d=st.sampled_from([8, 16]),
+    causal=st.booleans(),
+    window=st.sampled_from([None, 4, 16]),
+    qb=st.sampled_from([4, 16, 64]),
+    kb=st.sampled_from([4, 16, 64]),
+    seed=st.integers(0, 2**30),
+)
+@settings(**_settings)
+def test_blocked_attention_equals_naive(sq, h, grp, d, causal, window, qb,
+                                        kb, seed):
+    if h % grp:
+        grp = 1
+    kvh = h // grp
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(key, (1, sq, h, d), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, sq, kvh, d),
+                          jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, sq, kvh, d),
+                          jnp.float32)
+    out = blocked_attention(q, k, v, causal=causal, window=window,
+                            q_block=qb, kv_block=kb)
+    ref = _naive_attention(q, k, v, causal, window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-4, rtol=2e-3)
+
+
+@given(
+    s=st.integers(1, 64),
+    h=st.sampled_from([2, 4]),
+    d=st.sampled_from([8, 32]),
+    seed=st.integers(0, 2**30),
+)
+@settings(**_settings)
+def test_decode_attention_is_last_row_of_prefill(s, h, d, seed):
+    """decode(q_t | K,V) == full causal attention's last row."""
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(key, (1, s, h, d), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, s, h, d), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, s, h, d), jnp.float32)
+    full = _naive_attention(q, k, v, True, None)[:, -1]       # (1, h, d)
+    dec = decode_attention_ref(q[:, -1], k, v, jnp.asarray([s], jnp.int32))
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               atol=2e-4, rtol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# Quantization formats
+# ---------------------------------------------------------------------------
+
+
+@given(
+    fmt=st.sampled_from(["mxfp4", "mxfp8", "bfp16", "nxfp4"]),
+    rows=st.integers(1, 8).map(lambda r: r * 32),
+    scale=st.floats(1e-3, 1e3),
+    seed=st.integers(0, 2**30),
+)
+@settings(**_settings)
+def test_quant_block_relative_error_bounded(fmt, rows, scale, seed):
+    """Per-block relative error is bounded by the format's step size for
+    any input scale (shared exponents track magnitude)."""
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (rows, 32), jnp.float32) * scale
+    wd = formats.dequantize(formats.quantize(w, fmt), fmt, jnp.float32)
+    err = np.abs(np.asarray(wd - w))
+    amax = np.abs(np.asarray(w)).max() + 1e-30
+    bound = {"mxfp4": 0.35, "nxfp4": 0.35, "mxfp8": 0.15, "bfp16": 0.02}[fmt]
+    assert err.max() / amax <= bound
+
+
+@given(seed=st.integers(0, 2**30))
+@settings(**_settings)
+def test_quant_scale_equivariance_mxfp4(seed):
+    """Quantizing 2^k * W == 2^k * quantizing W (E8M0 shared scale)."""
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (64, 32), jnp.float32)
+    a = formats.dequantize(formats.quantize(w, "mxfp4"), "mxfp4", jnp.float32)
+    b = formats.dequantize(formats.quantize(w * 8.0, "mxfp4"), "mxfp4",
+                           jnp.float32)
+    np.testing.assert_allclose(np.asarray(a) * 8.0, np.asarray(b),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# HBM-CO model invariants
+# ---------------------------------------------------------------------------
+
+
+@given(
+    ranks=st.sampled_from([1, 2, 4]),
+    ch=st.sampled_from([1, 2, 4]),
+    banks=st.sampled_from([1, 2, 4]),
+    mb=st.sampled_from([1.5, 3.0, 6.0, 12.0, 24.0]),
+)
+@settings(**_settings)
+def test_hbmco_invariants(ranks, ch, banks, mb):
+    c = HBMCOConfig(ranks=ranks, channels_per_layer=ch, banks_per_group=banks,
+                    bank_mb=mb)
+    # energy grows with capacity at fixed bandwidth structure
+    bigger = HBMCOConfig(ranks=ranks, channels_per_layer=ch,
+                         banks_per_group=banks, bank_mb=mb * 2)
+    assert bigger.energy_pj_per_bit >= c.energy_pj_per_bit
+    assert bigger.module_cost >= c.module_cost
+    # cost per GB falls with capacity (fixed costs amortize)
+    assert bigger.cost_per_gb <= c.cost_per_gb + 1e-9
+    # BW/Cap inverse to capacity at fixed bandwidth
+    assert c.bw_per_cap == pytest.approx(
+        c.bandwidth_gbs / c.capacity_gb, rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Online softmax invariance (the decoupled-pipeline numerical core)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    n=st.integers(2, 200),
+    chunks=st.integers(1, 8),
+    shift=st.floats(-100, 100),
+    seed=st.integers(0, 2**30),
+)
+@settings(**_settings)
+def test_online_softmax_chunk_invariance(n, chunks, shift, seed):
+    """Two-pass online softmax over arbitrary chunkings == full softmax."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (n,), jnp.float32) * 10 + shift
+    bounds = np.linspace(0, n, chunks + 1).astype(int)
+    m, l = -np.inf, 0.0
+    for i in range(chunks):
+        blk = np.asarray(x[bounds[i]:bounds[i + 1]])
+        if blk.size == 0:
+            continue
+        m_new = max(m, blk.max())
+        l = l * np.exp(m - m_new) + np.exp(blk - m_new).sum()
+        m = m_new
+    lse = m + np.log(l)
+    ref = float(jax.scipy.special.logsumexp(x))
+    assert lse == pytest.approx(ref, rel=1e-5, abs=1e-5)

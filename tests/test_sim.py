@@ -1,0 +1,123 @@
+"""Event-driven RPU simulator vs the paper's §VI/§VIII/§IX claims."""
+import pytest
+
+from repro.configs import get_config
+from repro.core import hardware
+from repro.core.hbmco import CANDIDATE_CO
+from repro.sim.compiler import CompileOptions, compile_decode_step
+from repro.sim.engine import simulate_program
+from repro.sim.gpu_model import GPUSystemConfig, gpu_decode_latency
+from repro.sim.scaling import (iso_tdp_comparison, min_cus_for_model,
+                               rpu_point, strong_scaling, system_cost)
+
+
+def _sim(name, n_cus=64, batch=1, seq=16384, **kw):
+    prog = compile_decode_step(get_config(name),
+                               CompileOptions(n_cus=n_cus, batch=batch,
+                                              seq_len=seq))
+    return simulate_program(prog, **kw)
+
+
+def test_bs1_saturates_memory_bandwidth():
+    """Paper: 'At batch size 1, the RPU saturates memory bandwidth and
+    achieves roofline performance.'"""
+    r = _sim("llama3-8b", batch=1)
+    assert r.mem_bw_utilization > 0.95
+
+
+def test_compiled_bytes_match_footprint():
+    """Compiler streams exactly the model's active bytes + KV$."""
+    from repro.models.footprint import compute_footprint
+    cfg = get_config("llama3-8b")
+    opts = CompileOptions(n_cus=64, batch=1, seq_len=16384)
+    prog = compile_decode_step(cfg, opts)
+    fp = compute_footprint(cfg)
+    want = fp.streamed_bytes_per_token(1, 16384) / 64
+    got = prog.total_mem_bytes()
+    assert got == pytest.approx(want, rel=0.1)
+
+
+def test_decoupling_speedup_bs32():
+    """§IX C3: decoupled execution (buffering the bimodal phases) is worth
+    up to ~1.6x at batch 32; must be >1 and <= ~2."""
+    r_dec = _sim("llama3-8b", batch=32, seq=8192)
+    r_ser = _sim("llama3-8b", batch=32, seq=8192, decoupled=False)
+    speedup = r_ser.latency_s / r_dec.latency_s
+    assert 1.05 < speedup < 2.2, speedup
+
+
+def test_fine_grained_net_avoids_collective_stalls():
+    """§IX C3: fine-grained sharding avoids up to 2.0x from collective
+    stalls (global-barrier ablation at the 405B/428CU scale)."""
+    r_fg = _sim("llama3-405b", n_cus=428, batch=1, seq=8192)
+    r_gb = _sim("llama3-405b", n_cus=428, batch=1, seq=8192,
+                fine_grained_net=False)
+    ratio = r_gb.latency_s / r_fg.latency_s
+    assert 1.3 < ratio < 2.3, ratio
+
+
+def test_batch32_slower_than_batch1():
+    """Fig 8: BS=32 per-token latency multiples of BS=1 (KV$ serialization)."""
+    r1 = _sim("llama3-8b", batch=1, seq=16384)
+    r32 = _sim("llama3-8b", batch=32, seq=8192)
+    ratio = r32.latency_s / r1.latency_s
+    assert 3.0 < ratio < 20.0
+
+
+def test_peak_latency_points_vs_paper():
+    """§VIII: 70B @ 204 CUs ~ 0.4 ms/tok; 405B @ 428 CUs ~ 1.0 ms/tok;
+    Scout @ 128 CUs ~ 0.2 ms/tok.  Allow 50% modeling slack."""
+    p70 = rpu_point(get_config("llama3-70b"), 204, batch=1, seq_len=8192)
+    assert p70.ms_per_token == pytest.approx(0.4, rel=0.5)
+    p405 = rpu_point(get_config("llama3-405b"), 428, batch=1, seq_len=8192)
+    assert p405.ms_per_token == pytest.approx(1.0, rel=0.5)
+    scout = rpu_point(get_config("llama4-scout-109b-a17b"), 128, batch=1,
+                      seq_len=8192)
+    assert scout.ms_per_token == pytest.approx(0.2, rel=0.6)
+
+
+def test_iso_tdp_headline_405b():
+    """§VIII headline: 45.3x lower latency vs 4xH100 at ISO-TDP (2800W).
+    Require the same order: 30x-60x."""
+    r = iso_tdp_comparison(get_config("llama3-405b"), batch=1, seq_len=8192)
+    assert r["n_gpus"] == 4
+    assert 30.0 < r["speedup"] < 60.0, r["speedup"]
+    assert abs(r["rpu_tdp_w"] - r["gpu_tdp_w"]) / r["gpu_tdp_w"] < 0.25
+    assert r["energy_ratio"] > 5.0
+
+
+def test_strong_scaling_monotone_then_plateau():
+    """Latency falls with CU count until the activation broadcast
+    dominates, then plateaus (paper: 'Beyond these scales, performance
+    plateaus as broadcasting the activation becomes the bottleneck')."""
+    cfg = get_config("llama3-70b")
+    pts = strong_scaling(cfg, [32, 64, 128, 256, 512], batch=1, seq_len=8192)
+    lat = [p.ms_per_token for p in pts]
+    assert lat[1] < lat[0] and lat[2] < lat[1] and lat[3] < lat[2]
+    # diminishing returns into the plateau: the last doubling gains much
+    # less than the first (and may even regress slightly).
+    gain_first = lat[0] / lat[1]
+    gain_last = lat[-2] / lat[-1]
+    assert gain_last < gain_first
+    assert lat[-1] < lat[0]
+
+
+def test_gpu_decode_utilization_calibration():
+    """§II: H100 sustains ~32% of peak HBM bandwidth in distributed decode."""
+    cfg = get_config("llama3-405b")
+    g = gpu_decode_latency(cfg, GPUSystemConfig(n_gpus=4), batch=1,
+                           seq_len=8192)
+    assert g.bw_utilization == pytest.approx(0.32, abs=0.08)
+
+
+def test_system_cost_components():
+    c = system_cost(64, CANDIDATE_CO)
+    assert c["total"] == pytest.approx(sum(
+        c[k] for k in ("silicon", "memory", "substrate", "pcb")))
+    assert c["memory"] > 0 and c["silicon"] > 0
+
+
+def test_min_cus_scales_with_model():
+    small = min_cus_for_model(get_config("llama3-8b"))
+    big = min_cus_for_model(get_config("llama3-405b"))
+    assert big > small
