@@ -334,8 +334,15 @@ class HloModule:
         contract = 1
         m = _CONTRACT_RE.search(rest)
         if m:
-            ops_m = re.match(r"\(\s*%?([\w.\-]+)", rest)
-            lhs_ty = symtab.get(ops_m.group(1), "") if ops_m else ""
+            # Operand types may be inline (`dot(f32[4,32,48]{2,1,0} %a, ...)`,
+            # the modern HLO syntax) or name-only (`dot(%a, %b)`); prefer the
+            # inline type, else resolve the name through the symbol table.
+            inline_m = re.match(r"\(\s*([a-z][a-z0-9]*\[[0-9,]*\])", rest)
+            if inline_m:
+                lhs_ty = inline_m.group(1)
+            else:
+                names = self._operand_names(rest)
+                lhs_ty = symtab.get(names[0], "") if names else ""
             sm = _SHAPE_RE.search(lhs_ty)
             if sm and sm.group(2):
                 lhs_dims = [int(d) for d in sm.group(2).split(",") if d]

@@ -1,11 +1,13 @@
-"""Public op wrapper for the decode-attention kernel."""
+"""Public op wrappers for the decode-attention kernel (dense and paged)."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.decode_attention.kernel import decode_attention
-from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.decode_attention.ref import (
+    decode_attention_ref, gather_pages, paged_decode_attention_ref,
+)
 
 
 def _on_cpu() -> bool:
@@ -21,3 +23,27 @@ def gqa_decode_attention(q, k_cache, v_cache, cur_len, *, block_s: int = 512):
         return decode_attention_ref(q, k_cache, v_cache, cur_len)
     return decode_attention(q, k_cache, v_cache, cur_len, block_s=bs,
                             interpret=_on_cpu())
+
+
+def paged_gqa_decode_attention(q, k_pages, v_pages, page_table, pos, *,
+                               window=None, block_s: int = 512):
+    """Paged decode attention: gather K/V through the page table into a
+    position-ordered dense view, then run the flash-decode kernel over it.
+
+    The gather is the HBM-stream half of the paper's decode SDPA (page
+    granularity keeps the stream contiguous per block); the kernel half is
+    unchanged, so the paged path inherits the dense kernel's tiling.  With
+    ``window=None`` validity is a per-row prefix (``pos + 1`` entries), the
+    layout the kernel's ``cur_len`` masking expects; windowed callers fall
+    back to the masked oracle.
+    """
+    if window is not None or _on_cpu():
+        # windowed masks need the oracle; on CPU the kernel would run in
+        # (slow) interpret mode and the oracle is also the bit-exact
+        # counterpart of the dense serve path
+        return paged_decode_attention_ref(q, k_pages, v_pages, page_table,
+                                          pos, window=window)
+    k = gather_pages(k_pages, page_table)
+    v = gather_pages(v_pages, page_table)
+    cur_len = (pos + 1).astype(jnp.int32)
+    return gqa_decode_attention(q, k, v, cur_len, block_s=block_s)

@@ -1,2 +1,47 @@
-"""Pure-jnp oracle for flash-decode GQA attention."""
+"""Pure-jnp oracles for flash-decode GQA attention (dense and paged)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
 from repro.models.common import decode_attention_ref  # noqa: F401
+
+
+def gather_pages(pages: jnp.ndarray, page_table: jnp.ndarray) -> jnp.ndarray:
+    """(P, page, ...) pool + (B, n_blocks) table -> (B, n_blocks*page, ...)
+    position-ordered dense view (block i of row b = physical page
+    ``page_table[b, i]``)."""
+    g = pages[page_table]                     # (B, n_blocks, page, ...)
+    b, nb, ps = g.shape[:3]
+    return g.reshape((b, nb * ps) + g.shape[3:])
+
+
+def paged_valid_mask(page_table: jnp.ndarray, page_size: int,
+                     pos: jnp.ndarray, *, window=None) -> jnp.ndarray:
+    """(B, n_blocks*page) bool mask of logical positions visible to the
+    token being decoded at per-row position ``pos`` (inclusive: the new
+    token's own k/v has already been scattered at ``pos``)."""
+    s = page_table.shape[1] * page_size
+    idx = jnp.arange(s)[None, :]
+    valid = idx <= pos[:, None]
+    if window is not None:
+        valid = valid & (idx > pos[:, None] - window)
+    return valid
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, page_table, pos, *,
+                               window=None, scale=None):
+    """Paged single-token decode attention oracle.
+
+    q:          (B, H, D) — one new token per slot
+    k_pages:    (P, page, KVH, D) physical page pool
+    v_pages:    (P, page, KVH, Dv)
+    page_table: (B, n_blocks) int32 — logical block -> physical page
+    pos:        (B,) int32 — per-slot position of the new token
+
+    Gathers pages into a position-ordered dense view and reuses the dense
+    oracle, so paged-vs-dense equivalence is exact by construction.
+    """
+    k = gather_pages(k_pages, page_table)
+    v = gather_pages(v_pages, page_table)
+    valid = paged_valid_mask(page_table, k_pages.shape[1], pos, window=window)
+    return decode_attention_ref(q, k, v, None, valid=valid, scale=scale)

@@ -1,11 +1,16 @@
-"""Serving launcher: prefill + autonomous decode loop.
+"""Serving launcher: static batch or continuous batching.
 
-The decode loop is ONE jitted ``lax.scan`` (no per-token host dispatch) —
-the JAX analogue of the RPU's host-free execution model.  Optionally runs
-speculative decoding (paper Fig 14 setup) with a reduced draft model.
+The static decode loop is ONE jitted ``lax.scan`` (no per-token host
+dispatch) — the JAX analogue of the RPU's host-free execution model.
+``--continuous`` switches to iteration-level batching over the block-paged
+KV cache: requests arrive as a Poisson process (``--arrival-rate`` req/s)
+and are admitted into freed decode slots without recompiling.  Optionally
+runs speculative decoding (paper Fig 14 setup) with a reduced draft model.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b --reduced \
       --batch 4 --prompt-len 64 --max-new 32 [--speculative]
+  PYTHONPATH=src python -m repro.launch.serve --continuous \
+      --num-requests 16 --arrival-rate 50 --batch 4
 """
 from __future__ import annotations
 
@@ -14,13 +19,15 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config, reduced_config
 from repro.launch.mesh import make_small_mesh
 from repro.models.model import build_model
 from repro.parallel.hints import sharding_rules
 from repro.parallel.plan import make_plan
-from repro.runtime.engine import ServeEngine
+from repro.runtime.engine import ContinuousServeEngine, ServeEngine
+from repro.runtime.scheduler import Request
 
 
 def main(argv=None) -> int:
@@ -33,6 +40,15 @@ def main(argv=None) -> int:
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--speculative", action="store_true")
+    ap.add_argument("--continuous", action="store_true",
+                    help="iteration-level batching over a paged KV cache")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="Poisson request arrival rate in req/s "
+                         "(0 = all requests arrive at t=0)")
+    ap.add_argument("--num-requests", type=int, default=0,
+                    help="total requests for --continuous (default 3x batch)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV page size in tokens for --continuous")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -60,6 +76,35 @@ def main(argv=None) -> int:
         max_len += 8
 
     with mesh, sharding_rules(plan.rules()):
+        if args.continuous:
+            n_req = args.num_requests or 3 * args.batch
+            rng = np.random.default_rng(args.seed)
+            gaps = (rng.exponential(1.0 / args.arrival_rate, n_req)
+                    if args.arrival_rate > 0 else np.zeros(n_req))
+            arrivals = np.cumsum(gaps)
+            prompts = np.asarray(jax.random.randint(
+                jax.random.fold_in(key, 4), (n_req, args.prompt_len), 0,
+                cfg.vocab_size))
+            reqs = [Request(rid=i, prompt=prompts[i],
+                            max_new_tokens=args.max_new,
+                            arrival_time=float(arrivals[i]))
+                    for i in range(n_req)]
+            eng = ContinuousServeEngine(
+                model, params, num_slots=args.batch,
+                page_size=args.page_size,
+                num_pages=1 + args.batch * -(-max_len // args.page_size) * 2,
+                max_len=max_len, temperature=args.temperature)
+            t0 = time.time()
+            stats = eng.run(reqs, key=key)
+            dt = time.time() - t0
+            print(f"arch={cfg.name} continuous slots={args.batch} "
+                  f"requests={n_req} rate={args.arrival_rate}/s "
+                  f"steps={stats.steps} occupancy={stats.occupancy:.2f} "
+                  f"preemptions={stats.preemptions}")
+            print(f"tokens={stats.total_tokens} wall={dt:.2f}s "
+                  f"({stats.total_tokens / dt:.1f} tok/s incl. compile)")
+            print("sample:", stats.results[0][:16].tolist())
+            return 0
         if args.speculative:
             from repro.runtime.speculative import speculative_generate
             import dataclasses

@@ -116,15 +116,17 @@ def _init_block(kind: str, key, cfg: ModelConfig) -> dict:
 
 
 def _init_block_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int,
-                      window: int | None):
+                      window: int | None, dtype=None):
+    dtype = dtype or jnp.bfloat16
     if kind in ("attn_dense", "attn_moe"):
-        return layers.init_attn_cache(cfg, batch, max_len, window)
+        return layers.init_attn_cache(cfg, batch, max_len, window, dtype=dtype)
     if kind in ("mla_dense", "mla_moe"):
-        return layers.init_mla_cache(cfg, batch, max_len)
+        return layers.init_mla_cache(cfg, batch, max_len, dtype=dtype)
     if kind == "ssm":
         return ssm_lib.init_ssm_state(cfg, batch)
     if kind == "hybrid":
-        return {"attn": layers.init_attn_cache(cfg, batch, max_len, window),
+        return {"attn": layers.init_attn_cache(cfg, batch, max_len, window,
+                                               dtype=dtype),
                 "ssm": ssm_lib.init_ssm_state(cfg, batch)}
     raise ValueError(kind)
 
@@ -181,6 +183,43 @@ def _block_prefill(kind: str, p: dict, x, cfg: ModelConfig, window, cache,
         a, c = layers.attn_prefill(p["attn"], h, cfg, cache, window=window)
     x = x + a
     x = x + _ffn(kind, p, rmsnorm(x, p["ln2"], cfg.norm_eps), cfg, moe_impl)
+    return x, c
+
+
+def _init_block_page_pool(kind: str, cfg: ModelConfig, num_pages: int,
+                          page_size: int, dtype=None):
+    dtype = dtype or jnp.bfloat16
+    if kind in ("attn_dense", "attn_moe"):
+        return layers.init_attn_page_pool(cfg, num_pages, page_size,
+                                          dtype=dtype)
+    if kind in ("mla_dense", "mla_moe"):
+        return layers.init_mla_page_pool(cfg, num_pages, page_size,
+                                         dtype=dtype)
+    raise NotImplementedError(
+        f"continuous batching: no paged cache for block kind {kind!r} "
+        "(ssm/hybrid state is per-slot, not positional — future PR)")
+
+
+# Paged-cache leaf names with a token axis (scatter/gather targets); other
+# leaves (e.g. slot_pos) are dense-path bookkeeping with no paged analogue.
+_PAGED_LEAF_KEYS = ("k", "v", "c_kv", "k_rope")
+
+
+def _block_decode_paged(kind: str, p: dict, x, cfg: ModelConfig, window,
+                        pool, page_table, pos, moe_impl: str):
+    """Paged analogue of ``_block_decode``: per-slot ragged positions and
+    K/V gathered through the page table.  x: (B, D)."""
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if kind.startswith("mla"):
+        a, c = layers.mla_decode_paged(p["attn"], h, cfg, pool, page_table, pos)
+    elif kind in ("attn_dense", "attn_moe"):
+        a, c = layers.attn_decode_paged(p["attn"], h, cfg, pool, page_table,
+                                        pos, window=window)
+    else:
+        raise NotImplementedError(kind)
+    x = x + a
+    x = x + _ffn(kind, p, rmsnorm(x[:, None, :], p["ln2"], cfg.norm_eps), cfg,
+                 moe_impl)[:, 0]
     return x, c
 
 
@@ -335,13 +374,14 @@ class Model:
         return self._xent(logits[:, :-1], tokens[:, 1:])
 
     # ----- cache -----
-    def init_cache(self, batch: int, max_len: int) -> list:
+    def init_cache(self, batch: int, max_len: int, dtype=None) -> list:
         cfg = self.cfg
         caches = []
         for seg in self.plan:
             kinds_caches = []
             for kind in seg.kinds:
-                single = _init_block_cache(kind, cfg, batch, max_len, seg.window)
+                single = _init_block_cache(kind, cfg, batch, max_len,
+                                           seg.window, dtype)
                 if seg.reps == 1:
                     kinds_caches.append(single)
                 else:
@@ -350,6 +390,103 @@ class Model:
                         single))
             caches.append(tuple(kinds_caches))
         return caches
+
+    # ----- paged cache (continuous-batching serve) -----
+    def init_paged_cache(self, num_pages: int, page_size: int,
+                         dtype=None) -> list:
+        """Physical page pools, one per layer, in the same nested structure
+        as ``init_cache`` (list over segments, tuple over kinds, stacked
+        along a leading reps axis for scanned segments).  All layers share
+        one logical page-id space — the allocator in ``runtime.kv_cache``
+        is model-agnostic."""
+        cfg = self.cfg
+        pools = []
+        for seg in self.plan:
+            if seg.window is not None:
+                raise NotImplementedError(
+                    "continuous batching over sliding-window segments needs "
+                    "ring-aware pages — future PR")
+            kinds_pools = []
+            for kind in seg.kinds:
+                single = _init_block_page_pool(kind, cfg, num_pages,
+                                               page_size, dtype)
+                if seg.reps == 1:
+                    kinds_pools.append(single)
+                else:
+                    kinds_pools.append(jax.tree.map(
+                        lambda a: jnp.tile(a[None], (seg.reps,) + (1,) * a.ndim),
+                        single))
+            pools.append(tuple(kinds_pools))
+        return pools
+
+    def scatter_prefill_cache(self, pools: list, dense_cache: list,
+                              pt_rows: jnp.ndarray) -> list:
+        """Scatter a dense prefill cache into the page pools.
+
+        ``dense_cache`` comes from ``prefill`` with ``init_cache(b, L)``
+        where L is a page multiple; ``pt_rows``: (b, L // page_size) int32
+        physical page ids, one row per prefilled request.  Rows of padded
+        requests (and unallocated tail entries) must point at the scratch
+        page — they receive the padded garbage, live pages stay exclusive."""
+        flat = pt_rows.reshape(-1)
+        new_pools = []
+        for si, seg in enumerate(self.plan):
+            kinds_new = []
+            for ki, _ in enumerate(seg.kinds):
+                pool, dense = pools[si][ki], dense_cache[si][ki]
+                out = dict(pool)
+                for key in _PAGED_LEAF_KEYS:
+                    if key not in pool:
+                        continue
+                    pl, dl = pool[key], dense[key]
+                    page = pl.shape[1] if seg.reps == 1 else pl.shape[2]
+                    if seg.reps == 1:
+                        # dense (b, L, ...) -> (b * n_blocks, page, ...)
+                        blocks = dl.reshape(
+                            (-1, page) + dl.shape[2:]).astype(pl.dtype)
+                        out[key] = pl.at[flat].set(blocks)
+                    else:
+                        # dense (reps, b, L, ...) -> (reps, b*n_blocks, page, ...)
+                        blocks = dl.reshape(
+                            (dl.shape[0], -1, page) + dl.shape[3:]).astype(pl.dtype)
+                        out[key] = pl.at[:, flat].set(blocks)
+                kinds_new.append(out)
+            new_pools.append(tuple(kinds_new))
+        return new_pools
+
+    def decode_step_paged(self, params: dict, tokens: jnp.ndarray,
+                          pools: list, page_table: jnp.ndarray,
+                          pos: jnp.ndarray) -> tuple[jnp.ndarray, list]:
+        """One continuous-batching decode step over the slot batch.
+
+        tokens: (B,) int32 (one per slot); pos: (B,) int32 per-slot ragged
+        positions; page_table: (B, n_blocks) int32.  Inactive slots point
+        at the scratch page and are masked out by the caller."""
+        cfg = self.cfg
+        assert cfg.frontend != "audio", "encoder-only models have no decode step"
+        x = params["embed"][tokens]
+        x = shard_hint(x, "act_bd")
+        new_pools = []
+        for si, seg in enumerate(self.plan):
+            stack = params["stacks"][si]
+
+            def seg_step(xc, layer, seg=seg):
+                ps, cs = layer
+                new_cs = []
+                for kind, p, c in zip(seg.kinds, ps, cs):
+                    xc, nc = _block_decode_paged(kind, p, xc, cfg, seg.window,
+                                                 c, page_table, pos,
+                                                 self.moe_impl)
+                    new_cs.append(nc)
+                return xc, tuple(new_cs)
+
+            if seg.reps == 1:
+                x, nc = seg_step(x, (stack, pools[si]))
+            else:
+                x, nc = jax.lax.scan(seg_step, x, (stack, pools[si]))
+            new_pools.append(nc)
+        logits = self._head(params, x[:, None, :])[:, 0]
+        return logits, new_pools
 
     # ----- prefill -----
     def prefill(self, params: dict, batch: dict, cache: list):

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import common
+from repro.parallel.compat import shard_map
 from repro.models.common import ModelConfig, dense_init, split_keys
 
 
@@ -199,7 +200,7 @@ def moe_ep(x: jnp.ndarray, p: dict, cfg: ModelConfig, mesh, axis: str,
                            {"w_gate": wg, "w_up": wu, "w_down": wd})
         return y.astype(x.dtype).reshape(1, b, s, d)
 
-    parts = jax.shard_map(
+    parts = shard_map(
         body, mesh=mesh,
         in_specs=(P(), P(), P(axis), P(axis), P(axis)),
         out_specs=P(axis),

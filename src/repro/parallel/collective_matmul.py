@@ -32,6 +32,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.parallel.compat import shard_map
+
 
 def _axis_size(axis_name) -> int:
     return jax.lax.psum(1, axis_name)
@@ -130,7 +132,7 @@ def tp_linear_overlapped(x: jnp.ndarray, w: jnp.ndarray, mesh,
     else:
         raise ValueError(mode)
 
-    return jax.shard_map(
+    return shard_map(
         functools.partial(fn, axis_name=tp_axis),
         mesh=mesh,
         in_specs=in_specs,

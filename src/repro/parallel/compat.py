@@ -1,0 +1,62 @@
+"""JAX version compatibility shims for the parallel substrate.
+
+The repo targets current JAX (`jax.shard_map`, `AbstractMesh(shape, axes)`)
+but must also run on 0.4.x images where shard_map still lives under
+``jax.experimental`` and ``AbstractMesh`` takes ``((name, size), ...)``
+pairs.  Import ``shard_map`` / ``make_abstract_mesh`` from here instead of
+touching ``jax`` directly.
+"""
+from __future__ import annotations
+
+import jax
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:                                    # jax < 0.5
+    from jax.experimental.shard_map import shard_map as _shard_map_experimental
+
+    def _spec_axes(specs):
+        """Mesh axis names referenced anywhere in a specs pytree."""
+        from jax.sharding import PartitionSpec
+        names: set[str] = set()
+        for spec in jax.tree.leaves(
+                specs, is_leaf=lambda s: isinstance(s, PartitionSpec)):
+            if not isinstance(spec, PartitionSpec):
+                continue
+            for entry in spec:
+                if entry is None:
+                    continue
+                for a in (entry if isinstance(entry, tuple) else (entry,)):
+                    names.add(a)
+        return names
+
+    def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+                  check_vma=True):
+        """Map the modern kwargs onto the experimental signature.
+
+        0.4.x's partial-manual mode (``auto=``) hard-crashes the XLA:CPU
+        partitioner on some programs, so the shim runs FULLY manual
+        instead.  That is semantically identical as long as the specs never
+        mention a non-manual axis (the body then sees data replicated over
+        those axes and recomputes redundantly) — asserted below, and true
+        for every call site in this repo.
+        """
+        if axis_names is not None:
+            extra = _spec_axes((in_specs, out_specs)) - frozenset(axis_names)
+            if extra:
+                raise NotImplementedError(
+                    f"jax<0.5 shard_map shim: specs reference non-manual "
+                    f"axes {sorted(extra)}; partial-manual is unsupported")
+        return _shard_map_experimental(f, mesh=mesh, in_specs=in_specs,
+                                       out_specs=out_specs,
+                                       check_rep=check_vma)
+
+
+def make_abstract_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """AbstractMesh across the signature change (positional shape+axes vs
+    a single tuple of (name, size) pairs)."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(shape, axes)
+    except TypeError:
+        return AbstractMesh(tuple(zip(axes, shape)))

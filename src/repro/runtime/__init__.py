@@ -1,4 +1,9 @@
-"""Serving runtime: engine, sampling, speculative decoding."""
-from repro.runtime.engine import ServeEngine, serve_step_fn, prefill_step_fn
+"""Serving runtime: engines, paged KV cache, scheduler, sampling, speculative."""
+from repro.runtime.engine import (
+    ContinuousServeEngine, ContinuousStats, ServeEngine, prefill_step_fn,
+    serve_step_fn,
+)
+from repro.runtime.kv_cache import PageAllocator, PagedKVCache, SCRATCH_PAGE
 from repro.runtime.sampling import greedy, sample, probs
+from repro.runtime.scheduler import Request, Scheduler
 from repro.runtime.speculative import speculative_generate, SpecStats, make_speculative_window

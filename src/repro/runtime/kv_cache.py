@@ -1,0 +1,209 @@
+"""Block-paged KV cache for continuous-batching serve.
+
+Layout (vLLM-style): every attention layer owns a **page pool** — an array
+``(num_pages, page_size, ...)`` — and all layers share ONE logical page id
+space, so a single host-side allocator manages the whole model.  A request's
+token at absolute position ``t`` lives at
+``pool[page_table[slot, t // page_size], t % page_size]`` in every layer.
+
+The host side is split in two:
+
+  * ``PageAllocator`` — a pure-python free-list allocator with per-owner
+    page lists.  Physical page 0 is **reserved as a scratch page**: every
+    unallocated page-table entry (and every inactive decode slot) points at
+    it, so the jitted decode step can scatter/gather unconditionally — dead
+    slots write garbage into scratch instead of corrupting live pages.
+  * ``PagedKVCache`` — the per-slot page tables over that allocator, plus
+    admission / growth / release / defrag bookkeeping.
+
+Device pools themselves live in the engine (they are model-shaped pytrees
+built by ``Model.init_paged_cache``); this module is deliberately
+JAX-light so the allocator invariants are testable without compiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+SCRATCH_PAGE = 0
+
+
+class PageAllocator:
+    """Free-list page allocator with exclusive per-owner ownership.
+
+    Invariants (asserted by ``check()`` and tests/test_kv_cache.py):
+      * page 0 is never handed out (scratch);
+      * no page is owned by two live owners;
+      * ``len(free) + sum(owned) + 1 == num_pages`` (conservation).
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 2:
+            raise ValueError("need at least 2 pages (page 0 is scratch)")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        # LIFO free list: low page ids handed out first (helps locality)
+        self._free: list[int] = list(range(num_pages - 1, 0, -1))
+        self._owned: dict[object, list[int]] = {}
+
+    # -- queries ------------------------------------------------------------
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_live(self) -> int:
+        return sum(len(v) for v in self._owned.values())
+
+    def pages_of(self, owner) -> list[int]:
+        return list(self._owned.get(owner, ()))
+
+    # -- alloc / free -------------------------------------------------------
+    def alloc(self, owner, n: int = 1) -> list[int] | None:
+        """Allocate ``n`` pages for ``owner`` (all-or-nothing)."""
+        if n < 0:
+            raise ValueError(n)
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._owned.setdefault(owner, []).extend(pages)
+        return pages
+
+    def free_owner(self, owner) -> int:
+        """Release every page of ``owner``; returns how many were freed."""
+        pages = self._owned.pop(owner, [])
+        self._free.extend(pages)
+        return len(pages)
+
+    # -- defrag -------------------------------------------------------------
+    def defrag(self) -> dict[int, int]:
+        """Compact live pages into the lowest physical ids.
+
+        Returns the ``{old_page: new_page}`` mapping for moved pages (empty
+        when already compact).  Owners' logical order is preserved, so the
+        caller only has to (a) permute the device pools with the mapping and
+        (b) rewrite its page tables through it.
+        """
+        live = [(owner, p) for owner, pages in sorted(
+            self._owned.items(), key=lambda kv: str(kv[0]))
+            for p in pages]
+        mapping: dict[int, int] = {}
+        target = 1                                  # page 0 stays scratch
+        for _, p in live:
+            if p != target:
+                mapping[p] = target
+            target += 1
+        if mapping:
+            for owner, pages in self._owned.items():
+                self._owned[owner] = [mapping.get(p, p) for p in pages]
+            self._free = list(range(self.num_pages - 1, target - 1, -1))
+        return mapping
+
+    # -- invariants ---------------------------------------------------------
+    def check(self) -> None:
+        seen: set[int] = set()
+        for owner, pages in self._owned.items():
+            for p in pages:
+                assert p != SCRATCH_PAGE, f"{owner} owns the scratch page"
+                assert p not in seen, f"page {p} owned twice"
+                seen.add(p)
+        assert not (seen & set(self._free)), "page both free and owned"
+        assert len(self._free) + len(seen) + 1 == self.num_pages, \
+            "free-list conservation violated"
+
+
+@dataclasses.dataclass
+class SlotView:
+    """Host view of one decode slot's cache occupancy."""
+    owner: object
+    num_tokens: int = 0        # absolute positions written so far
+
+
+class PagedKVCache:
+    """Per-slot page tables over a ``PageAllocator``.
+
+    ``table()`` materializes the ``(num_slots, max_blocks)`` int32 page
+    table the jitted decode step consumes; rows of inactive slots (and the
+    unallocated tail of active rows) point at the scratch page.
+    """
+
+    def __init__(self, *, num_slots: int, num_pages: int, page_size: int,
+                 max_blocks: int):
+        self.num_slots = num_slots
+        self.max_blocks = max_blocks
+        self.page_size = page_size
+        self.allocator = PageAllocator(num_pages, page_size)
+        self._table = np.zeros((num_slots, max_blocks), np.int32)
+        self._slots: dict[int, SlotView] = {}
+
+    # -- queries ------------------------------------------------------------
+    def table(self) -> np.ndarray:
+        return self._table
+
+    def blocks_of(self, slot: int) -> int:
+        return len(self.allocator.pages_of(("slot", slot)))
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of non-scratch pages currently live."""
+        return self.allocator.num_live / (self.allocator.num_pages - 1)
+
+    def _needed_blocks(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    # -- lifecycle ----------------------------------------------------------
+    def admit(self, slot: int, n_tokens: int) -> bool:
+        """Allocate pages covering ``n_tokens`` positions for ``slot``."""
+        assert slot not in self._slots, f"slot {slot} already live"
+        n_blocks = self._needed_blocks(n_tokens)
+        if n_blocks > self.max_blocks:
+            raise ValueError(
+                f"request needs {n_blocks} blocks > max_blocks={self.max_blocks}")
+        pages = self.allocator.alloc(("slot", slot), n_blocks)
+        if pages is None:
+            return False
+        self._slots[slot] = SlotView(owner=("slot", slot), num_tokens=n_tokens)
+        self._table[slot, :n_blocks] = pages
+        return True
+
+    def ensure(self, slot: int, pos: int) -> bool:
+        """Grow ``slot`` so position ``pos`` has a backing page."""
+        view = self._slots[slot]
+        have = self.blocks_of(slot)
+        need = self._needed_blocks(pos + 1)
+        if need > self.max_blocks:
+            return False
+        if need > have:
+            pages = self.allocator.alloc(view.owner, need - have)
+            if pages is None:
+                return False
+            self._table[slot, have:need] = pages
+        view.num_tokens = max(view.num_tokens, pos + 1)
+        return True
+
+    def release(self, slot: int) -> int:
+        """Free every page of ``slot`` (finish or eviction)."""
+        self._slots.pop(slot, None)
+        freed = self.allocator.free_owner(("slot", slot))
+        self._table[slot, :] = SCRATCH_PAGE
+        return freed
+
+    # -- defrag -------------------------------------------------------------
+    def defrag(self) -> np.ndarray | None:
+        """Compact live pages; returns the pool gather index or None.
+
+        The gather index ``g`` satisfies ``new_pool[i] = old_pool[g[i]]``
+        for every page pool; page tables are rewritten in place.
+        """
+        mapping = self.allocator.defrag()
+        if not mapping:
+            return None
+        lut = np.arange(self.allocator.num_pages, dtype=np.int32)
+        for old, new in mapping.items():
+            lut[old] = new
+        self._table = lut[self._table]
+        gather = np.arange(self.allocator.num_pages, dtype=np.int32)
+        for old, new in mapping.items():
+            gather[new] = old
+        return gather

@@ -1,0 +1,127 @@
+"""Iteration-level request scheduler for continuous batching.
+
+Request lifecycle:  PENDING --admit--> RUNNING --finish--> FINISHED
+                        ^                 |
+                        +----preempt------+        (pages exhausted)
+
+The scheduler owns admission policy only; the engine drives the loop
+(prefill newly admitted requests, run one fused decode step over every
+slot, retire finished slots).  Admission is slot-based: the jitted decode
+step has a fixed batch of ``num_slots`` rows, and a request occupies one
+slot from prefill to finish.  Freed slots are refilled from the arrival
+queue on the **next iteration** without recompiling — page tables and
+positions are data, not shapes.
+
+Preemption (when the page pool is exhausted) is restart-style: the victim
+loses its pages and generated tokens and re-queues at the front.  With
+greedy decoding a restart reproduces the same tokens, so preemption is
+invisible in the output stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Iterable
+
+import numpy as np
+
+from repro.runtime.kv_cache import PagedKVCache
+
+PENDING, RUNNING, FINISHED = "pending", "running", "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (plen,) int32 token ids
+    max_new_tokens: int
+    arrival_time: float = 0.0          # seconds relative to serve start
+    # -- mutable lifecycle state --
+    state: str = PENDING
+    slot: int = -1
+    pos: int = 0                       # next cache write position
+    tokens: list[int] = dataclasses.field(default_factory=list)
+    admit_time: float | None = None
+    finish_time: float | None = None
+    preemptions: int = 0
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def done(self) -> bool:
+        return len(self.tokens) >= self.max_new_tokens
+
+
+class Scheduler:
+    """Slot-based admission over a paged KV cache."""
+
+    def __init__(self, cache: PagedKVCache):
+        self.cache = cache
+        self.num_slots = cache.num_slots
+        self.waiting: deque[Request] = deque()
+        self.running: dict[int, Request] = {}
+        self._free_slots: list[int] = list(range(self.num_slots))[::-1]
+
+    # -- queries ------------------------------------------------------------
+    def has_work(self) -> bool:
+        return bool(self.waiting) or bool(self.running)
+
+    def next_arrival(self) -> float | None:
+        return min((r.arrival_time for r in self.waiting), default=None)
+
+    @property
+    def num_running(self) -> int:
+        return len(self.running)
+
+    # -- lifecycle ----------------------------------------------------------
+    def submit(self, requests: Iterable[Request]) -> None:
+        reqs = sorted(requests, key=lambda r: r.arrival_time)
+        self.waiting.extend(reqs)
+
+    def admit(self, now: float) -> list[Request]:
+        """Admit arrived requests into free slots while pages last."""
+        admitted: list[Request] = []
+        while (self.waiting and self._free_slots
+               and self.waiting[0].arrival_time <= now):
+            req = self.waiting[0]
+            slot = self._free_slots[-1]
+            if not self.cache.admit(slot, req.prompt_len):
+                break                      # pool exhausted: wait for frees
+            self.waiting.popleft()
+            self._free_slots.pop()
+            req.state, req.slot = RUNNING, slot
+            req.pos = req.prompt_len
+            req.admit_time = now
+            self.running[slot] = req
+            admitted.append(req)
+        return admitted
+
+    def ensure_capacity(self, req: Request) -> bool:
+        """Back ``req``'s next write position with a page, evicting the
+        youngest other request if the pool is exhausted.  Returns False if
+        ``req`` itself had to be preempted."""
+        while not self.cache.ensure(req.slot, req.pos):
+            victims = [r for r in self.running.values() if r is not req]
+            if not victims:
+                self.preempt(req)
+                return False
+            self.preempt(max(victims, key=lambda r: (r.admit_time, r.rid)))
+        return True
+
+    def preempt(self, req: Request) -> None:
+        self.cache.release(req.slot)
+        self.running.pop(req.slot)
+        self._free_slots.append(req.slot)
+        req.preemptions += 1
+        req.state, req.slot, req.pos = PENDING, -1, 0
+        req.tokens.clear()
+        self.waiting.appendleft(req)
+
+    def finish(self, req: Request, now: float) -> None:
+        self.cache.release(req.slot)
+        self.running.pop(req.slot)
+        self._free_slots.append(req.slot)
+        req.state, req.finish_time = FINISHED, now
+        req.slot = -1

@@ -23,6 +23,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.models.model import Model
 from repro.parallel import compression
+from repro.parallel.compat import shard_map
 from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
 
 
@@ -91,7 +92,7 @@ def make_train_step(model: Model, opt_cfg: AdamWConfig, *,
         pspec = jax.tree.map(lambda _: P(), state.params)
         bspec = jax.tree.map(lambda _: P(pod_axis), batch)
         espec = jax.tree.map(lambda _: P(pod_axis), state.err)
-        loss, grads, new_err = jax.shard_map(
+        loss, grads, new_err = shard_map(
             per_pod, mesh=mesh,
             in_specs=(pspec, bspec, espec),
             out_specs=(P(), pspec, espec),

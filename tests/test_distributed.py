@@ -10,6 +10,10 @@ import textwrap
 
 import pytest
 
+# Every test here compiles a model in an 8-device subprocess (minutes of
+# wall time) — heavy tier only.
+pytestmark = pytest.mark.slow
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 ENV = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src")}
 

@@ -106,8 +106,9 @@ def test_collectives_inside_scan_are_multiplied():
             return c + jax.lax.psum(x, "x"), None
         return jax.lax.scan(step, jnp.zeros_like(xs[0]), xs)[0]
 
-    g = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P(None, "x"),
-                              out_specs=P("x")))
+    from repro.parallel.compat import shard_map
+    g = jax.jit(shard_map(f, mesh=mesh, in_specs=P(None, "x"),
+                          out_specs=P("x")))
     xs = jax.ShapeDtypeStruct((10, 8 * n), jnp.float32)
     cost = analyze_hlo_text(g.lower(xs).compile().as_text())
     ar = cost.coll_count.get("all-reduce", 0)

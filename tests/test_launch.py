@@ -65,6 +65,7 @@ def test_moe_ep_multidevice():
     assert "ok" in r.stdout
 
 
+@pytest.mark.slow
 def test_train_launcher(tmp_path):
     from repro.launch.train import main
     rc = main(["--arch", "qwen3-14b", "--steps", "6", "--batch", "2",

@@ -15,6 +15,7 @@ from tests.conftest import make_batch
 
 
 @pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+@pytest.mark.slow
 def test_smoke_forward_and_train_step(arch, key):
     """One forward + one train step on a reduced same-family config;
     asserts output shapes and finiteness (the assignment's smoke test)."""

@@ -15,6 +15,7 @@ from repro.configs import ASSIGNED_ARCHS, get_config, reduced_config
 from repro.launch import shapes as shp
 from repro.models.model import build_model
 from repro.parallel import compression
+from repro.parallel.compat import make_abstract_mesh, shard_map
 from repro.parallel.plan import make_plan
 from repro.train.optimizer import init_opt_state
 
@@ -22,8 +23,7 @@ from repro.train.optimizer import init_opt_state
 def _fake_mesh(shape, axes):
     """AbstractMesh-backed mesh: lets us build NamedShardings for a 512-chip
     topology inside the single-device test process."""
-    from jax.sharding import AbstractMesh
-    return AbstractMesh(shape, axes)
+    return make_abstract_mesh(shape, axes)
 
 
 def _check_divisible(shardings, tree):
@@ -114,7 +114,7 @@ def test_ring_allgather_matmul_matches_dense():
     def f(x_frag, w_cols):
         return ring_allgather_matmul(x_frag, w_cols, axis_name="model")
 
-    out = jax.jit(jax.shard_map(
+    out = jax.jit(shard_map(
         f, mesh=mesh, in_specs=(P(None, "model"), P(None, "model")),
         out_specs=P(None, "model")))(x, w)
     np.testing.assert_allclose(np.asarray(out), np.asarray(x @ w),
@@ -133,7 +133,7 @@ def test_ring_matmul_reducescatter_matches_dense():
     def f(x_frag, w_rows):
         return ring_matmul_reducescatter(x_frag, w_rows, axis_name="model")
 
-    out = jax.jit(jax.shard_map(
+    out = jax.jit(shard_map(
         f, mesh=mesh, in_specs=(P(None, "model"), P("model", None)),
         out_specs=P(None, "model")))(x, w)
     np.testing.assert_allclose(np.asarray(out), np.asarray(x @ w),
