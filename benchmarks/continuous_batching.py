@@ -21,6 +21,15 @@ short, a few run to the cap — the reasoning-workload shape where batch
 occupancy is the throughput lever (cf. LIMINAL / inference-scaling studies
 in PAPERS.md).
 
+A second workload measures **shared-prefix** traffic (N requests over M
+distinct prompts — the multi-turn / system-prompt shape): prefix caching
+shares a repeated prompt's full pages read-only and chunked prefill skips
+straight to the first unseen token, so TTFT and prefill FLOPs drop against
+the PR-1-style path (no sharing, whole-prompt admission).  The decode HBM
+story is reported analytically per step: the gather-then-dense path reads
+every K/V page, writes the dense copy, and reads it back (3x the pool
+bytes); the gather-fused kernel streams each page exactly once.
+
 Both engines run f32 params and f32 KV caches: XLA:CPU has no native bf16
 GEMM and re-converts bf16 buffers around every step, which would swamp the
 scheduling effect being measured here (on TPU both run bf16).
@@ -98,7 +107,8 @@ def run_continuous(model, params, arrivals, new_tokens, prompts, batch: int):
     eng = ContinuousServeEngine(
         model, params, num_slots=batch, page_size=PAGE,
         num_pages=1 + 2 * batch * -(-(PROMPT_LEN + MAX_NEW) // PAGE),
-        max_len=PROMPT_LEN + MAX_NEW, cache_dtype=jnp.float32)
+        max_len=PROMPT_LEN + MAX_NEW, cache_dtype=jnp.float32,
+        prefill_chunk=PROMPT_LEN)       # whole prompt in one chunk row
     # warmup/compile: fused step + prefill/scatter at every pow-2 admission
     # bucket the run can hit
     b = 1
@@ -115,13 +125,121 @@ def run_continuous(model, params, arrivals, new_tokens, prompts, batch: int):
     return stats.total_tokens / stats.wall, stats
 
 
-def run(batch: int = 8, n_req: int = 64, seed: int = 0) -> list[Row]:
-    model = build_model(BENCH_CONFIG)
-    params = model.init(jax.random.PRNGKey(seed))
-    params = jax.tree.map(
-        lambda a: a.astype(jnp.float32) if a.dtype == jnp.bfloat16 else a,
-        params)
+# shared-prefix workload: prompts long enough to span several pages
+SP_PROMPT_LEN = 96
+SP_PAGE = 8
+SP_MAX_NEW = 4
 
+
+def decode_hbm_rows(mean_ctx: float) -> list[Row]:
+    """Analytic decode-attention HBM traffic per generated token.
+
+    The gather-fused kernel streams each live K/V page once
+    (read-pool-only); the PR-1 gather-then-dense path reads the pool,
+    writes the dense ``(B, S, KVH, D)`` copy, and reads it back in the
+    kernel — 3x the bytes at equal context."""
+    c = BENCH_CONFIG
+    per_tok = 2 * mean_ctx * c.n_kv_heads * c.hd * 4 * c.n_layers  # K+V, f32
+    fused = per_tok
+    gather_dense = 3 * per_tok
+    return [
+        Row("ours:serving", "decode HBM bytes/token (gather-fused)",
+            fused / 1e6, None, "MB",
+            f"mean ctx {mean_ctx:.0f}, read each K/V page once"),
+        Row("ours:serving", "decode HBM bytes/token (gather-then-dense)",
+            gather_dense / 1e6, None, "MB",
+            "PR-1 path: read pool + write dense + read dense"),
+        Row("ours:serving", "fused decode HBM reduction", 3.0, None, "x",
+            "paper's KV-stream argument: no dense intermediate"),
+    ]
+
+
+def run_shared_prefix(model, params, batch: int, n_req: int,
+                      n_prompts: int, seed: int) -> list[Row]:
+    """N requests over M distinct prompts: prefix caching + chunked prefill
+    vs the PR-1-style path (no sharing, whole-prompt admission)."""
+    max_len = SP_PROMPT_LEN + SP_MAX_NEW
+    num_pages = 1 + 2 * batch * -(-max_len // SP_PAGE)
+    rng = np.random.default_rng(seed)
+    prompts = rng.integers(0, BENCH_CONFIG.vocab_size,
+                           (n_prompts, SP_PROMPT_LEN)).astype(np.int32)
+    picks = np.arange(n_req) % n_prompts
+
+    def make_engine(prefix: bool):
+        return ContinuousServeEngine(
+            model, params, num_slots=batch, page_size=SP_PAGE,
+            num_pages=num_pages, max_len=max_len, cache_dtype=jnp.float32,
+            prefill_chunk=4 * SP_PAGE if prefix else SP_PROMPT_LEN,
+            enable_prefix_cache=prefix)
+
+    def warm(eng):
+        # compile every pow-2 prefill-chunk bucket + the decode step (each
+        # engine instance has its own jit caches, so warm per engine); the
+        # staggered arrivals make later warm requests hit the prefix index,
+        # compiling the short post-hit chunk width too
+        b = 1
+        while b <= batch:
+            eng.run([Request(rid=-1000 * b - i, prompt=prompts[i % n_prompts],
+                             max_new_tokens=2, arrival_time=0.2 * i)
+                     for i in range(b)])
+            b *= 2
+
+    # calibrate arrival gaps to a decode step so prompts repeat while the
+    # trace is still live (the regime prefix caching targets)
+    probe_eng = make_engine(True)
+    warm(probe_eng)
+    t0 = time.monotonic()
+    probe_eng.run([Request(rid=-99, prompt=prompts[0], max_new_tokens=8)])
+    step_s = (time.monotonic() - t0) / 8
+
+    arrivals = np.cumsum(rng.exponential(8 * step_s, n_req))
+
+    def trace():
+        # fresh Request objects (they're mutable), same arrival trace
+        return [Request(rid=i, prompt=prompts[picks[i]],
+                        max_new_tokens=SP_MAX_NEW,
+                        arrival_time=float(arrivals[i]))
+                for i in range(n_req)]
+
+    results = {}
+    for name, prefix in (("prefix+chunked", True), ("pr1-style", False)):
+        eng = make_engine(prefix)
+        warm(eng)
+        # best-of-2: wall-clock serving on a shared machine — keep the
+        # least-interfered rep (same arrival trace both times)
+        results[name] = min((eng.run(trace()) for _ in range(2)),
+                            key=lambda s: s.ttft_quantiles()[0])
+
+    sp, s1 = results["prefix+chunked"], results["pr1-style"]
+    p50, p99, pmean = sp.ttft_quantiles()
+    q50, q99, qmean = s1.ttft_quantiles()
+    mean_ctx = SP_PROMPT_LEN + SP_MAX_NEW / 2
+    rows = [
+        Row("ours:prefix", "prefix-cache hit rate", sp.prefix_hit_rate,
+            None, "", f"{n_req} requests over {n_prompts} prompts"),
+        Row("ours:prefix", "prefill tokens computed (prefix+chunked)",
+            sp.prefill_tokens, None, "",
+            f"of {sp.prompt_tokens} admitted ({sp.chunks} chunks)"),
+        Row("ours:prefix", "prefill tokens computed (pr1-style)",
+            s1.prefill_tokens, None, "", f"of {s1.prompt_tokens} admitted"),
+        Row("ours:prefix", "prefill FLOPs saved",
+            1.0 - sp.prefill_tokens / max(s1.prefill_tokens, 1), None, "",
+            "fraction of prompt compute skipped via shared pages"),
+        Row("ours:prefix", "TTFT p50 (prefix+chunked)", p50 * 1e3, None, "ms",
+            f"vs {q50 * 1e3:.1f}ms pr1-style"),
+        Row("ours:prefix", "TTFT p99 (prefix+chunked)", p99 * 1e3, None, "ms",
+            f"vs {q99 * 1e3:.1f}ms pr1-style (admission interleaves with "
+            "decode, so the running batch never stalls)"),
+        Row("ours:prefix", "TTFT mean (prefix+chunked)", pmean * 1e3, None,
+            "ms", f"vs {qmean * 1e3:.1f}ms pr1-style"),
+        Row("ours:prefix", "TTFT p50 speedup", q50 / max(p50, 1e-9), None, "x",
+            "prefix reuse skips shared full blocks"),
+    ]
+    return rows + decode_hbm_rows(mean_ctx)
+
+
+def run(model, params, batch: int = 8, n_req: int = 64,
+        seed: int = 0) -> list[Row]:
     # Calibrate the arrival rate to the hardware: mean interarrival = one
     # fused decode step, i.e. arrivals stagger at decode granularity (the
     # regime continuous batching targets) without starving either engine
@@ -168,9 +286,23 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--prompts", type=int, default=0,
+                    help="distinct prompts for the shared-prefix workload "
+                         "(default requests // 4)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--skip-throughput", action="store_true",
+                    help="run only the shared-prefix workload (faster)")
     args = ap.parse_args(argv)
-    rows = run(args.batch, args.requests, args.seed)
+    model = build_model(BENCH_CONFIG)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    params = jax.tree.map(
+        lambda a: a.astype(jnp.float32) if a.dtype == jnp.bfloat16 else a,
+        params)
+    rows = [] if args.skip_throughput else run(model, params, args.batch,
+                                               args.requests, args.seed)
+    rows += run_shared_prefix(model, params, args.batch, args.requests,
+                              args.prompts or max(args.requests // 4, 1),
+                              args.seed)
     for r in rows:
         print(r.render())
     dump(rows, "continuous_batching")

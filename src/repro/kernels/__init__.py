@@ -2,3 +2,10 @@
    mxfp4_vmm        — Stream Decoder + TMAC stripe VMM (paper SSV, Fig 7)
    decode_attention — KV$-streaming flash-decode GQA (the memory-bound SDPA phase)
 Each has kernel.py (pallas_call + BlockSpec), ops.py (jit'd wrapper), ref.py (jnp oracle)."""
+import jax
+
+
+def on_cpu() -> bool:
+    """True when the default backend is CPU — kernels then either take the
+    jnp oracle path or run in (slow) interpret mode, depending on the op."""
+    return jax.default_backend() == "cpu"

@@ -1,17 +1,14 @@
 """Public op wrappers for the decode-attention kernel (dense and paged)."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
+from repro.kernels import on_cpu
 from repro.kernels.decode_attention.kernel import decode_attention
+from repro.kernels.decode_attention.paged_kernel import paged_decode_attention
 from repro.kernels.decode_attention.ref import (
-    decode_attention_ref, gather_pages, paged_decode_attention_ref,
+    decode_attention_ref, paged_decode_attention_ref,
 )
-
-
-def _on_cpu() -> bool:
-    return jax.default_backend() == "cpu"
 
 
 def gqa_decode_attention(q, k_cache, v_cache, cur_len, *, block_s: int = 512):
@@ -22,28 +19,32 @@ def gqa_decode_attention(q, k_cache, v_cache, cur_len, *, block_s: int = 512):
     if s % bs != 0 or q.shape[1] % k_cache.shape[2] != 0:
         return decode_attention_ref(q, k_cache, v_cache, cur_len)
     return decode_attention(q, k_cache, v_cache, cur_len, block_s=bs,
-                            interpret=_on_cpu())
+                            interpret=on_cpu())
 
 
 def paged_gqa_decode_attention(q, k_pages, v_pages, page_table, pos, *,
-                               window=None, block_s: int = 512):
-    """Paged decode attention: gather K/V through the page table into a
-    position-ordered dense view, then run the flash-decode kernel over it.
+                               window=None, impl: str = "auto"):
+    """Paged single-token decode attention behind one of two impls:
 
-    The gather is the HBM-stream half of the paper's decode SDPA (page
-    granularity keeps the stream contiguous per block); the kernel half is
-    unchanged, so the paged path inherits the dense kernel's tiling.  With
-    ``window=None`` validity is a per-row prefix (``pos + 1`` entries), the
-    layout the kernel's ``cur_len`` masking expects; windowed callers fall
-    back to the masked oracle.
+      * ``"fused"``     — the gather-fused Pallas kernel: the page table
+        drives the grid, each K/V page streams HBM->VMEM straight into the
+        flash-decode accumulator.  No dense ``(B, S, KVH, D)`` intermediate.
+      * ``"reference"`` — gather-then-dense jnp oracle; the bit-exact
+        counterpart of the dense serve path.
+
+    ``"auto"`` takes the oracle on CPU (where the fused kernel would run in
+    slow interpret mode, and token-exactness with the dense engine is the
+    test contract) and the fused kernel on accelerators.  Tests exercise
+    the fused kernel on CPU explicitly via ``impl="fused"`` +
+    ``interpret=True`` inside ``paged_decode_attention``.
     """
-    if window is not None or _on_cpu():
-        # windowed masks need the oracle; on CPU the kernel would run in
-        # (slow) interpret mode and the oracle is also the bit-exact
-        # counterpart of the dense serve path
+    if impl == "auto":
+        impl = "reference" if on_cpu() else "fused"
+    if impl == "reference":
         return paged_decode_attention_ref(q, k_pages, v_pages, page_table,
                                           pos, window=window)
-    k = gather_pages(k_pages, page_table)
-    v = gather_pages(v_pages, page_table)
-    cur_len = (pos + 1).astype(jnp.int32)
-    return gqa_decode_attention(q, k, v, cur_len, block_s=block_s)
+    if impl != "fused":
+        raise ValueError(f"impl={impl!r} (want 'auto', 'fused' or 'reference')")
+    return paged_decode_attention(q, k_pages, v_pages, page_table,
+                                  pos.astype(jnp.int32), window=window,
+                                  interpret=on_cpu())

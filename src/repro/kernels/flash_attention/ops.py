@@ -7,15 +7,11 @@ back to the jnp oracle.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
+from repro.kernels import on_cpu
 from repro.kernels.flash_attention.kernel import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
-
-
-def _on_cpu() -> bool:
-    return jax.default_backend() == "cpu"
 
 
 def gqa_flash_attention(q, k, v, *, causal: bool = True,
@@ -35,5 +31,5 @@ def gqa_flash_attention(q, k, v, *, causal: bool = True,
         out = flash_attention_ref(qt, kt, vt, causal=causal)
     else:
         out = flash_attention(qt, kt, vt, block_q=bq, block_k=bk,
-                              causal=causal, interpret=_on_cpu())
+                              causal=causal, interpret=on_cpu())
     return out.reshape(b, h, sq, dv).transpose(0, 2, 1, 3)

@@ -7,16 +7,12 @@ tiling can't cover (tiny smoke configs).
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.quant.formats import MX_BLOCK, PackedMXFP4
+from repro.kernels import on_cpu
 from repro.kernels.mxfp4_vmm.kernel import mxfp4_vmm
 from repro.kernels.mxfp4_vmm.ref import mxfp4_vmm_ref
-
-
-def _on_cpu() -> bool:
-    return jax.default_backend() == "cpu"
 
 
 def mxfp4_matmul(x: jnp.ndarray, w: PackedMXFP4, *,
@@ -33,5 +29,5 @@ def mxfp4_matmul(x: jnp.ndarray, w: PackedMXFP4, *,
         out = mxfp4_vmm_ref(x2, w.codes, w.scales)
     else:
         out = mxfp4_vmm(x2, w.codes, w.scales, block_n=bn, block_k=bk,
-                        interpret=_on_cpu())
+                        interpret=on_cpu())
     return out.reshape(*lead, n).astype(out_dtype)

@@ -7,10 +7,16 @@ KV cache: requests arrive as a Poisson process (``--arrival-rate`` req/s)
 and are admitted into freed decode slots without recompiling.  Optionally
 runs speculative decoding (paper Fig 14 setup) with a reduced draft model.
 
+Continuous admission runs **chunked prefill** (``--prefill-chunk`` tokens
+per iteration per request) interleaved with decode, and shares prompt
+prefixes through the page pool's prefix index (``--num-prompts`` distinct
+prompts over ``--num-requests`` requests exercises the sharing;
+``--no-prefix-cache`` disables it).
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b --reduced \
       --batch 4 --prompt-len 64 --max-new 32 [--speculative]
   PYTHONPATH=src python -m repro.launch.serve --continuous \
-      --num-requests 16 --arrival-rate 50 --batch 4
+      --num-requests 16 --arrival-rate 50 --batch 4 --num-prompts 4
 """
 from __future__ import annotations
 
@@ -49,6 +55,14 @@ def main(argv=None) -> int:
                     help="total requests for --continuous (default 3x batch)")
     ap.add_argument("--page-size", type=int, default=16,
                     help="KV page size in tokens for --continuous")
+    ap.add_argument("--prefill-chunk", type=int, default=64,
+                    help="prefill chunk size in tokens for --continuous")
+    ap.add_argument("--num-prompts", type=int, default=0,
+                    help="distinct prompts for --continuous (0 = all "
+                         "distinct; lower values share prefixes)")
+    ap.add_argument("--no-prefix-cache", dest="prefix_cache",
+                    action="store_false", default=True,
+                    help="disable prompt-prefix page sharing")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -82,10 +96,13 @@ def main(argv=None) -> int:
             gaps = (rng.exponential(1.0 / args.arrival_rate, n_req)
                     if args.arrival_rate > 0 else np.zeros(n_req))
             arrivals = np.cumsum(gaps)
-            prompts = np.asarray(jax.random.randint(
-                jax.random.fold_in(key, 4), (n_req, args.prompt_len), 0,
+            n_distinct = args.num_prompts or n_req
+            pool_prompts = np.asarray(jax.random.randint(
+                jax.random.fold_in(key, 4), (n_distinct, args.prompt_len), 0,
                 cfg.vocab_size))
-            reqs = [Request(rid=i, prompt=prompts[i],
+            rng_pick = np.random.default_rng(args.seed + 1)
+            picks = rng_pick.integers(0, n_distinct, n_req)
+            reqs = [Request(rid=i, prompt=pool_prompts[picks[i]],
                             max_new_tokens=args.max_new,
                             arrival_time=float(arrivals[i]))
                     for i in range(n_req)]
@@ -93,7 +110,9 @@ def main(argv=None) -> int:
                 model, params, num_slots=args.batch,
                 page_size=args.page_size,
                 num_pages=1 + args.batch * -(-max_len // args.page_size) * 2,
-                max_len=max_len, temperature=args.temperature)
+                max_len=max_len, temperature=args.temperature,
+                prefill_chunk=args.prefill_chunk,
+                enable_prefix_cache=args.prefix_cache)
             t0 = time.time()
             stats = eng.run(reqs, key=key)
             dt = time.time() - t0
@@ -103,6 +122,17 @@ def main(argv=None) -> int:
                   f"preemptions={stats.preemptions}")
             print(f"tokens={stats.total_tokens} wall={dt:.2f}s "
                   f"({stats.total_tokens / dt:.1f} tok/s incl. compile)")
+            print(f"prefill: {stats.chunks} chunks, "
+                  f"{stats.prefill_tokens}/{stats.prompt_tokens} prompt "
+                  f"tokens computed, prefix hit rate "
+                  f"{stats.prefix_hit_rate:.2f}, cow={stats.cow_events}")
+            q = stats.ttft_quantiles()
+            if q is not None:
+                print(f"ttft p50={q[0] * 1e3:.1f}ms p99={q[1] * 1e3:.1f}ms")
+            per_req = " ".join(
+                f"r{rid}:p{st['preemptions']}/c{st['chunks']}"
+                for rid, st in sorted(stats.per_request.items()))
+            print(f"per-request preemptions/chunks: {per_req}")
             print("sample:", stats.results[0][:16].tolist())
             return 0
         if args.speculative:

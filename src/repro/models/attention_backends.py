@@ -1,0 +1,315 @@
+"""Attention-backend registry: the single seam between block kinds and
+attention implementations.
+
+Each backend bundles, for one attention family, everything the model
+assembly and the serving runtime need to know:
+
+  * parameter / cache / page-pool constructors (the **cache layout**);
+  * the dense apply paths (forward / prefill / decode);
+  * the paged serve paths (single-token ``decode_paged`` against the page
+    pools, and ``prefill_chunk_paged`` for chunked admission);
+  * the **mask families** each path supports (``"prefix"`` — causal over
+    the whole cache — and/or ``"sliding"``).
+
+``model.py`` dispatches every block through ``backend_for_kind`` instead of
+string-prefix branching, and ``runtime/engine.py`` stays entirely
+layout-agnostic (pools are opaque pytrees whose leaves all carry a leading
+page axis).  Adding a paged layout for a new family — ring pages for SWA,
+SSM state admission — means registering a backend, not editing the engine.
+
+The paged decode kernels behind the GQA backend live in
+``kernels/decode_attention`` (gather-fused Pallas kernel on accelerators,
+gather-then-dense oracle on CPU); MLA's absorbed-matmul latent decode is
+einsum-based and shares the same page pools and tables.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.common import NEG_INF, ModelConfig, blocked_attention
+from repro.kernels.decode_attention.ref import gather_pages, paged_valid_mask
+
+
+# ---------------------------------------------------------------------------
+# Backend descriptor + registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionBackend:
+    """One attention family's implementations and cache layout."""
+    name: str
+    paged_leaf_keys: tuple[str, ...]        # pool leaves with a token axis
+    mask_families: tuple[str, ...]          # dense paths
+    paged_mask_families: tuple[str, ...]    # paged paths (no "sliding" yet)
+    init: Callable[..., dict]
+    init_cache: Callable[..., dict]
+    forward: Callable[..., Any]
+    prefill: Callable[..., Any]
+    decode: Callable[..., Any]
+    init_page_pool: Callable[..., dict] | None = None
+    decode_paged: Callable[..., Any] | None = None
+    prefill_chunk_paged: Callable[..., Any] | None = None
+
+    @property
+    def supports_paged(self) -> bool:
+        return self.init_page_pool is not None
+
+
+_REGISTRY: dict[str, AttentionBackend] = {}
+
+# block kind -> backend name; kinds without attention (ssm) map to None
+KIND_BACKEND: dict[str, str | None] = {
+    "attn_dense": "gqa",
+    "attn_moe": "gqa",
+    "hybrid": "gqa",          # the attention half; SSM state is separate
+    "mla_dense": "mla",
+    "mla_moe": "mla",
+    "ssm": None,
+}
+
+
+def register_backend(backend: AttentionBackend) -> AttentionBackend:
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def get_backend(name: str) -> AttentionBackend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown attention backend {name!r}; "
+                       f"registered: {sorted(_REGISTRY)}") from None
+
+
+def backend_for_kind(kind: str) -> AttentionBackend | None:
+    try:
+        name = KIND_BACKEND[kind]
+    except KeyError:
+        raise ValueError(f"unknown block kind {kind!r}") from None
+    return get_backend(name) if name else None
+
+
+# ---------------------------------------------------------------------------
+# Paged helpers shared by the backends
+# ---------------------------------------------------------------------------
+
+
+def scatter_token(pool_leaf: jnp.ndarray, vals: jnp.ndarray, page_table,
+                  pos) -> jnp.ndarray:
+    """Scatter one token per slot: vals (B, ...) at per-slot position pos."""
+    b = vals.shape[0]
+    page = pool_leaf.shape[1]
+    blk, off = pos // page, pos % page
+    phys = page_table[jnp.arange(b), blk]
+    return pool_leaf.at[phys, off].set(vals.astype(pool_leaf.dtype))
+
+
+def scatter_chunk(pool_leaf: jnp.ndarray, vals: jnp.ndarray, page_table,
+                  positions, ok) -> jnp.ndarray:
+    """Scatter a chunk of tokens per slot through the page table.
+
+    vals: (B, C, ...); positions: (B, C) absolute; ok: (B, C) — entries with
+    ``ok=False`` (padding rows / the tail of a short last chunk) are
+    redirected to the scratch page so live pages are never corrupted."""
+    b, c = positions.shape
+    page = pool_leaf.shape[1]
+    okf = ok.reshape(-1)
+    pos_f = jnp.where(okf, positions.reshape(-1), 0)
+    bidx = jnp.repeat(jnp.arange(b), c)
+    phys = jnp.where(okf, page_table[bidx, pos_f // page], 0)
+    off = jnp.where(okf, pos_f % page, 0)
+    flat = vals.reshape((b * c,) + vals.shape[2:]).astype(pool_leaf.dtype)
+    return pool_leaf.at[phys, off].set(flat)
+
+
+# ---------------------------------------------------------------------------
+# GQA backend: paged decode + chunked paged prefill
+# ---------------------------------------------------------------------------
+
+
+def init_attn_page_pool(cfg: ModelConfig, num_pages: int, page_size: int,
+                        dtype=jnp.bfloat16) -> dict:
+    """Physical K/V page pool for one layer: ``(P, page, KVH, HD)``.
+
+    ``dtype``: bf16 on TPU; CPU serving wants f32 (XLA:CPU re-converts
+    bf16 pools to f32 around every gather, doubling the step time)."""
+    shape = (num_pages, page_size, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attn_decode_paged(p: dict, x: jnp.ndarray, cfg: ModelConfig, pool: dict,
+                      page_table, pos, *, window=None) -> tuple[jnp.ndarray, dict]:
+    """One-token step against a paged cache.
+
+    x: (B, D) slot tokens; pos: (B,) int32 per-slot positions (ragged —
+    this is the whole point of continuous batching); page_table:
+    (B, n_blocks) int32.  The new k/v is scattered into the slot's current
+    page before the attention, mirroring the dense write-then-attend order;
+    the attention itself streams pages through the gather-fused kernel
+    (``impl="auto"``: oracle on CPU, fused Pallas kernel on accelerators).
+    """
+    b, _ = x.shape
+    h, hd = cfg.n_heads, cfg.hd
+    positions = pos[:, None]                              # (B, 1) ragged RoPE
+    q, k, v = layers._qkv(p, x[:, None, :], cfg, positions)
+    new_k = scatter_token(pool["k"], k[:, 0], page_table, pos)
+    new_v = scatter_token(pool["v"], v[:, 0], page_table, pos)
+    from repro.kernels.decode_attention.ops import paged_gqa_decode_attention
+    out = paged_gqa_decode_attention(q[:, 0], new_k, new_v, page_table, pos,
+                                     window=window)
+    out = out.reshape(b, h * hd) @ p["wo"]
+    return out, {"k": new_k, "v": new_v}
+
+
+def attn_prefill_chunk_paged(p: dict, x: jnp.ndarray, cfg: ModelConfig,
+                             pool: dict, page_table, start, valid, *,
+                             window=None) -> tuple[jnp.ndarray, dict]:
+    """One prefill chunk against the paged cache.
+
+    x: (B, C, D) chunk hidden states; start: (B,) absolute position of
+    x[:, 0]; valid: (B,) number of real tokens in the chunk (the rest are
+    padding).  The chunk's k/v is scattered into the slot's pages, then the
+    chunk queries attend over the gathered view — earlier chunks (and any
+    prefix-cache pages shared from another request) are already resident,
+    so admission work is proportional to the *unseen* suffix only.
+    """
+    b, c, _ = x.shape
+    h, hd = cfg.n_heads, cfg.hd
+    positions = start[:, None] + jnp.arange(c)[None, :]
+    q, k, v = layers._qkv(p, x, cfg, positions)
+    ok = jnp.arange(c)[None, :] < valid[:, None]
+    new_k = scatter_chunk(pool["k"], k, page_table, positions, ok)
+    new_v = scatter_chunk(pool["v"], v, page_table, positions, ok)
+    k_d = gather_pages(new_k, page_table)
+    v_d = gather_pages(new_v, page_table)
+    out = blocked_attention(q, k_d, v_d, causal=cfg.causal, window=window,
+                            q_offset=start)
+    out = out.reshape(b, c, h * hd) @ p["wo"]
+    return out, {"k": new_k, "v": new_v}
+
+
+# ---------------------------------------------------------------------------
+# MLA backend: absorbed-matmul latent decode + chunked paged prefill
+# ---------------------------------------------------------------------------
+
+
+def init_mla_page_pool(cfg: ModelConfig, num_pages: int, page_size: int,
+                       dtype=jnp.bfloat16) -> dict:
+    """Latent page pool for one MLA layer (pages hold c_kv + shared k_rope)."""
+    return {
+        "c_kv": jnp.zeros((num_pages, page_size, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((num_pages, page_size, cfg.rope_head_dim), dtype),
+    }
+
+
+def mla_decode_paged(p, x, cfg: ModelConfig, pool: dict, page_table, pos, *,
+                     window=None):
+    """Absorbed-matmul MLA decode against a paged latent cache.
+
+    Same math as ``layers.mla_decode`` with the latent/k_rope streams
+    gathered through the page table and a per-slot (ragged) position vector.
+    """
+    assert window is None, "MLA layers are full-attention"
+    b, _ = x.shape
+    h, hd, rhd, vhd, r = (cfg.n_heads, cfg.hd, cfg.rope_head_dim, cfg.v_hd,
+                          cfg.kv_lora_rank)
+    positions = pos[:, None]
+    q_nope, q_rope, c_kv, k_rope = layers._mla_qc(p, x[:, None, :], cfg,
+                                                  positions)
+    page = pool["c_kv"].shape[1]
+    new_c = scatter_token(pool["c_kv"], c_kv[:, 0], page_table, pos)
+    new_kr = scatter_token(pool["k_rope"], k_rope[:, 0], page_table, pos)
+
+    c_d = gather_pages(new_c, page_table)                  # (B, S, r)
+    kr_d = gather_pages(new_kr, page_table)                # (B, S, rhd)
+    w_uk = p["w_uk"].reshape(r, h, hd)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    q_eff = jnp.concatenate([q_lat, q_rope[:, 0].astype(jnp.float32)], axis=-1)
+    k_eff = jnp.concatenate([c_d.astype(jnp.float32),
+                             kr_d.astype(jnp.float32)], axis=-1)
+    scale = 1.0 / math.sqrt(hd + rhd)
+    s_ = jnp.einsum("bhr,bsr->bhs", q_eff, k_eff) * scale
+    valid = paged_valid_mask(page_table, page, pos)        # (B, S)
+    s_ = jnp.where(valid[:, None, :], s_, NEG_INF)
+    pattn = jax.nn.softmax(s_, axis=-1)
+    ctx = jnp.einsum("bhs,bsr->bhr", pattn, c_d.astype(jnp.float32))
+    w_uv = p["w_uv"].reshape(r, h, vhd)
+    out = jnp.einsum("bhr,rhv->bhv", ctx, w_uv.astype(jnp.float32))
+    out = out.reshape(b, h * vhd).astype(x.dtype) @ p["wo"]
+    return out, {"c_kv": new_c, "k_rope": new_kr}
+
+
+def mla_prefill_chunk_paged(p, x, cfg: ModelConfig, pool: dict, page_table,
+                            start, valid, *, window=None):
+    """One MLA prefill chunk: scatter latents, attend via per-head expansion
+    of the gathered latent view (the prefill-style path of ``mla_forward``,
+    continued at per-slot offsets)."""
+    assert window is None, "MLA layers are full-attention"
+    b, c, _ = x.shape
+    h, hd, rhd, vhd = cfg.n_heads, cfg.hd, cfg.rope_head_dim, cfg.v_hd
+    positions = start[:, None] + jnp.arange(c)[None, :]
+    q_nope, q_rope, c_kv, k_rope = layers._mla_qc(p, x, cfg, positions)
+    ok = jnp.arange(c)[None, :] < valid[:, None]
+    new_c = scatter_chunk(pool["c_kv"], c_kv, page_table, positions, ok)
+    new_kr = scatter_chunk(pool["k_rope"], k_rope, page_table, positions, ok)
+    c_d = gather_pages(new_c, page_table)                  # (B, S, r)
+    kr_d = gather_pages(new_kr, page_table)
+    s_len = c_d.shape[1]
+    k_nope = (c_d @ p["w_uk"]).reshape(b, s_len, h, hd)
+    v_d = (c_d @ p["w_uv"]).reshape(b, s_len, h, vhd)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(kr_d[:, :, None, :],
+                                                  (b, s_len, h, rhd))], axis=-1)
+    scale = 1.0 / math.sqrt(hd + rhd)
+    out = blocked_attention(q, k, v_d, causal=cfg.causal, scale=scale,
+                            q_offset=start)
+    out = out.reshape(b, c, h * vhd) @ p["wo"]
+    return out, {"c_kv": new_c, "k_rope": new_kr}
+
+
+# ---------------------------------------------------------------------------
+# Registration
+# ---------------------------------------------------------------------------
+
+
+GQA = register_backend(AttentionBackend(
+    name="gqa",
+    paged_leaf_keys=("k", "v"),
+    mask_families=("prefix", "sliding"),
+    paged_mask_families=("prefix",),      # ring pages for SWA: future PR
+    init=layers.init_attn,
+    init_cache=layers.init_attn_cache,
+    forward=layers.attn_forward,
+    prefill=layers.attn_prefill,
+    decode=layers.attn_decode,
+    init_page_pool=init_attn_page_pool,
+    decode_paged=attn_decode_paged,
+    prefill_chunk_paged=attn_prefill_chunk_paged,
+))
+
+MLA = register_backend(AttentionBackend(
+    name="mla",
+    paged_leaf_keys=("c_kv", "k_rope"),
+    mask_families=("prefix",),
+    paged_mask_families=("prefix",),
+    init=layers.init_mla,
+    init_cache=lambda cfg, batch, max_len, window=None, dtype=jnp.bfloat16:
+        layers.init_mla_cache(cfg, batch, max_len, dtype=dtype),
+    forward=lambda p, x, cfg, *, window=None, positions=None:
+        layers.mla_forward(p, x, cfg, positions=positions),
+    prefill=lambda p, x, cfg, cache, *, window=None:
+        layers.mla_prefill(p, x, cfg, cache),
+    decode=lambda p, x, cfg, cache, cur_pos, *, window=None:
+        layers.mla_decode(p, x, cfg, cache, cur_pos),
+    init_page_pool=init_mla_page_pool,
+    decode_paged=mla_decode_paged,
+    prefill_chunk_paged=mla_prefill_chunk_paged,
+))

@@ -220,7 +220,7 @@ def blocked_attention(
     *,
     causal: bool = True,
     window: int | None = None,
-    q_offset: int = 0,
+    q_offset: int | jnp.ndarray = 0,
     q_block: int = 512,
     kv_block: int = 512,
     scale: float | None = None,
@@ -228,9 +228,12 @@ def blocked_attention(
     """Online-softmax attention over KV blocks; never builds (Sq x Skv).
 
     ``q_offset`` is the absolute position of q[:, 0] (for prefill
-    continuation / decode).  fp32 softmax state (HP-VOPs analogue).
+    continuation / decode): a scalar, or a ``(B,)`` array for ragged
+    continuation (chunked paged prefill, where every slot resumes at its
+    own position).  fp32 softmax state (HP-VOPs analogue).
     """
     b, sq, h, d = q.shape
+    per_row = getattr(q_offset, "ndim", 0) == 1
     _, skv, kvh, dv = v.shape[0], v.shape[1], v.shape[2], v.shape[3]
     scale = scale if scale is not None else 1.0 / math.sqrt(d)
 
@@ -253,19 +256,38 @@ def blocked_attention(
     kr = k.reshape(b, nk, kb, h, d).astype(jnp.float32)
     vr = v.reshape(b, nk, kb, h, dv).astype(jnp.float32)
 
-    q_pos = q_offset + jnp.arange(sq_p).reshape(nq, qb)
+    if per_row:
+        # (B, nq, qb) absolute positions, one offset per batch row
+        q_pos = (jnp.asarray(q_offset, jnp.int32)[:, None, None]
+                 + jnp.arange(sq_p).reshape(nq, qb)[None])
+    else:
+        q_pos = q_offset + jnp.arange(sq_p).reshape(nq, qb)
     k_pos = jnp.arange(skv_p).reshape(nk, kb)
     kv_valid = (jnp.arange(skv_p) < skv).reshape(nk, kb)
 
     def q_block_fn(qi, q_blk):
         # q_blk: (B, qb, H, D); scan over kv blocks
-        qp = q_pos[qi]                                     # (qb,)
+        qp = q_pos[:, qi] if per_row else q_pos[qi]        # (B, qb) | (qb,)
 
         def kv_step(carry, inp):
             m, l, acc = carry
             kj, k_blk, v_blk = inp
             kp = k_pos[kj]                                 # (kb,)
             s = jnp.einsum("bqhd,bkhd->bhqk", q_blk, k_blk) * scale
+            if per_row:
+                mask = kv_valid[kj][None, None, :]         # (1, 1, kb)
+                if causal:
+                    mask = mask & (kp[None, None, :] <= qp[:, :, None])
+                if window is not None:
+                    mask = mask & (qp[:, :, None] - kp[None, None, :] < window)
+                s = jnp.where(mask[:, None], s, NEG_INF)   # (B, 1, qb, kb)
+                m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+                p = jnp.exp(s - m_new[..., None])
+                corr = jnp.exp(m - m_new)
+                l_new = l * corr + jnp.sum(p, axis=-1)
+                acc_new = (acc * corr[..., None]
+                           + jnp.einsum("bhqk,bkhd->bhqd", p, v_blk))
+                return (m_new, l_new, acc_new), None
             mask = kv_valid[kj][None, :]                   # (1, kb)
             if causal:
                 mask = mask & (kp[None, :] <= qp[:, None])

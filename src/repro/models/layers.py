@@ -7,6 +7,10 @@ Each block kind exposes ``init_<kind>`` and three apply paths:
 
 Caches are plain dicts of arrays so they stack cleanly along a layer axis
 for ``lax.scan`` (see ``runtime.kv_cache`` for the container types).
+
+The paged (continuous-batching) apply paths live in
+``models/attention_backends.py``, which registers each family here behind
+the attention-backend registry the model assembly dispatches through.
 """
 from __future__ import annotations
 
@@ -19,9 +23,6 @@ from repro.models import common
 from repro.models.common import (
     ModelConfig, NEG_INF, apply_rope, blocked_attention, decode_attention_ref,
     dense_init, rmsnorm, split_keys, swiglu,
-)
-from repro.kernels.decode_attention.ref import (
-    gather_pages, paged_decode_attention_ref, paged_valid_mask,
 )
 from repro.parallel.hints import shard_hint
 
@@ -143,44 +144,6 @@ def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int,
     }
 
 
-# -- paged (continuous-batching) decode path --------------------------------
-
-
-def init_attn_page_pool(cfg: ModelConfig, num_pages: int, page_size: int,
-                        dtype=jnp.bfloat16) -> dict:
-    """Physical K/V page pool for one layer: ``(P, page, KVH, HD)``.
-
-    ``dtype``: bf16 on TPU; CPU serving wants f32 (XLA:CPU re-converts
-    bf16 pools to f32 around every gather, doubling the step time)."""
-    shape = (num_pages, page_size, cfg.n_kv_heads, cfg.hd)
-    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
-
-
-def attn_decode_paged(p: dict, x: jnp.ndarray, cfg: ModelConfig, pool: dict,
-                      page_table, pos, *, window=None) -> tuple[jnp.ndarray, dict]:
-    """One-token step against a paged cache.
-
-    x: (B, D) slot tokens; pos: (B,) int32 per-slot positions (ragged —
-    this is the whole point of continuous batching); page_table:
-    (B, n_blocks) int32.  The new k/v is scattered into the slot's current
-    page before the gather, mirroring the dense write-then-attend order.
-    """
-    b, _ = x.shape
-    h, hd = cfg.n_heads, cfg.hd
-    positions = pos[:, None]                              # (B, 1) ragged RoPE
-    q, k, v = _qkv(p, x[:, None, :], cfg, positions)
-    page = pool["k"].shape[1]
-    blk, off = pos // page, pos % page
-    phys = page_table[jnp.arange(b), blk]
-    new_k = pool["k"].at[phys, off].set(k[:, 0].astype(pool["k"].dtype))
-    new_v = pool["v"].at[phys, off].set(v[:, 0].astype(pool["v"].dtype))
-    from repro.kernels.decode_attention.ops import paged_gqa_decode_attention
-    out = paged_gqa_decode_attention(q[:, 0], new_k, new_v, page_table, pos,
-                                     window=window)
-    out = out.reshape(b, h * hd) @ p["wo"]
-    return out, {"k": new_k, "v": new_v}
-
-
 # ---------------------------------------------------------------------------
 # MLA (DeepSeek multi-head latent attention)
 # ---------------------------------------------------------------------------
@@ -287,53 +250,6 @@ def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int,
         "k_rope": jnp.zeros((batch, max_len, cfg.rope_head_dim), dtype),
         "slot_pos": jnp.full((max_len,), -1, jnp.int32),
     }
-
-
-def init_mla_page_pool(cfg: ModelConfig, num_pages: int, page_size: int,
-                       dtype=jnp.bfloat16) -> dict:
-    """Latent page pool for one MLA layer (pages hold c_kv + shared k_rope)."""
-    return {
-        "c_kv": jnp.zeros((num_pages, page_size, cfg.kv_lora_rank), dtype),
-        "k_rope": jnp.zeros((num_pages, page_size, cfg.rope_head_dim), dtype),
-    }
-
-
-def mla_decode_paged(p, x, cfg: ModelConfig, pool: dict, page_table, pos):
-    """Absorbed-matmul MLA decode against a paged latent cache.
-
-    Same math as ``mla_decode`` with the latent/k_rope streams gathered
-    through the page table and a per-slot (ragged) position vector.
-    """
-    b, _ = x.shape
-    h, hd, rhd, vhd, r = (cfg.n_heads, cfg.hd, cfg.rope_head_dim, cfg.v_hd,
-                          cfg.kv_lora_rank)
-    positions = pos[:, None]
-    q_nope, q_rope, c_kv, k_rope = _mla_qc(p, x[:, None, :], cfg, positions)
-    page = pool["c_kv"].shape[1]
-    blk, off = pos // page, pos % page
-    phys = page_table[jnp.arange(b), blk]
-    new_c = pool["c_kv"].at[phys, off].set(c_kv[:, 0].astype(pool["c_kv"].dtype))
-    new_kr = pool["k_rope"].at[phys, off].set(
-        k_rope[:, 0].astype(pool["k_rope"].dtype))
-
-    c_d = gather_pages(new_c, page_table)                  # (B, S, r)
-    kr_d = gather_pages(new_kr, page_table)                # (B, S, rhd)
-    w_uk = p["w_uk"].reshape(r, h, hd)
-    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
-                       w_uk.astype(jnp.float32))
-    q_eff = jnp.concatenate([q_lat, q_rope[:, 0].astype(jnp.float32)], axis=-1)
-    k_eff = jnp.concatenate([c_d.astype(jnp.float32),
-                             kr_d.astype(jnp.float32)], axis=-1)
-    scale = 1.0 / math.sqrt(hd + rhd)
-    s_ = jnp.einsum("bhr,bsr->bhs", q_eff, k_eff) * scale
-    valid = paged_valid_mask(page_table, page, pos)        # (B, S)
-    s_ = jnp.where(valid[:, None, :], s_, NEG_INF)
-    pattn = jax.nn.softmax(s_, axis=-1)
-    ctx = jnp.einsum("bhs,bsr->bhr", pattn, c_d.astype(jnp.float32))
-    w_uv = p["w_uv"].reshape(r, h, vhd)
-    out = jnp.einsum("bhr,rhv->bhv", ctx, w_uv.astype(jnp.float32))
-    out = out.reshape(b, h * vhd).astype(x.dtype) @ p["wo"]
-    return out, {"c_kv": new_c, "k_rope": new_kr}
 
 
 # ---------------------------------------------------------------------------

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import layers, moe as moe_lib, ssm as ssm_lib
+from repro.models.attention_backends import backend_for_kind
 from repro.models.common import (
     ModelConfig, count_params, dense_init, embed_init, rmsnorm, split_keys,
 )
@@ -93,22 +94,18 @@ def _init_block(kind: str, key, cfg: ModelConfig) -> dict:
     ks = split_keys(key, 4)
     d = cfg.d_model
     ln = lambda: jnp.ones((d,), jnp.float32)
-    if kind == "attn_dense":
-        return {"ln1": ln(), "attn": layers.init_attn(ks[0], cfg),
-                "ln2": ln(), "mlp": layers.init_mlp(ks[1], cfg)}
-    if kind == "attn_moe":
-        return {"ln1": ln(), "attn": layers.init_attn(ks[0], cfg),
-                "ln2": ln(), "moe": moe_lib.init_moe(ks[1], cfg)}
-    if kind == "mla_dense":
-        return {"ln1": ln(), "attn": layers.init_mla(ks[0], cfg),
-                "ln2": ln(), "mlp": layers.init_mlp(ks[1], cfg, cfg.d_ff)}
-    if kind == "mla_moe":
-        return {"ln1": ln(), "attn": layers.init_mla(ks[0], cfg),
+    be = backend_for_kind(kind)
+    if kind in ("attn_dense", "mla_dense"):
+        d_ff = cfg.d_ff if kind == "mla_dense" else None
+        return {"ln1": ln(), "attn": be.init(ks[0], cfg),
+                "ln2": ln(), "mlp": layers.init_mlp(ks[1], cfg, d_ff)}
+    if kind in ("attn_moe", "mla_moe"):
+        return {"ln1": ln(), "attn": be.init(ks[0], cfg),
                 "ln2": ln(), "moe": moe_lib.init_moe(ks[1], cfg)}
     if kind == "ssm":
         return {"ln1": ln(), "ssm": ssm_lib.init_ssm(ks[0], cfg)}
     if kind == "hybrid":
-        return {"ln1": ln(), "attn": layers.init_attn(ks[0], cfg),
+        return {"ln1": ln(), "attn": be.init(ks[0], cfg),
                 "ssm": ssm_lib.init_ssm(ks[1], cfg),
                 "attn_out_norm": ln(), "ssm_out_norm": ln(),
                 "ln2": ln(), "mlp": layers.init_mlp(ks[2], cfg)}
@@ -118,17 +115,14 @@ def _init_block(kind: str, key, cfg: ModelConfig) -> dict:
 def _init_block_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int,
                       window: int | None, dtype=None):
     dtype = dtype or jnp.bfloat16
-    if kind in ("attn_dense", "attn_moe"):
-        return layers.init_attn_cache(cfg, batch, max_len, window, dtype=dtype)
-    if kind in ("mla_dense", "mla_moe"):
-        return layers.init_mla_cache(cfg, batch, max_len, dtype=dtype)
+    be = backend_for_kind(kind)
     if kind == "ssm":
         return ssm_lib.init_ssm_state(cfg, batch)
     if kind == "hybrid":
-        return {"attn": layers.init_attn_cache(cfg, batch, max_len, window,
-                                               dtype=dtype),
+        return {"attn": be.init_cache(cfg, batch, max_len, window,
+                                      dtype=dtype),
                 "ssm": ssm_lib.init_ssm_state(cfg, batch)}
-    raise ValueError(kind)
+    return be.init_cache(cfg, batch, max_len, window, dtype=dtype)
 
 
 def _ffn(kind: str, p: dict, x, cfg: ModelConfig, moe_impl: str):
@@ -139,12 +133,13 @@ def _ffn(kind: str, p: dict, x, cfg: ModelConfig, moe_impl: str):
 
 def _block_forward(kind: str, p: dict, x, cfg: ModelConfig, window,
                    moe_impl: str):
+    be = backend_for_kind(kind)
     if kind == "ssm":
         out, _ = ssm_lib.ssm_forward(rmsnorm(x, p["ln1"], cfg.norm_eps), p["ssm"], cfg)
         return x + out
     if kind == "hybrid":
         h = rmsnorm(x, p["ln1"], cfg.norm_eps)
-        a = layers.attn_forward(p["attn"], h, cfg, window=window)
+        a = be.forward(p["attn"], h, cfg, window=window)
         s, _ = ssm_lib.ssm_forward(h, p["ssm"], cfg)
         mix = 0.5 * (rmsnorm(a, p["attn_out_norm"], cfg.norm_eps)
                      + rmsnorm(s, p["ssm_out_norm"], cfg.norm_eps))
@@ -152,10 +147,7 @@ def _block_forward(kind: str, p: dict, x, cfg: ModelConfig, window,
         x = x + layers.mlp_forward(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps))
         return x
     h = rmsnorm(x, p["ln1"], cfg.norm_eps)
-    if kind.startswith("mla"):
-        a = layers.mla_forward(p["attn"], h, cfg)
-    else:
-        a = layers.attn_forward(p["attn"], h, cfg, window=window)
+    a = be.forward(p["attn"], h, cfg, window=window)
     x = x + a
     x = x + _ffn(kind, p, rmsnorm(x, p["ln2"], cfg.norm_eps), cfg, moe_impl)
     return shard_hint(x, "act_bsd")
@@ -163,13 +155,14 @@ def _block_forward(kind: str, p: dict, x, cfg: ModelConfig, window,
 
 def _block_prefill(kind: str, p: dict, x, cfg: ModelConfig, window, cache,
                    moe_impl: str):
+    be = backend_for_kind(kind)
     if kind == "ssm":
         out, st = ssm_lib.ssm_forward(rmsnorm(x, p["ln1"], cfg.norm_eps),
                                       p["ssm"], cfg, None)
         return x + out, st
     if kind == "hybrid":
         h = rmsnorm(x, p["ln1"], cfg.norm_eps)
-        a, ac = layers.attn_prefill(p["attn"], h, cfg, cache["attn"], window=window)
+        a, ac = be.prefill(p["attn"], h, cfg, cache["attn"], window=window)
         s, sc = ssm_lib.ssm_forward(h, p["ssm"], cfg, None)
         mix = 0.5 * (rmsnorm(a, p["attn_out_norm"], cfg.norm_eps)
                      + rmsnorm(s, p["ssm_out_norm"], cfg.norm_eps))
@@ -177,10 +170,7 @@ def _block_prefill(kind: str, p: dict, x, cfg: ModelConfig, window, cache,
         x = x + layers.mlp_forward(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps))
         return x, {"attn": ac, "ssm": sc}
     h = rmsnorm(x, p["ln1"], cfg.norm_eps)
-    if kind.startswith("mla"):
-        a, c = layers.mla_prefill(p["attn"], h, cfg, cache)
-    else:
-        a, c = layers.attn_prefill(p["attn"], h, cfg, cache, window=window)
+    a, c = be.prefill(p["attn"], h, cfg, cache, window=window)
     x = x + a
     x = x + _ffn(kind, p, rmsnorm(x, p["ln2"], cfg.norm_eps), cfg, moe_impl)
     return x, c
@@ -189,51 +179,62 @@ def _block_prefill(kind: str, p: dict, x, cfg: ModelConfig, window, cache,
 def _init_block_page_pool(kind: str, cfg: ModelConfig, num_pages: int,
                           page_size: int, dtype=None):
     dtype = dtype or jnp.bfloat16
-    if kind in ("attn_dense", "attn_moe"):
-        return layers.init_attn_page_pool(cfg, num_pages, page_size,
-                                          dtype=dtype)
-    if kind in ("mla_dense", "mla_moe"):
-        return layers.init_mla_page_pool(cfg, num_pages, page_size,
-                                         dtype=dtype)
-    raise NotImplementedError(
-        f"continuous batching: no paged cache for block kind {kind!r} "
-        "(ssm/hybrid state is per-slot, not positional — future PR)")
-
-
-# Paged-cache leaf names with a token axis (scatter/gather targets); other
-# leaves (e.g. slot_pos) are dense-path bookkeeping with no paged analogue.
-_PAGED_LEAF_KEYS = ("k", "v", "c_kv", "k_rope")
+    be = backend_for_kind(kind)
+    if be is None or kind == "hybrid" or not be.supports_paged:
+        raise NotImplementedError(
+            f"continuous batching: no paged cache for block kind {kind!r} "
+            "(ssm/hybrid state is per-slot, not positional — future PR)")
+    pool = be.init_page_pool(cfg, num_pages, page_size, dtype=dtype)
+    assert set(pool) == set(be.paged_leaf_keys), \
+        (f"backend {be.name!r} pool layout {sorted(pool)} != declared "
+         f"paged_leaf_keys {sorted(be.paged_leaf_keys)}")
+    return pool
 
 
 def _block_decode_paged(kind: str, p: dict, x, cfg: ModelConfig, window,
                         pool, page_table, pos, moe_impl: str):
     """Paged analogue of ``_block_decode``: per-slot ragged positions and
-    K/V gathered through the page table.  x: (B, D)."""
-    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
-    if kind.startswith("mla"):
-        a, c = layers.mla_decode_paged(p["attn"], h, cfg, pool, page_table, pos)
-    elif kind in ("attn_dense", "attn_moe"):
-        a, c = layers.attn_decode_paged(p["attn"], h, cfg, pool, page_table,
-                                        pos, window=window)
-    else:
+    K/V streamed through the page table.  x: (B, D)."""
+    be = backend_for_kind(kind)
+    if be is None or be.decode_paged is None or kind == "hybrid":
         raise NotImplementedError(kind)
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    a, c = be.decode_paged(p["attn"], h, cfg, pool, page_table, pos,
+                           window=window)
     x = x + a
     x = x + _ffn(kind, p, rmsnorm(x[:, None, :], p["ln2"], cfg.norm_eps), cfg,
                  moe_impl)[:, 0]
     return x, c
 
 
+def _block_prefill_chunk_paged(kind: str, p: dict, x, cfg: ModelConfig,
+                               window, pool, page_table, start, valid,
+                               moe_impl: str):
+    """Paged chunked-prefill analogue of ``_block_prefill``.  x: (B, C, D);
+    start/valid: (B,) per-slot chunk offset and real-token count."""
+    be = backend_for_kind(kind)
+    if be is None or be.prefill_chunk_paged is None or kind == "hybrid":
+        raise NotImplementedError(kind)
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    a, c = be.prefill_chunk_paged(p["attn"], h, cfg, pool, page_table, start,
+                                  valid, window=window)
+    x = x + a
+    x = x + _ffn(kind, p, rmsnorm(x, p["ln2"], cfg.norm_eps), cfg, moe_impl)
+    return x, c
+
+
 def _block_decode(kind: str, p: dict, x, cfg: ModelConfig, window, cache,
                   cur_pos, moe_impl: str):
     """x: (B, D) single-token representations."""
+    be = backend_for_kind(kind)
     if kind == "ssm":
         out, st = ssm_lib.ssm_decode_step(rmsnorm(x, p["ln1"], cfg.norm_eps),
                                           p["ssm"], cfg, cache)
         return x + out, st
     if kind == "hybrid":
         h = rmsnorm(x, p["ln1"], cfg.norm_eps)
-        a, ac = layers.attn_decode(p["attn"], h, cfg, cache["attn"], cur_pos,
-                                   window=window)
+        a, ac = be.decode(p["attn"], h, cfg, cache["attn"], cur_pos,
+                          window=window)
         s, sc = ssm_lib.ssm_decode_step(h, p["ssm"], cfg, cache["ssm"])
         mix = 0.5 * (rmsnorm(a, p["attn_out_norm"], cfg.norm_eps)
                      + rmsnorm(s, p["ssm_out_norm"], cfg.norm_eps))
@@ -241,10 +242,7 @@ def _block_decode(kind: str, p: dict, x, cfg: ModelConfig, window, cache,
         x = x + layers.mlp_forward(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps))
         return x, {"attn": ac, "ssm": sc}
     h = rmsnorm(x, p["ln1"], cfg.norm_eps)
-    if kind.startswith("mla"):
-        a, c = layers.mla_decode(p["attn"], h, cfg, cache, cur_pos)
-    else:
-        a, c = layers.attn_decode(p["attn"], h, cfg, cache, cur_pos, window=window)
+    a, c = be.decode(p["attn"], h, cfg, cache, cur_pos, window=window)
     x = x + a
     x = x + _ffn(kind, p, rmsnorm(x[:, None, :], p["ln2"], cfg.norm_eps), cfg,
                  moe_impl)[:, 0]
@@ -267,6 +265,13 @@ class Model:
         self.plan = build_plan(cfg)
         self.moe_impl = moe_impl
         assert sum(len(s.kinds) * s.reps for s in self.plan) == cfg.n_layers
+        for seg in self.plan:               # windowed segments need a
+            for kind in seg.kinds:          # sliding-capable dense backend
+                be = backend_for_kind(kind)
+                if seg.window is not None and be is not None:
+                    assert "sliding" in be.mask_families, \
+                        (f"backend {be.name!r} has no sliding mask for "
+                         f"windowed segment kind {kind!r}")
 
     # ----- init -----
     def init(self, key) -> dict:
@@ -402,7 +407,10 @@ class Model:
         cfg = self.cfg
         pools = []
         for seg in self.plan:
-            if seg.window is not None:
+            if seg.window is not None and any(
+                    (be := backend_for_kind(k)) is None
+                    or "sliding" not in be.paged_mask_families
+                    for k in seg.kinds):
                 raise NotImplementedError(
                     "continuous batching over sliding-window segments needs "
                     "ring-aware pages — future PR")
@@ -419,40 +427,52 @@ class Model:
             pools.append(tuple(kinds_pools))
         return pools
 
-    def scatter_prefill_cache(self, pools: list, dense_cache: list,
-                              pt_rows: jnp.ndarray) -> list:
-        """Scatter a dense prefill cache into the page pools.
+    def prefill_chunk_paged(self, params: dict, tokens: jnp.ndarray,
+                            pools: list, page_table: jnp.ndarray,
+                            start: jnp.ndarray, valid: jnp.ndarray
+                            ) -> tuple[jnp.ndarray, list]:
+        """One fixed-size prefill chunk over a slot batch, straight into the
+        page pools.
 
-        ``dense_cache`` comes from ``prefill`` with ``init_cache(b, L)``
-        where L is a page multiple; ``pt_rows``: (b, L // page_size) int32
-        physical page ids, one row per prefilled request.  Rows of padded
-        requests (and unallocated tail entries) must point at the scratch
-        page — they receive the padded garbage, live pages stay exclusive."""
-        flat = pt_rows.reshape(-1)
+        tokens: (B, C) int32 chunk tokens (rows padded past ``valid``);
+        start: (B,) int32 absolute position of tokens[:, 0]; valid: (B,)
+        int32 number of real tokens in each row (0 for padding rows, whose
+        page-table rows must point at the scratch page).  Each chunk
+        attends over the pages already written for its slot — earlier
+        chunks, or prefix-cache pages shared from another request — so long
+        prompts prefill incrementally, interleaved with decode iterations.
+
+        Returns per-row logits at the row's last valid position (the
+        first-token logits once a request's final chunk lands) and the
+        updated pools."""
+        cfg = self.cfg
+        assert cfg.frontend is None, "chunked paged prefill serves tokens only"
+        x = params["embed"][tokens]                        # (B, C, D)
+        x = shard_hint(x, "act_bsd")
         new_pools = []
         for si, seg in enumerate(self.plan):
-            kinds_new = []
-            for ki, _ in enumerate(seg.kinds):
-                pool, dense = pools[si][ki], dense_cache[si][ki]
-                out = dict(pool)
-                for key in _PAGED_LEAF_KEYS:
-                    if key not in pool:
-                        continue
-                    pl, dl = pool[key], dense[key]
-                    page = pl.shape[1] if seg.reps == 1 else pl.shape[2]
-                    if seg.reps == 1:
-                        # dense (b, L, ...) -> (b * n_blocks, page, ...)
-                        blocks = dl.reshape(
-                            (-1, page) + dl.shape[2:]).astype(pl.dtype)
-                        out[key] = pl.at[flat].set(blocks)
-                    else:
-                        # dense (reps, b, L, ...) -> (reps, b*n_blocks, page, ...)
-                        blocks = dl.reshape(
-                            (dl.shape[0], -1, page) + dl.shape[3:]).astype(pl.dtype)
-                        out[key] = pl.at[:, flat].set(blocks)
-                kinds_new.append(out)
-            new_pools.append(tuple(kinds_new))
-        return new_pools
+            stack = params["stacks"][si]
+
+            def seg_step(xc, layer, seg=seg):
+                ps, cs = layer
+                new_cs = []
+                for kind, p, c in zip(seg.kinds, ps, cs):
+                    xc, nc = _block_prefill_chunk_paged(
+                        kind, p, xc, cfg, seg.window, c, page_table, start,
+                        valid, self.moe_impl)
+                    new_cs.append(nc)
+                return xc, tuple(new_cs)
+
+            if seg.reps == 1:
+                x, nc = seg_step(x, (stack, pools[si]))
+            else:
+                x, nc = jax.lax.scan(seg_step, x, (stack, pools[si]))
+            new_pools.append(nc)
+        b, c = tokens.shape
+        last = jnp.clip(valid - 1, 0, c - 1)
+        x_last = x[jnp.arange(b), last]
+        logits = self._head(params, x_last[:, None, :])[:, 0]
+        return logits, new_pools
 
     def decode_step_paged(self, params: dict, tokens: jnp.ndarray,
                           pools: list, page_table: jnp.ndarray,

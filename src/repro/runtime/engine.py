@@ -11,8 +11,14 @@ host-driven offload model used by GPUs").
 rests on: decode is bandwidth-bound, so sustained tokens/s is proportional
 to slot occupancy.  Requests arrive raggedly; iteration-level batching
 admits each one into a freed decode slot the moment both a slot and KV
-pages are available, so the fused decode step stays full without
-recompiling — page tables and positions are data, not shapes.
+pages are available.  Admission runs **chunked prefill straight into the
+page pools**: each iteration advances every admitted-but-unfilled request
+by one fixed-size chunk (one jitted shape, batched across slots at ragged
+offsets) interleaved with the fused decode step, so a long prompt never
+stalls the running batch.  With prefix caching on, admission shares a
+matching prompt's leading pages read-only and prefill starts at the first
+unseen token — lower TTFT and fewer prefill FLOPs for shared-prefix
+traffic.
 
 Both engines are mesh-agnostic: pass shardings built by ``parallel.plan``
 to run the same code distributed; CPU tests run them single-device.
@@ -20,7 +26,6 @@ to run the same code distributed; CPU tests run them single-device.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 from typing import Any, Iterable
 
@@ -31,7 +36,7 @@ import numpy as np
 from repro.models.model import Model
 from repro.runtime import sampling
 from repro.runtime.kv_cache import PagedKVCache
-from repro.runtime.scheduler import Request, Scheduler
+from repro.runtime.scheduler import RUNNING, Request, Scheduler
 
 
 @dataclasses.dataclass
@@ -104,13 +109,34 @@ class ContinuousStats:
     """Outcome of one ``ContinuousServeEngine.run``."""
     results: dict                 # rid -> np.ndarray (n_new,) int32
     steps: int                    # fused decode iterations executed
-    occupancy: float              # mean fraction of busy slots per step
+    occupancy: float              # mean fraction of decoding slots per step
     wall: float                   # seconds, admission of first request -> done
     preemptions: int
+    chunks: int = 0               # prefill chunk rows executed
+    prefill_tokens: int = 0       # prompt tokens actually computed
+    prompt_tokens: int = 0        # prompt tokens across all admissions
+    prefix_hit_tokens: int = 0    # prompt tokens served from shared pages
+    cow_events: int = 0
+    per_request: dict = dataclasses.field(default_factory=dict)
+    # per_request[rid] = {"preemptions", "chunks", "shared_tokens", "ttft"}
 
     @property
     def total_tokens(self) -> int:
         return int(sum(t.shape[0] for t in self.results.values()))
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        return self.prefix_hit_tokens / max(self.prompt_tokens, 1)
+
+    def ttft_quantiles(self) -> tuple[float, float, float] | None:
+        """(p50, p99, mean) time-to-first-token in seconds, or None."""
+        ts = sorted(r["ttft"] for r in self.per_request.values()
+                    if r["ttft"] is not None)
+        if not ts:
+            return None
+        p50 = ts[len(ts) // 2]
+        p99 = ts[min(len(ts) - 1, int(len(ts) * 0.99))]
+        return p50, p99, sum(ts) / len(ts)
 
 
 class ContinuousServeEngine:
@@ -118,14 +144,19 @@ class ContinuousServeEngine:
 
     The jitted decode step has a fixed slot batch; per-slot page tables and
     ragged positions route each slot's K/V stream through the physical page
-    pools (``Model.decode_step_paged``).  Admission, growth, eviction, and
-    retirement are host-side bookkeeping between steps — no recompiles.
+    pools (``Model.decode_step_paged`` — on accelerators the gather-fused
+    Pallas kernel, no dense intermediate).  Admission (chunked prefill into
+    the pools via ``Model.prefill_chunk_paged``), growth, eviction,
+    copy-on-write, and retirement are host-side bookkeeping between steps —
+    no recompiles: the only jitted shapes are the decode step and one
+    ``(bucket, prefill_chunk)`` prefill chunk per power-of-two bucket.
     """
 
     def __init__(self, model: Model, params: Any, *, num_slots: int,
                  page_size: int, num_pages: int, max_len: int,
                  temperature: float = 0.0, top_k: int = 0,
-                 cache_dtype=None):
+                 cache_dtype=None, prefill_chunk: int = 64,
+                 enable_prefix_cache: bool = True):
         if model.cfg.frontend is not None:
             raise NotImplementedError(
                 "continuous batching serves token frontends only")
@@ -142,10 +173,13 @@ class ContinuousServeEngine:
         self.temperature = temperature
         self.top_k = top_k
         self.cache_dtype = cache_dtype
-        self._prefill = jax.jit(model.prefill)
-        self._scatter = jax.jit(model.scatter_prefill_cache,
-                                donate_argnums=(0,))
+        if int(prefill_chunk) < 1:
+            raise ValueError(f"prefill_chunk={prefill_chunk} must be >= 1")
+        self.prefill_chunk = int(prefill_chunk)
+        self.enable_prefix_cache = enable_prefix_cache
         self._step = jax.jit(self._step_impl, donate_argnums=(1,))
+        self._chunk = jax.jit(self._chunk_impl, donate_argnums=(1,))
+        self._copy_page = jax.jit(self._copy_page_impl, donate_argnums=(0,))
 
     # -- jitted pieces ------------------------------------------------------
     def _step_impl(self, params, pools, tokens, pos, page_table, key):
@@ -154,6 +188,24 @@ class ContinuousServeEngine:
         key, sub = jax.random.split(key)
         nxt = sampling.sample(sub, logits, self.temperature, self.top_k)
         return nxt, pools, key
+
+    def _chunk_impl(self, params, pools, tokens, page_table, start, valid,
+                    key):
+        logits, pools = self.model.prefill_chunk_paged(
+            params, tokens, pools, page_table, start, valid)
+        key, sub = jax.random.split(key)
+        first = sampling.sample(sub, logits, self.temperature, self.top_k)
+        return first, pools, key
+
+    def _copy_page_impl(self, pools, dst, src):
+        """pools[dst] = pools[src] on every pool leaf (copy-on-write)."""
+        new_pools = []
+        for si, seg in enumerate(self.model.plan):
+            copy = ((lambda a: a.at[dst].set(a[src])) if seg.reps == 1
+                    else (lambda a: a.at[:, dst].set(a[:, src])))
+            new_pools.append(tuple(
+                {k: copy(v) for k, v in pool.items()} for pool in pools[si]))
+        return new_pools
 
     def _permute_pools(self, pools, gather):
         """Apply a defrag page permutation to every pool leaf."""
@@ -174,30 +226,57 @@ class ContinuousServeEngine:
             b *= 2
         return b
 
-    def _admit_batch(self, reqs: list, pools, key):
-        """Prefill a group of same-length requests together and scatter
-        their KV into their pages.  The batch is padded to a power of two
-        (padded rows scatter into the scratch page), so admission compiles
-        at most log2(num_slots) prefill shapes per prompt length instead of
-        one jitted batch-1 prefill per request."""
-        plen = reqs[0].prompt_len
-        n_blocks = -(-plen // self.page_size)
-        bucket = self._bucket(len(reqs))
-        prompts = np.stack([r.prompt for r in reqs]
-                           + [reqs[-1].prompt] * (bucket - len(reqs)))
-        dense = self.model.init_cache(bucket, n_blocks * self.page_size,
-                                      dtype=self.cache_dtype)
-        logits, dense = self._prefill(self.params,
-                                      {"tokens": jnp.asarray(prompts)}, dense)
-        key, sub = jax.random.split(key)
-        first = np.asarray(sampling.sample(sub, logits, self.temperature,
-                                           self.top_k))
+    def _prefill_chunks(self, sched: Scheduler, pools, key, now):
+        """Advance every PREFILL request by one chunk (one jitted call,
+        batched across slots at ragged offsets).
+
+        The chunk width is static (``prefill_chunk``) — size it to the
+        workload: around the typical prompt length for low-latency
+        admission, smaller to bound the per-iteration prefill slice
+        interleaved with decode.  The page-table view is sliced to the
+        pow-2 cover of the blocks actually resident after this chunk, so a
+        short prompt's chunk never gathers (or attends over) the full
+        ``max_blocks`` view; jitted shapes stay bounded by
+        O(log2(num_slots) * log2(max_blocks))."""
+        pre = sched.prefilling()
+        c = self.prefill_chunk
+        bucket = self._bucket(len(pre))
+        need = max(-(-(r.pos + min(c, r.prompt_len - r.pos)) // self.page_size)
+                   for r in pre)
+        nb = min(self._bucket(need), self.max_blocks)
+        tokens = np.zeros((bucket, c), np.int32)
+        tables = np.zeros((bucket, nb), np.int32)      # pad rows -> scratch
+        start = np.zeros((bucket,), np.int32)
+        valid = np.zeros((bucket,), np.int32)
         table = self.cache.table()
-        pt_rows = np.zeros((bucket, n_blocks), np.int32)   # pad rows -> scratch
-        for i, r in enumerate(reqs):
-            r.tokens.append(int(first[i]))
-            pt_rows[i] = table[r.slot, :n_blocks]
-        pools = self._scatter(pools, dense, jnp.asarray(pt_rows))
+        for i, r in enumerate(pre):
+            n = min(c, r.prompt_len - r.pos)
+            tokens[i, :n] = r.prompt[r.pos:r.pos + n]
+            tables[i] = table[r.slot, :nb]
+            start[i] = r.pos
+            valid[i] = n
+        first, pools, key = self._chunk(
+            self.params, pools, jnp.asarray(tokens), jnp.asarray(tables),
+            jnp.asarray(start), jnp.asarray(valid), key)
+        first = np.asarray(first)                      # device sync
+        done_now = []
+        for i, r in enumerate(pre):
+            r.chunks += 1
+            self._n_chunks += 1
+            self._prefill_tokens += int(valid[i])
+            r.pos += int(valid[i])
+            if r.pos == r.prompt_len:                  # prefill complete
+                r.state = RUNNING
+                r.tokens.append(int(first[i]))
+                if r.first_token_time is None:
+                    # greedy restart re-emits the tokens the client already
+                    # has, so a preempted request keeps its original TTFT
+                    r.first_token_time = now()
+                self.cache.index_prompt(r.slot, r.prompt)
+                if r.done:
+                    done_now.append(r)
+        for r in done_now:
+            sched.finish(r, now())
         return pools, key
 
     def run(self, requests: Iterable[Request], *, key=None,
@@ -206,7 +285,8 @@ class ContinuousServeEngine:
         self.cache = PagedKVCache(num_slots=self.num_slots,
                                   num_pages=self.num_pages,
                                   page_size=self.page_size,
-                                  max_blocks=self.max_blocks)
+                                  max_blocks=self.max_blocks,
+                                  enable_prefix_cache=self.enable_prefix_cache)
         sched = Scheduler(self.cache)
         requests = list(requests)
         for r in requests:
@@ -221,28 +301,32 @@ class ContinuousServeEngine:
         key = key if key is not None else jax.random.PRNGKey(0)
         t0 = time.monotonic()
         now = lambda: time.monotonic() - t0
-        steps, occ_sum, preempted = 0, 0.0, 0
+        steps, occ_sum = 0, 0.0
+        self._n_chunks, self._prefill_tokens = 0, 0
 
         while sched.has_work():
-            admitted = sched.admit(now())
-            by_plen: dict[int, list] = {}
-            for req in admitted:
-                by_plen.setdefault(req.prompt_len, []).append(req)
-            for group in by_plen.values():
-                pools, key = self._admit_batch(group, pools, key)
-            for req in admitted:
-                if req.done:
-                    sched.finish(req, now())
-            if not sched.running:
+            sched.admit(now())
+            # -- chunked prefill, interleaved with the decode iterations --
+            if sched.prefilling():
+                pools, key = self._prefill_chunks(sched, pools, key, now)
+            if not sched.decoding():
+                if sched.prefilling():
+                    continue                           # more chunks to run
                 nxt_t = sched.next_arrival()
                 if nxt_t is None:
                     break
                 time.sleep(max(nxt_t - now(), 0.0))
                 continue
-            for req in sorted(sched.running.values(), key=lambda r: r.rid):
-                if req.slot in sched.running:          # not yet preempted
-                    sched.ensure_capacity(req)
-            if not sched.running:
+            # -- capacity + copy-on-write barrier for the decode writes --
+            for req in sched.decoding():
+                if sched.running.get(req.slot) is req:  # not yet preempted
+                    if sched.ensure_capacity(req):
+                        moved = self.cache.cow(req.slot,
+                                               req.pos // self.page_size)
+                        if moved is not None:
+                            pools = self._copy_page(pools, moved[1], moved[0])
+            decoding = sched.decoding()
+            if not decoding:
                 continue
             if defrag_every and (steps + 1) % defrag_every == 0:
                 gather = self.cache.defrag()
@@ -251,27 +335,45 @@ class ContinuousServeEngine:
 
             tokens = np.zeros((self.num_slots,), np.int32)
             pos = np.zeros((self.num_slots,), np.int32)
-            for slot, req in sched.running.items():
-                tokens[slot] = req.tokens[-1]
-                pos[slot] = req.pos
+            # slots still prefilling (or free) must not touch live pages:
+            # their rows are routed to the scratch page for this step
+            step_table = np.zeros_like(self.cache.table())
+            for req in decoding:
+                tokens[req.slot] = req.tokens[-1]
+                pos[req.slot] = req.pos
+                step_table[req.slot] = self.cache.table()[req.slot]
             nxt, pools, key = self._step(
                 self.params, pools, jnp.asarray(tokens), jnp.asarray(pos),
-                jnp.asarray(self.cache.table()), key)
+                jnp.asarray(step_table), key)
             nxt = np.asarray(nxt)                      # device sync
-            occ_sum += len(sched.running) / self.num_slots
+            occ_sum += len(decoding) / self.num_slots
             steps += 1
-            for slot, req in list(sched.running.items()):
-                req.tokens.append(int(nxt[slot]))
+            for req in decoding:
+                if sched.running.get(req.slot) is not req:
+                    continue
+                req.tokens.append(int(nxt[req.slot]))
                 req.pos += 1
                 if req.done:
                     sched.finish(req, now())
 
-        preempted = sum(r.preemptions for r in requests)
         results = {r.rid: np.asarray(r.tokens[:r.max_new_tokens], np.int32)
                    for r in requests}
-        return ContinuousStats(results=results, steps=steps,
-                               occupancy=occ_sum / max(steps, 1),
-                               wall=now(), preemptions=preempted)
+        per_request = {r.rid: {"preemptions": r.preemptions,
+                               "chunks": r.chunks,
+                               "shared_tokens": r.shared_tokens,
+                               "ttft": r.ttft}
+                       for r in requests}
+        return ContinuousStats(
+            results=results, steps=steps,
+            occupancy=occ_sum / max(steps, 1),
+            wall=now(),
+            preemptions=sum(r.preemptions for r in requests),
+            chunks=self._n_chunks,
+            prefill_tokens=self._prefill_tokens,
+            prompt_tokens=self.cache.lookup_tokens,
+            prefix_hit_tokens=self.cache.hit_tokens,
+            cow_events=self.cache.cow_events,
+            per_request=per_request)
 
 
 def serve_step_fn(model: Model):

@@ -1,21 +1,30 @@
 """Iteration-level request scheduler for continuous batching.
 
-Request lifecycle:  PENDING --admit--> RUNNING --finish--> FINISHED
-                        ^                 |
-                        +----preempt------+        (pages exhausted)
+Request lifecycle:  PENDING --admit--> PREFILL --chunks done--> RUNNING
+                        ^                 |                        |
+                        +----preempt------+------------------------+
+                                                RUNNING --finish--> FINISHED
 
 The scheduler owns admission policy only; the engine drives the loop
-(prefill newly admitted requests, run one fused decode step over every
-slot, retire finished slots).  Admission is slot-based: the jitted decode
-step has a fixed batch of ``num_slots`` rows, and a request occupies one
-slot from prefill to finish.  Freed slots are refilled from the arrival
-queue on the **next iteration** without recompiling — page tables and
-positions are data, not shapes.
+(run one prefill **chunk** for each admitted-but-unfilled request, run one
+fused decode step over every decoding slot, retire finished slots).
+Admission is slot-based: the jitted decode step has a fixed batch of
+``num_slots`` rows, and a request occupies one slot from admission to
+finish.  Freed slots are refilled from the arrival queue on the **next
+iteration** without recompiling — page tables and positions are data, not
+shapes.
+
+Admission allocates pages for the whole prompt up front, consulting the
+prefix index: matching leading blocks are shared read-only and skipped by
+prefill, so ``req.pos`` starts at the first *unseen* token.  Long prompts
+then prefill in fixed-size chunks interleaved with decode iterations, so
+admission never stalls the running batch.
 
 Preemption (when the page pool is exhausted) is restart-style: the victim
 loses its pages and generated tokens and re-queues at the front.  With
-greedy decoding a restart reproduces the same tokens, so preemption is
-invisible in the output stream.
+greedy decoding a restart reproduces the same tokens (and may re-hit the
+prefix cache for its prompt), so preemption is invisible in the output
+stream.
 """
 from __future__ import annotations
 
@@ -27,7 +36,7 @@ import numpy as np
 
 from repro.runtime.kv_cache import PagedKVCache
 
-PENDING, RUNNING, FINISHED = "pending", "running", "finished"
+PENDING, PREFILL, RUNNING, FINISHED = "pending", "prefill", "running", "finished"
 
 
 @dataclasses.dataclass
@@ -39,11 +48,14 @@ class Request:
     # -- mutable lifecycle state --
     state: str = PENDING
     slot: int = -1
-    pos: int = 0                       # next cache write position
+    pos: int = 0                       # next cache write/prefill position
     tokens: list[int] = dataclasses.field(default_factory=list)
     admit_time: float | None = None
+    first_token_time: float | None = None
     finish_time: float | None = None
     preemptions: int = 0
+    chunks: int = 0                    # prefill chunks executed (all attempts)
+    shared_tokens: int = 0             # prefix-cache tokens at last admission
 
     @property
     def prompt_len(self) -> int:
@@ -52,6 +64,13 @@ class Request:
     @property
     def done(self) -> bool:
         return len(self.tokens) >= self.max_new_tokens
+
+    @property
+    def ttft(self) -> float | None:
+        """Arrival -> first generated token (None until it exists)."""
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.arrival_time
 
 
 class Scheduler:
@@ -69,30 +88,54 @@ class Scheduler:
         return bool(self.waiting) or bool(self.running)
 
     def next_arrival(self) -> float | None:
-        return min((r.arrival_time for r in self.waiting), default=None)
+        # ``submit`` keeps the whole deque arrival-sorted (re-sorting when
+        # a later batch arrives out of order) and ``preempt`` only
+        # re-queues already-arrived requests at the front, so the head is
+        # the minimum — no O(n) scan.
+        return self.waiting[0].arrival_time if self.waiting else None
 
     @property
     def num_running(self) -> int:
         return len(self.running)
 
+    def prefilling(self) -> list[Request]:
+        return sorted((r for r in self.running.values() if r.state == PREFILL),
+                      key=lambda r: r.rid)
+
+    def decoding(self) -> list[Request]:
+        return sorted((r for r in self.running.values() if r.state == RUNNING),
+                      key=lambda r: r.rid)
+
     # -- lifecycle ----------------------------------------------------------
     def submit(self, requests: Iterable[Request]) -> None:
         reqs = sorted(requests, key=lambda r: r.arrival_time)
-        self.waiting.extend(reqs)
+        if self.waiting and reqs \
+                and reqs[0].arrival_time < self.waiting[-1].arrival_time:
+            # a later submit with earlier arrivals: merge to keep the
+            # deque sorted (next_arrival/admit read only the head)
+            self.waiting = deque(sorted(
+                list(self.waiting) + reqs, key=lambda r: r.arrival_time))
+        else:
+            self.waiting.extend(reqs)
 
     def admit(self, now: float) -> list[Request]:
-        """Admit arrived requests into free slots while pages last."""
+        """Admit arrived requests into free slots while pages last.
+
+        Admitted requests enter PREFILL with ``pos`` at the first token the
+        prefix cache could not supply; the engine drives their chunks."""
         admitted: list[Request] = []
         while (self.waiting and self._free_slots
                and self.waiting[0].arrival_time <= now):
             req = self.waiting[0]
             slot = self._free_slots[-1]
-            if not self.cache.admit(slot, req.prompt_len):
+            shared = self.cache.admit(slot, req.prompt_len, tokens=req.prompt)
+            if shared is None:
                 break                      # pool exhausted: wait for frees
             self.waiting.popleft()
             self._free_slots.pop()
-            req.state, req.slot = RUNNING, slot
-            req.pos = req.prompt_len
+            req.state, req.slot = PREFILL, slot
+            req.pos = shared               # skip straight past shared pages
+            req.shared_tokens = shared
             req.admit_time = now
             self.running[slot] = req
             admitted.append(req)

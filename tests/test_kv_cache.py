@@ -1,5 +1,6 @@
-"""Paged KV cache + continuous batching: allocator invariants, paged-vs-
-dense attention equivalence, and end-to-end engine equivalence."""
+"""Paged KV cache + continuous batching: allocator/ref-count invariants,
+prefix-cache sharing and copy-on-write semantics, paged-vs-dense attention
+equivalence, and end-to-end engine equivalence."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -72,9 +73,9 @@ def test_allocator_defrag_compacts_and_preserves_ownership():
 
 def test_paged_cache_admit_grow_release_and_eviction():
     c = PagedKVCache(num_slots=2, num_pages=7, page_size=4, max_blocks=4)
-    assert c.admit(0, 6)                               # 2 pages
+    assert c.admit(0, 6) == 0                          # 2 pages, no prefix
     assert c.blocks_of(0) == 2
-    assert c.admit(1, 9)                               # 3 pages
+    assert c.admit(1, 9) == 0                          # 3 pages
     assert c.allocator.num_free == 1
     assert c.ensure(0, 8)                              # grow slot 0 -> 3 pages
     table = c.table()
@@ -90,6 +91,175 @@ def test_paged_cache_admit_grow_release_and_eviction():
     assert (c.table()[1] == SCRATCH_PAGE).all()
     assert c.ensure(0, 14)                             # now it fits
     c.allocator.check()
+
+
+def test_allocator_share_refcounts_conserved_random_workload():
+    """Shared ownership: ref-counts equal owner-list entries, never go
+    negative (asserted inside the allocator on every drop), and the
+    free/live partition stays conserved under random alloc/share/free."""
+    a = PageAllocator(num_pages=19, page_size=4)
+    rng = np.random.default_rng(7)
+    owners: dict[int, list[int]] = {}
+    for step in range(400):
+        op = rng.integers(0, 4)
+        if op == 0:                                    # exclusive alloc
+            o = int(rng.integers(0, 6))
+            got = a.alloc(o, int(rng.integers(1, 3)))
+            if got is not None:
+                owners.setdefault(o, []).extend(got)
+        elif op == 1 and owners:                       # share a live page
+            donor = int(rng.choice(list(owners)))
+            if owners[donor]:
+                o = int(rng.integers(6, 10))
+                p = int(rng.choice(owners[donor]))
+                a.share(o, [p])
+                owners.setdefault(o, []).append(p)
+        elif op == 2 and owners:                       # drop one reference
+            o = int(rng.choice(list(owners)))
+            if owners[o]:
+                p = owners[o].pop(int(rng.integers(0, len(owners[o]))))
+                a.drop_page(o, p)
+                if not owners[o]:
+                    owners.pop(o)
+        elif op == 3 and owners:                       # drop a whole owner
+            o = int(rng.choice(list(owners)))
+            a.free_owner(o)
+            owners.pop(o)
+        a.check()
+    for o, pages in owners.items():
+        for p in pages:
+            assert a.refcount(p) >= 1
+    assert a.num_free + a.num_live == a.num_pages - 1
+
+
+def test_prefix_admit_shares_pages_and_pins_them():
+    """A second admission of the same prompt shares the donor's full blocks
+    read-only; matched pages are pinned before fresh allocation, so the
+    reclaim path can never free-and-reissue a matched page (which would
+    alias two table entries)."""
+    ps = 4
+    prompt = np.arange(13, dtype=np.int32)             # 3 full blocks + 1
+    c = PagedKVCache(num_slots=3, num_pages=9, page_size=ps, max_blocks=4,
+                     enable_prefix_cache=True)
+    assert c.admit(0, len(prompt), tokens=prompt) == 0
+    c.index_prompt(0, prompt)                          # prefill "completed"
+    donor_row = c.table()[0].copy()
+    # a second identical prompt shares (13-1)//4 = 3 full blocks
+    assert c.admit(1, len(prompt), tokens=prompt) == 3 * ps
+    np.testing.assert_array_equal(c.table()[1, :3], donor_row[:3])
+    assert c.table()[1, 3] != donor_row[3]             # private last block
+    for b in range(3):
+        assert c.allocator.refcount(int(donor_row[b])) == 3  # 2 slots + index
+    c.allocator.check()
+    # donor finishes: shared pages stay resident under the index + slot 1
+    c.release(0)
+    for b in range(3):
+        assert c.allocator.refcount(int(donor_row[b])) == 2
+    # regression: release slot 1 too, then re-admit under a tight pool so
+    # fresh allocation must reclaim — the matched pages must never show up
+    # again as the fresh page of the same row
+    c.release(1)
+    shared = c.admit(2, len(prompt), tokens=prompt)
+    assert shared == 3 * ps
+    row = c.table()[2]
+    live = [int(p) for p in row if p != SCRATCH_PAGE]
+    assert len(set(live)) == len(live), f"aliased pages in one row: {row}"
+    c.allocator.check()
+
+
+def test_cow_detaches_shared_page_and_donor_is_untouched():
+    ps = 4
+    prompt = np.arange(9, dtype=np.int32)              # 2 full blocks + 1
+    c = PagedKVCache(num_slots=2, num_pages=12, page_size=ps, max_blocks=3,
+                     enable_prefix_cache=True)
+    c.admit(0, len(prompt), tokens=prompt)
+    c.index_prompt(0, prompt)
+    c.admit(1, len(prompt), tokens=prompt)
+    donor_row = c.table()[0].copy()
+    assert c.page_shared(1, 0)
+    moved = c.cow(1, 0)
+    assert moved is not None
+    old, new = moved
+    assert old == donor_row[0] and new != old
+    assert c.table()[1, 0] == new
+    np.testing.assert_array_equal(c.table()[0], donor_row)   # donor untouched
+    assert c.allocator.refcount(old) == 2              # slot 0 + index
+    assert c.allocator.refcount(new) == 1
+    assert c.cow(1, 0) is None                         # already exclusive
+    c.allocator.check()
+
+
+def test_engine_page_copy_leaves_donor_bytes_identical():
+    """The device half of copy-on-write: ``_copy_page`` duplicates a page
+    across every pool leaf without perturbing any other page."""
+    cfg = reduced_config(get_config("qwen3-14b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ContinuousServeEngine(model, params, num_slots=2, page_size=4,
+                                num_pages=8, max_len=16)
+    pools = model.init_paged_cache(8, 4)
+    pools = jax.tree.map(
+        lambda a: jax.random.normal(jax.random.PRNGKey(a.size % 97), a.shape,
+                                    jnp.float32).astype(a.dtype), pools)
+    before = jax.tree.map(lambda a: np.asarray(a).copy(), pools)
+    out = eng._copy_page(pools, jnp.int32(5), jnp.int32(2))
+
+    for si, seg in enumerate(model.plan):
+        ax = 0 if seg.reps == 1 else 1            # page axis per stacking
+        for ki in range(len(seg.kinds)):
+            for leaf in before[si][ki]:
+                b = before[si][ki][leaf]
+                o = np.asarray(out[si][ki][leaf])
+                np.testing.assert_array_equal(
+                    np.take(o, 5, axis=ax), np.take(b, 2, axis=ax))  # copied
+                keep = [i for i in range(b.shape[ax]) if i != 5]
+                np.testing.assert_array_equal(    # donor + all others intact
+                    np.take(o, keep, axis=ax), np.take(b, keep, axis=ax))
+
+
+def test_defrag_preserves_shared_page_aliasing():
+    ps = 4
+    prompt = np.arange(9, dtype=np.int32)
+    c = PagedKVCache(num_slots=3, num_pages=16, page_size=ps, max_blocks=3,
+                     enable_prefix_cache=True)
+    other = np.arange(100, 109, dtype=np.int32)
+    c.admit(2, len(other), tokens=other)               # low page ids
+    c.admit(0, len(prompt), tokens=prompt)
+    c.index_prompt(0, prompt)
+    c.admit(1, len(prompt), tokens=prompt)             # shares 2 blocks
+    c.release(2)                                       # hole below the rest
+    assert c.table()[0, 0] == c.table()[1, 0]          # aliased before
+    gather = c.defrag()
+    assert gather is not None
+    # aliasing preserved: both tables still name the SAME physical page
+    np.testing.assert_array_equal(c.table()[0, :2], c.table()[1, :2])
+    assert c.table()[0, 2] != c.table()[1, 2]
+    c.allocator.check()
+    # prefix index was remapped with the tables: a third identical prompt
+    # still hits the same (moved) pages
+    shared = c.admit(2, len(prompt), tokens=prompt)
+    assert shared == 2 * ps
+    np.testing.assert_array_equal(c.table()[2, :2], c.table()[0, :2])
+    c.allocator.check()
+
+
+def test_scheduler_next_arrival_is_queue_head():
+    c = PagedKVCache(num_slots=1, num_pages=4, page_size=4, max_blocks=2)
+    s = Scheduler(c)
+    assert s.next_arrival() is None
+    reqs = [Request(rid=i, prompt=np.zeros(2, np.int32), max_new_tokens=1,
+                    arrival_time=t) for i, t in enumerate([0.5, 0.1, 0.9])]
+    s.submit(reqs)
+    assert s.next_arrival() == 0.1                     # sorted on submit
+    got = s.admit(now=0.2)
+    assert [r.rid for r in got] == [1]
+    assert s.next_arrival() == 0.5
+    # a second submit with an earlier arrival re-sorts the queue, so the
+    # O(1) head read stays the minimum
+    s.submit([Request(rid=3, prompt=np.zeros(2, np.int32), max_new_tokens=1,
+                      arrival_time=0.3)])
+    assert s.next_arrival() == 0.3
+    assert [r.arrival_time for r in s.waiting] == [0.3, 0.5, 0.9]
 
 
 def test_scheduler_eviction_restarts_youngest():
@@ -191,10 +361,44 @@ def test_continuous_engine_matches_static_greedy(small):
     assert stats.occupancy == 1.0                      # all slots busy
 
 
+def test_continuous_engine_chunked_prefill_prefix_reuse_matches_static(small):
+    """Shared-prompt traffic through chunked prefill + the prefix cache:
+    later requests skip their shared full blocks yet reproduce the static
+    engine's greedy tokens exactly."""
+    cfg, model, params = small
+    B, S, G = 6, 12, 6
+    base = jax.random.randint(jax.random.PRNGKey(5), (2, S), 0, cfg.vocab_size)
+    prompts = np.asarray(base)[np.array([0, 1, 0, 1, 0, 0])]   # 2 distinct
+    eng = ServeEngine(model, params, max_len=S + G + 1, temperature=0.0,
+                      donate_cache=False)
+    refs = {i: np.asarray(eng.generate(
+        {"tokens": jnp.asarray(prompts[i:i + 1])},
+        max_new_tokens=G).tokens[0]) for i in range(B)}
+
+    ceng = ContinuousServeEngine(model, params, num_slots=3, page_size=4,
+                                 num_pages=48, max_len=S + G + 1,
+                                 prefill_chunk=5,       # 12 tokens -> 3 chunks
+                                 enable_prefix_cache=True)
+    # staggered so early requests complete prefill (and get indexed)
+    # before their twins arrive
+    reqs = [Request(rid=i, prompt=prompts[i], max_new_tokens=G,
+                    arrival_time=0.05 * i) for i in range(B)]
+    stats = ceng.run(reqs)
+    for i in range(B):
+        np.testing.assert_array_equal(refs[i], stats.results[i])
+    assert stats.prefix_hit_tokens > 0                 # sharing happened
+    assert stats.chunks > B                            # prompts were chunked
+    # prefix hits skip recompute: fewer prompt tokens computed than admitted
+    assert stats.prefill_tokens < stats.prompt_tokens
+    hit = [r for r in stats.per_request.values() if r["shared_tokens"] > 0]
+    assert hit and all(r["ttft"] is not None for r in stats.per_request.values())
+
+
 @pytest.mark.slow
 def test_continuous_engine_ragged_eviction_defrag(small):
     """Ragged lengths + staggered arrivals + pool pressure (evictions) +
-    periodic defrag must still reproduce per-request greedy exactly."""
+    periodic defrag + prefix reuse across preemption-restarts must still
+    reproduce per-request greedy exactly."""
     cfg, model, params = small
     R, S = 6, 12
     lens = [3, 7, 12, 5, 9, 1]
@@ -206,7 +410,8 @@ def test_continuous_engine_ragged_eviction_defrag(small):
             for i in range(R)}
 
     ceng = ContinuousServeEngine(model, params, num_slots=3, page_size=4,
-                                 num_pages=12, max_len=28)
+                                 num_pages=12, max_len=28,
+                                 enable_prefix_cache=True)
     reqs = [Request(rid=i, prompt=np.asarray(toks[i]), max_new_tokens=lens[i],
                     arrival_time=0.002 * i) for i in range(R)]
     stats = ceng.run(reqs, defrag_every=3)
