@@ -34,6 +34,10 @@ Both engines run f32 params and f32 KV caches: XLA:CPU has no native bf16
 GEMM and re-converts bf16 buffers around every step, which would swamp the
 scheduling effect being measured here (on TPU both run bf16).
 
+Both execution strategies are driven through the SAME ``LLMEngine``
+request-level API (``generate(prompts, sampling_params)``) — the benchmark
+compares backends, not entrypoints.
+
   PYTHONPATH=src python -m benchmarks.continuous_batching \
       [--batch 8] [--requests 64] [--seed 0]
 """
@@ -49,8 +53,8 @@ import numpy as np
 from benchmarks.common import Row, dump
 from repro.models.common import ModelConfig
 from repro.models.model import build_model
-from repro.runtime.engine import ContinuousServeEngine, ServeEngine
-from repro.runtime.scheduler import Request
+from repro.runtime.llm import LLMEngine
+from repro.runtime.sampling import SamplingParams
 
 # Big enough that a fused decode step is compute/bandwidth-dominated on CPU
 # (host dispatch noise < 5%), small enough to compile in seconds.
@@ -78,17 +82,16 @@ def make_trace(n_req: int, seed: int, mean_interarrival: float):
 def run_static(model, params, arrivals, new_tokens, prompts, batch: int):
     """Arrival-order batches; each waits for full formation, then decodes to
     its longest member's budget (finished slots idle until then)."""
-    eng = ServeEngine(model, params, max_len=PROMPT_LEN + MAX_NEW + 1,
-                      temperature=0.0, donate_cache=False,
-                      cache_dtype=jnp.float32)
+    llm = LLMEngine(model, params, backend="static",
+                    max_len=PROMPT_LEN + MAX_NEW + 1,
+                    cache_dtype=jnp.float32)
     n_req = prompts.shape[0]
     batches = [(lo, min(lo + batch, n_req))
                for lo in range(0, n_req, batch)]
     steps = [int(new_tokens[lo:hi].max()) for lo, hi in batches]
     shapes = {(hi - lo, n) for (lo, hi), n in zip(batches, steps)}
     for rows, n in sorted(shapes):         # compile each (rows, n_steps)
-        jax.block_until_ready(eng.generate(
-            {"tokens": prompts[:rows]}, max_new_tokens=n).tokens)
+        llm.generate(list(prompts[:rows]), max_new_tokens=n)
 
     useful = 0
     t0 = time.monotonic()
@@ -96,32 +99,35 @@ def run_static(model, params, arrivals, new_tokens, prompts, batch: int):
         wait = arrivals[hi - 1] - (time.monotonic() - t0)
         if wait > 0:                                  # batch not formed yet
             time.sleep(wait)
-        jax.block_until_ready(eng.generate(
-            {"tokens": prompts[lo:hi]}, max_new_tokens=n).tokens)
+        llm.generate(list(prompts[lo:hi]),
+                     [SamplingParams(max_tokens=int(t))
+                      for t in new_tokens[lo:hi]])
         useful += int(new_tokens[lo:hi].sum())
     wall = time.monotonic() - t0
     return useful / wall, wall
 
 
-def run_continuous(model, params, arrivals, new_tokens, prompts, batch: int):
-    eng = ContinuousServeEngine(
-        model, params, num_slots=batch, page_size=PAGE,
+def make_continuous_llm(model, params, batch: int) -> LLMEngine:
+    return LLMEngine(
+        model, params, backend="continuous", num_slots=batch, page_size=PAGE,
         num_pages=1 + 2 * batch * -(-(PROMPT_LEN + MAX_NEW) // PAGE),
         max_len=PROMPT_LEN + MAX_NEW, cache_dtype=jnp.float32,
         prefill_chunk=PROMPT_LEN)       # whole prompt in one chunk row
+
+
+def run_continuous(model, params, arrivals, new_tokens, prompts, batch: int):
+    llm = make_continuous_llm(model, params, batch)
     # warmup/compile: fused step + prefill/scatter at every pow-2 admission
     # bucket the run can hit
     b = 1
     while b <= batch:
-        warm = [Request(rid=-1000 * b - i, prompt=prompts[0], max_new_tokens=2)
-                for i in range(b)]
-        eng.run(warm)
+        llm.generate([prompts[0]] * b, max_new_tokens=2)
         b *= 2
 
-    reqs = [Request(rid=i, prompt=prompts[i], max_new_tokens=int(new_tokens[i]),
-                    arrival_time=float(arrivals[i]))
-            for i in range(prompts.shape[0])]
-    stats = eng.run(reqs)
+    llm.generate(list(prompts),
+                 [SamplingParams(max_tokens=int(t)) for t in new_tokens],
+                 arrival_times=[float(a) for a in arrivals])
+    stats = llm.last_stats
     return stats.total_tokens / stats.wall, stats
 
 
@@ -166,48 +172,48 @@ def run_shared_prefix(model, params, batch: int, n_req: int,
     picks = np.arange(n_req) % n_prompts
 
     def make_engine(prefix: bool):
-        return ContinuousServeEngine(
-            model, params, num_slots=batch, page_size=SP_PAGE,
-            num_pages=num_pages, max_len=max_len, cache_dtype=jnp.float32,
+        return LLMEngine(
+            model, params, backend="continuous", num_slots=batch,
+            page_size=SP_PAGE, num_pages=num_pages, max_len=max_len,
+            cache_dtype=jnp.float32,
             prefill_chunk=4 * SP_PAGE if prefix else SP_PROMPT_LEN,
             enable_prefix_cache=prefix)
 
-    def warm(eng):
+    def warm(llm):
         # compile every pow-2 prefill-chunk bucket + the decode step (each
         # engine instance has its own jit caches, so warm per engine); the
         # staggered arrivals make later warm requests hit the prefix index,
         # compiling the short post-hit chunk width too
         b = 1
         while b <= batch:
-            eng.run([Request(rid=-1000 * b - i, prompt=prompts[i % n_prompts],
-                             max_new_tokens=2, arrival_time=0.2 * i)
-                     for i in range(b)])
+            llm.generate([prompts[i % n_prompts] for i in range(b)],
+                         max_new_tokens=2,
+                         arrival_times=[0.2 * i for i in range(b)])
             b *= 2
 
     # calibrate arrival gaps to a decode step so prompts repeat while the
     # trace is still live (the regime prefix caching targets)
-    probe_eng = make_engine(True)
-    warm(probe_eng)
+    probe = make_engine(True)
+    warm(probe)
     t0 = time.monotonic()
-    probe_eng.run([Request(rid=-99, prompt=prompts[0], max_new_tokens=8)])
+    probe.generate([prompts[0]], max_new_tokens=8)
     step_s = (time.monotonic() - t0) / 8
 
-    arrivals = np.cumsum(rng.exponential(8 * step_s, n_req))
+    arrivals = [float(a) for a in np.cumsum(rng.exponential(8 * step_s, n_req))]
+    trace_prompts = [prompts[picks[i]] for i in range(n_req)]
 
-    def trace():
-        # fresh Request objects (they're mutable), same arrival trace
-        return [Request(rid=i, prompt=prompts[picks[i]],
-                        max_new_tokens=SP_MAX_NEW,
-                        arrival_time=float(arrivals[i]))
-                for i in range(n_req)]
+    def serve(llm):
+        llm.generate(trace_prompts, max_new_tokens=SP_MAX_NEW,
+                     arrival_times=arrivals)
+        return llm.last_stats
 
     results = {}
     for name, prefix in (("prefix+chunked", True), ("pr1-style", False)):
-        eng = make_engine(prefix)
-        warm(eng)
+        llm = make_engine(prefix)
+        warm(llm)
         # best-of-2: wall-clock serving on a shared machine — keep the
         # least-interfered rep (same arrival trace both times)
-        results[name] = min((eng.run(trace()) for _ in range(2)),
+        results[name] = min((serve(llm) for _ in range(2)),
                             key=lambda s: s.ttft_quantiles()[0])
 
     sp, s1 = results["prefix+chunked"], results["pr1-style"]
@@ -244,13 +250,13 @@ def run(model, params, batch: int = 8, n_req: int = 64,
     # fused decode step, i.e. arrivals stagger at decode granularity (the
     # regime continuous batching targets) without starving either engine
     # for whole seconds.
-    eng = ServeEngine(model, params, max_len=PROMPT_LEN + MAX_NEW + 1,
-                      temperature=0.0, donate_cache=False,
-                      cache_dtype=jnp.float32)
-    probe = {"tokens": np.zeros((batch, PROMPT_LEN), np.int32)}
-    jax.block_until_ready(eng.generate(probe, max_new_tokens=16).tokens)
+    llm = LLMEngine(model, params, backend="static",
+                    max_len=PROMPT_LEN + MAX_NEW + 1,
+                    cache_dtype=jnp.float32)
+    probe = [np.zeros((PROMPT_LEN,), np.int32)] * batch
+    llm.generate(probe, max_new_tokens=16)
     t0 = time.monotonic()
-    jax.block_until_ready(eng.generate(probe, max_new_tokens=16).tokens)
+    llm.generate(probe, max_new_tokens=16)
     step_s = (time.monotonic() - t0) / 16
     mean_interarrival = step_s
 

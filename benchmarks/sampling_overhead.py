@@ -1,0 +1,131 @@
+"""Fused per-slot sampler overhead on the continuous decode step.
+
+The per-request generation API fuses a batched per-slot sampler
+(temperature / top-k / top-p / min-p / seeded PRNG streams) into the
+jitted paged decode step.  The promise is that request-level sampling is
+effectively free on the hot path: all controls are ``(num_slots,)`` data
+arrays, top-k thresholds come from one static ``lax.top_k``, and the model
+forward dominates.  This benchmark measures the fused step against a
+greedy-argmax-only step on the same model/pools and asserts the sampler
+adds < ``--tolerance`` (default 5%) decode-step latency on CPU.
+
+  PYTHONPATH=src python -m benchmarks.sampling_overhead [--slots 8]
+      [--iters 50] [--tolerance 0.05]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, dump
+from repro.models.common import ModelConfig
+from repro.models.model import build_model
+from repro.runtime import sampling
+
+# Same scale as benchmarks.continuous_batching: big enough that a decode
+# step is compute/bandwidth-dominated on CPU, small enough to compile fast.
+BENCH_CONFIG = ModelConfig(
+    name="bench-sampling", family="dense", n_layers=6, d_model=384,
+    n_heads=8, n_kv_heads=4, head_dim=48, d_ff=1024, vocab_size=2048,
+)
+PAGE = 16
+CTX = 64          # resident context per slot when measuring
+
+
+def _interleaved_medians(fns_args: list, iters: int) -> list[float]:
+    """Median step time per variant, measured round-robin so machine load
+    spikes hit every variant equally (this box swings ±40% run to run)."""
+    times = [[] for _ in fns_args]
+    for _ in range(iters):
+        for i, (fn, args) in enumerate(fns_args):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args)[0])
+            times[i].append(time.perf_counter() - t0)
+    return [float(np.median(t)) for t in times]
+
+
+def run(slots: int = 8, iters: int = 50, seed: int = 0) -> tuple[list[Row], float]:
+    model = build_model(BENCH_CONFIG)
+    params = model.init(jax.random.PRNGKey(seed))
+    params = jax.tree.map(
+        lambda a: a.astype(jnp.float32) if a.dtype == jnp.bfloat16 else a,
+        params)
+    blocks = -(-CTX // PAGE) + 1
+    num_pages = 1 + slots * blocks
+    pools = model.init_paged_cache(num_pages, PAGE, dtype=jnp.float32)
+    table = jnp.asarray(
+        1 + np.arange(slots * blocks, dtype=np.int32).reshape(slots, blocks))
+    tokens = jnp.asarray(
+        np.random.default_rng(seed).integers(
+            0, BENCH_CONFIG.vocab_size, slots).astype(np.int32))
+    pos = jnp.full((slots,), CTX, jnp.int32)
+
+    @jax.jit
+    def step_greedy(pools, tokens, pos):
+        logits, pools = model.decode_step_paged(params, tokens, pools, table,
+                                                pos)
+        return sampling.greedy(logits), pools
+
+    # a heterogeneous worst-case mix: every slot stochastic with top-k AND
+    # top-p AND min-p active (greedy slots only skip work on the host side)
+    samp = sampling.stack_params([
+        sampling.SamplingParams(temperature=0.7 + 0.05 * i, top_k=40,
+                                top_p=0.9, min_p=0.05, seed=i)
+        for i in range(slots)])
+    samp = tuple(jnp.asarray(a) for a in samp)
+
+    @jax.jit
+    def step_sampled(pools, tokens, pos, temp, topk, topp, minp, sd):
+        logits, pools = model.decode_step_paged(params, tokens, pools, table,
+                                                pos)
+        nxt, _ = sampling.sample_slots(logits, temp, topk, topp, minp, sd,
+                                       pos + 1)
+        return nxt, pools
+
+    # warm both compilations
+    jax.block_until_ready(step_greedy(pools, tokens, pos)[0])
+    jax.block_until_ready(step_sampled(pools, tokens, pos, *samp)[0])
+
+    greedy_s, sampled_s = _interleaved_medians(
+        [(step_greedy, (pools, tokens, pos)),
+         (step_sampled, (pools, tokens, pos, *samp))], iters)
+    overhead = sampled_s / greedy_s - 1.0
+    rows = [
+        Row("ours:sampling", f"greedy decode step (slots={slots})",
+            greedy_s * 1e3, None, "ms", "argmax only, median"),
+        Row("ours:sampling", "fused per-slot sampled decode step",
+            sampled_s * 1e3, None, "ms",
+            "temp+top-k+top-p+min-p+seeded streams, every slot stochastic"),
+        Row("ours:sampling", "sampler overhead", overhead, None, "",
+            "fraction of decode-step latency; budget < 5%"),
+    ]
+    return rows, overhead
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--iters", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tolerance", type=float, default=0.05,
+                    help="max allowed fractional overhead (default 5%)")
+    args = ap.parse_args(argv)
+    rows, overhead = run(args.slots, args.iters, args.seed)
+    for r in rows:
+        print(r.render())
+    dump(rows, "sampling_overhead")
+    if overhead >= args.tolerance:
+        print(f"FAIL: sampler overhead {overhead:.1%} >= "
+              f"{args.tolerance:.0%} budget", file=sys.stderr)
+        return 1
+    print(f"ok: sampler overhead {overhead:.1%} < {args.tolerance:.0%}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -12,7 +12,8 @@ import jax.numpy as jnp
 from repro.configs import get_config, reduced_config
 from repro.core.hbmco import CANDIDATE_CO, HBM3E_LIKE
 from repro.models.model import build_model
-from repro.runtime.engine import ServeEngine
+from repro.runtime.llm import LLMEngine
+from repro.runtime.sampling import SamplingParams
 from repro.sim.scaling import iso_tdp_comparison, rpu_point
 from repro.train.optimizer import AdamWConfig
 from repro.train.train_step import init_train_state, make_train_step
@@ -46,9 +47,10 @@ def main():
         state, metrics = step(state, batch)
         print(f"  step {i}: loss {float(metrics['loss']):.4f}")
 
-    eng = ServeEngine(model, state.params, max_len=80, temperature=0.0)
-    out = eng.generate({"tokens": batch["tokens"][:2, :16]}, max_new_tokens=8)
-    print(f"  generated: {out.tokens.tolist()}")
+    llm = LLMEngine(model, state.params, backend="static", max_len=80)
+    outs = llm.generate([batch["tokens"][0, :16], batch["tokens"][1, :16]],
+                        SamplingParams(max_tokens=8))
+    print(f"  generated: {[o.token_ids for o in outs]}")
 
 
 if __name__ == "__main__":

@@ -1,10 +1,16 @@
 """End-to-end serving driver (the paper's kind: low-latency decode).
 
-Prefill/decode disaggregation on a small model with batched requests:
-  * prefill pass fills the KV caches (compute-bound phase);
-  * the decode loop is ONE jitted lax.scan — no host round-trips (the JAX
-    analogue of the RPU's autonomous execution);
-  * optional speculative decoding (paper Fig 14: draft/target, lossless).
+One ``LLMEngine`` front-end, three execution backends:
+  * ``static``   — prefill, then the decode loop is ONE jitted lax.scan —
+    no host round-trips (the JAX analogue of the RPU's autonomous
+    execution);
+  * ``continuous`` — iteration-level batching over the block-paged KV
+    cache, streaming ``RequestOutput`` deltas as tokens land;
+  * ``speculative`` — draft/target speculative decoding (paper Fig 14,
+    lossless).
+
+Every request carries its own ``SamplingParams`` — the demo serves a
+heterogeneous greedy + sampled mix through the one compiled decode step.
 
   PYTHONPATH=src python examples/serve_decode.py [--arch h2o-danube-1.8b]
       [--batch 8] [--new 48] [--speculative]
@@ -14,12 +20,12 @@ import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config, reduced_config
 from repro.models.model import build_model
-from repro.runtime.engine import ServeEngine
-from repro.runtime.speculative import speculative_generate
+from repro.runtime.llm import LLMEngine
+from repro.runtime.sampling import SamplingParams
 
 
 def main():
@@ -36,22 +42,42 @@ def main():
     model = build_model(cfg)
     key = jax.random.PRNGKey(0)
     params = model.init(key)
-    prompts = jax.random.randint(jax.random.fold_in(key, 1),
-                                 (args.batch, args.prompt_len), 0,
-                                 cfg.vocab_size)
+    prompts = np.asarray(jax.random.randint(
+        jax.random.fold_in(key, 1), (args.batch, args.prompt_len), 0,
+        cfg.vocab_size))
 
-    eng = ServeEngine(model, params,
-                      max_len=args.prompt_len + args.new + 1,
-                      temperature=args.temperature)
-    # warm-up compile, then measure steady-state decode
-    eng.generate({"tokens": prompts}, max_new_tokens=2)
+    # -- static batch: whole decode in one jitted scan ----------------------
+    llm = LLMEngine(model, params, backend="static",
+                    max_len=args.prompt_len + args.new + 1)
+    # a per-request mix: half greedy, half sampled with distinct seeds —
+    # all data, one compiled decode loop
+    mix = [SamplingParams() if i % 2 == 0 else
+           SamplingParams(temperature=args.temperature, top_p=0.95, seed=i)
+           for i in range(args.batch)]
+    llm.generate(list(prompts), mix, max_new_tokens=2)     # warm-up compile
     t0 = time.time()
-    out = eng.generate({"tokens": prompts}, max_new_tokens=args.new)
+    outs = llm.generate(list(prompts), mix, max_new_tokens=args.new)
     dt = time.time() - t0
-    total = args.batch * args.new
-    print(f"[batched decode] {args.batch} requests x {args.new} tokens in "
+    total = sum(len(o.token_ids) for o in outs)
+    print(f"[static decode] {args.batch} requests x {args.new} tokens in "
           f"{dt:.2f}s = {total/dt:.0f} tok/s")
-    print("  first request:", out.tokens[0, :16].tolist())
+    print("  greedy row:", outs[0].token_ids[:12])
+    print("  sampled row:", outs[1].token_ids[:12])
+
+    # -- continuous batching: stream deltas as tokens land ------------------
+    try:
+        cllm = LLMEngine(model, params, backend="continuous",
+                         max_len=args.prompt_len + args.new + 1,
+                         num_slots=min(4, args.batch), page_size=16)
+        stream: dict[int, int] = {}
+        cllm.generate(list(prompts[:4]), mix[:4], max_new_tokens=8,
+                      on_output=lambda o: stream.__setitem__(
+                          o.rid, stream.get(o.rid, 0) + len(o.new_token_ids)))
+        print(f"[continuous] streamed deltas per request: "
+              f"{dict(sorted(stream.items()))} "
+              f"(occupancy {cllm.last_stats.occupancy:.2f})")
+    except NotImplementedError as e:
+        print(f"[continuous] skipped for {cfg.name}: {e}")
 
     if args.speculative:
         # With an agreeing draft (here: the target itself) every window
@@ -59,22 +85,24 @@ def main():
         # draft (paper: Llama3-8B drafting for 70B, 4.6/8 accepted).
         # Untrained random drafts accept ~0 — run one of each to show the
         # acceptance machinery.
-        stats = speculative_generate(
-            model, params, model, params, prompts[:1],
-            max_new_tokens=args.new, gamma=4, temperature=0.0)
-        print(f"[speculative, ideal draft] {stats.windows} windows, "
-              f"{stats.mean_accepted:.2f}/4 accepted  tokens: "
-              f"{stats.tokens[:8].tolist()}")
+        sllm = LLMEngine(model, params, backend="speculative",
+                         max_len=args.prompt_len + args.new + 8, gamma=4)
+        out = sllm.generate(prompts[:1], max_new_tokens=args.new)[0]
+        print(f"[speculative, ideal draft] {out.metrics['windows']} windows, "
+              f"{out.metrics['accepted_per_window']:.2f}/4 accepted  tokens: "
+              f"{out.token_ids[:8]}")
         draft_cfg = dataclasses.replace(cfg, name="draft",
                                         n_layers=max(2, cfg.n_layers // 2))
         draft = build_model(draft_cfg)
         dparams = draft.init(jax.random.fold_in(key, 2))
-        stats = speculative_generate(
-            draft, dparams, model, params, prompts[:1],
-            max_new_tokens=args.new, gamma=4, temperature=0.0)
-        print(f"[speculative, random draft] {stats.windows} windows, "
-              f"{stats.mean_accepted:.2f}/4 accepted (untrained draft: "
-              f"low acceptance expected; output stays lossless)")
+        dllm = LLMEngine(model, params, backend="speculative",
+                         max_len=args.prompt_len + args.new + 8,
+                         draft_model=draft, draft_params=dparams, gamma=4)
+        out = dllm.generate(prompts[:1], max_new_tokens=args.new)[0]
+        print(f"[speculative, random draft] {out.metrics['windows']} windows, "
+              f"{out.metrics['accepted_per_window']:.2f}/4 accepted "
+              "(untrained draft: low acceptance expected; output stays "
+              "lossless)")
 
 
 if __name__ == "__main__":

@@ -1,11 +1,20 @@
-"""Serving launcher: static batch or continuous batching.
+"""Serving launcher: one ``LLMEngine`` front-end, three backends.
 
-The static decode loop is ONE jitted ``lax.scan`` (no per-token host
-dispatch) — the JAX analogue of the RPU's host-free execution model.
-``--continuous`` switches to iteration-level batching over the block-paged
-KV cache: requests arrive as a Poisson process (``--arrival-rate`` req/s)
-and are admitted into freed decode slots without recompiling.  Optionally
-runs speculative decoding (paper Fig 14 setup) with a reduced draft model.
+``--backend static`` runs the whole decode as ONE jitted ``lax.scan`` (no
+per-token host dispatch) — the JAX analogue of the RPU's host-free
+execution model.  ``--backend continuous`` (also ``--continuous``) runs
+iteration-level batching over the block-paged KV cache: requests arrive as
+a Poisson process (``--arrival-rate`` req/s) and are admitted into freed
+decode slots without recompiling.  ``--backend speculative`` (also
+``--speculative``) runs draft/target speculative decoding (paper Fig 14)
+with a reduced draft model.
+
+Per-request generation is a ``SamplingParams``: ``--temperature``,
+``--top-k``, ``--top-p``, ``--min-p``, ``--stop-token`` (repeatable), and
+``--seed`` apply to every request; ``--sampling-mix`` serves a
+heterogeneous mix instead (comma-separated ``temp:top_p[:top_k]`` specs
+cycled across requests — all of them share the ONE compiled decode step,
+since per-slot sampling params are data, not shapes).
 
 Continuous admission runs **chunked prefill** (``--prefill-chunk`` tokens
 per iteration per request) interleaved with decode, and shares prompt
@@ -14,9 +23,10 @@ prompts over ``--num-requests`` requests exercises the sharing;
 ``--no-prefix-cache`` disables it).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b --reduced \
-      --batch 4 --prompt-len 64 --max-new 32 [--speculative]
+      --batch 4 --prompt-len 64 --max-new 32 [--backend speculative]
   PYTHONPATH=src python -m repro.launch.serve --continuous \
-      --num-requests 16 --arrival-rate 50 --batch 4 --num-prompts 4
+      --num-requests 16 --arrival-rate 50 --batch 4 --num-prompts 4 \
+      --sampling-mix 0.0:1.0,0.8:0.9:40,1.0:0.95
 """
 from __future__ import annotations
 
@@ -32,8 +42,24 @@ from repro.launch.mesh import make_small_mesh
 from repro.models.model import build_model
 from repro.parallel.hints import sharding_rules
 from repro.parallel.plan import make_plan
-from repro.runtime.engine import ContinuousServeEngine, ServeEngine
-from repro.runtime.scheduler import Request
+from repro.runtime.llm import LLMEngine
+from repro.runtime.sampling import SamplingParams
+
+
+def parse_mix(spec: str, base: SamplingParams) -> list[SamplingParams]:
+    """``temp:top_p[:top_k]`` specs, comma-separated, cycled per request."""
+    out = []
+    for part in spec.split(","):
+        fields = part.split(":")
+        if not 2 <= len(fields) <= 3:
+            raise ValueError(f"bad --sampling-mix entry {part!r} "
+                             "(want temp:top_p[:top_k])")
+        out.append(SamplingParams(
+            temperature=float(fields[0]), top_p=float(fields[1]),
+            top_k=int(fields[2]) if len(fields) == 3 else 0,
+            min_p=base.min_p, seed=base.seed,
+            stop_token_ids=base.stop_token_ids))
+    return out
 
 
 def main(argv=None) -> int:
@@ -41,30 +67,49 @@ def main(argv=None) -> int:
     ap.add_argument("--arch", default="qwen3-14b")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--no-reduced", dest="reduced", action="store_false")
+    ap.add_argument("--backend", default=None,
+                    choices=["static", "continuous", "speculative"])
+    ap.add_argument("--continuous", action="store_true",
+                    help="alias for --backend continuous")
+    ap.add_argument("--speculative", action="store_true",
+                    help="alias for --backend speculative")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--max-new", type=int, default=32)
+    # -- per-request sampling -------------------------------------------
     ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--speculative", action="store_true")
-    ap.add_argument("--continuous", action="store_true",
-                    help="iteration-level batching over a paged KV cache")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--min-p", type=float, default=0.0)
+    ap.add_argument("--stop-token", type=int, action="append", default=[],
+                    help="finish a request when this token id is emitted "
+                         "(repeatable)")
+    ap.add_argument("--sampling-mix", default=None,
+                    help="comma-separated temp:top_p[:top_k] specs cycled "
+                         "across requests (heterogeneous per-slot mix "
+                         "through one compiled decode step)")
+    # -- continuous-batching knobs --------------------------------------
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="Poisson request arrival rate in req/s "
                          "(0 = all requests arrive at t=0)")
     ap.add_argument("--num-requests", type=int, default=0,
-                    help="total requests for --continuous (default 3x batch)")
+                    help="total requests for continuous (default 3x batch)")
     ap.add_argument("--page-size", type=int, default=16,
-                    help="KV page size in tokens for --continuous")
+                    help="KV page size in tokens for continuous")
     ap.add_argument("--prefill-chunk", type=int, default=64,
-                    help="prefill chunk size in tokens for --continuous")
+                    help="prefill chunk size in tokens for continuous")
     ap.add_argument("--num-prompts", type=int, default=0,
-                    help="distinct prompts for --continuous (0 = all "
+                    help="distinct prompts for continuous (0 = all "
                          "distinct; lower values share prefixes)")
     ap.add_argument("--no-prefix-cache", dest="prefix_cache",
                     action="store_false", default=True,
                     help="disable prompt-prefix page sharing")
-    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="model-init seed AND per-request sampling seed")
     args = ap.parse_args(argv)
+    backend = args.backend or ("continuous" if args.continuous else
+                               "speculative" if args.speculative else
+                               "static")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -78,19 +123,15 @@ def main(argv=None) -> int:
 
     mesh = make_small_mesh()
     plan = make_plan(cfg, mesh, global_batch=args.batch, shape_kind="decode")
-    max_len = args.prompt_len + args.max_new
+    max_len = args.prompt_len + args.max_new + 1
 
-    batch = {"tokens": jax.random.randint(
-        jax.random.fold_in(key, 1), (args.batch, args.prompt_len), 0,
-        cfg.vocab_size)}
-    if cfg.frontend == "vision":
-        batch["image_embeds"] = jax.random.normal(
-            jax.random.fold_in(key, 2), (args.batch, 8, cfg.d_model),
-            jnp.bfloat16)
-        max_len += 8
+    base = SamplingParams(
+        temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
+        min_p=args.min_p, seed=args.seed,
+        stop_token_ids=tuple(args.stop_token))
 
     with mesh, sharding_rules(plan.rules()):
-        if args.continuous:
+        if backend == "continuous":
             n_req = args.num_requests or 3 * args.batch
             rng = np.random.default_rng(args.seed)
             gaps = (rng.exponential(1.0 / args.arrival_rate, n_req)
@@ -100,28 +141,33 @@ def main(argv=None) -> int:
             pool_prompts = np.asarray(jax.random.randint(
                 jax.random.fold_in(key, 4), (n_distinct, args.prompt_len), 0,
                 cfg.vocab_size))
-            rng_pick = np.random.default_rng(args.seed + 1)
-            picks = rng_pick.integers(0, n_distinct, n_req)
-            reqs = [Request(rid=i, prompt=pool_prompts[picks[i]],
-                            max_new_tokens=args.max_new,
-                            arrival_time=float(arrivals[i]))
-                    for i in range(n_req)]
-            eng = ContinuousServeEngine(
-                model, params, num_slots=args.batch,
-                page_size=args.page_size,
+            picks = np.random.default_rng(args.seed + 1).integers(
+                0, n_distinct, n_req)
+            mix = parse_mix(args.sampling_mix, base) if args.sampling_mix \
+                else [base]
+            sps = [mix[i % len(mix)] for i in range(n_req)]
+            llm = LLMEngine(
+                model, params, backend="continuous", max_len=max_len,
+                num_slots=args.batch, page_size=args.page_size,
                 num_pages=1 + args.batch * -(-max_len // args.page_size) * 2,
-                max_len=max_len, temperature=args.temperature,
                 prefill_chunk=args.prefill_chunk,
                 enable_prefix_cache=args.prefix_cache)
             t0 = time.time()
-            stats = eng.run(reqs, key=key)
+            outs = llm.generate([pool_prompts[picks[i]] for i in range(n_req)],
+                                sps, max_new_tokens=args.max_new,
+                                arrival_times=arrivals)
             dt = time.time() - t0
+            stats = llm.last_stats
+            n_tok = sum(len(o.token_ids) for o in outs)
             print(f"arch={cfg.name} continuous slots={args.batch} "
                   f"requests={n_req} rate={args.arrival_rate}/s "
                   f"steps={stats.steps} occupancy={stats.occupancy:.2f} "
                   f"preemptions={stats.preemptions}")
-            print(f"tokens={stats.total_tokens} wall={dt:.2f}s "
-                  f"({stats.total_tokens / dt:.1f} tok/s incl. compile)")
+            if args.sampling_mix:
+                print(f"sampling mix: {args.sampling_mix} "
+                      f"(one decode-step signature, per-slot data)")
+            print(f"tokens={n_tok} wall={dt:.2f}s "
+                  f"({n_tok / dt:.1f} tok/s incl. compile)")
             print(f"prefill: {stats.chunks} chunks, "
                   f"{stats.prefill_tokens}/{stats.prompt_tokens} prompt "
                   f"tokens computed, prefix hit rate "
@@ -129,41 +175,68 @@ def main(argv=None) -> int:
             q = stats.ttft_quantiles()
             if q is not None:
                 print(f"ttft p50={q[0] * 1e3:.1f}ms p99={q[1] * 1e3:.1f}ms")
+            reasons = {}
+            for o in outs:
+                reasons[o.finish_reason] = reasons.get(o.finish_reason, 0) + 1
             per_req = " ".join(
                 f"r{rid}:p{st['preemptions']}/c{st['chunks']}"
                 for rid, st in sorted(stats.per_request.items()))
+            print(f"finish reasons: {reasons}")
             print(f"per-request preemptions/chunks: {per_req}")
-            print("sample:", stats.results[0][:16].tolist())
+            print("sample:", outs[0].token_ids[:16])
             return 0
-        if args.speculative:
-            from repro.runtime.speculative import speculative_generate
+
+        prompts = np.asarray(jax.random.randint(
+            jax.random.fold_in(key, 1), (args.batch, args.prompt_len), 0,
+            cfg.vocab_size))
+        if cfg.frontend == "vision" and backend == "static":
+            # vision frontends serve batch dicts (tokens + image embeds)
+            # through ServeEngine directly; LLMEngine fronts token-only
+            # requests
+            from repro.runtime.engine import ServeEngine
+            batch = {"tokens": jnp.asarray(prompts),
+                     "image_embeds": jax.random.normal(
+                         jax.random.fold_in(key, 2),
+                         (args.batch, 8, cfg.d_model), jnp.bfloat16)}
+            eng = ServeEngine(model, params, max_len=max_len + 8)
+            t0 = time.time()
+            out = eng.generate(batch, max_new_tokens=args.max_new,
+                               sampling_params=base)
+            dt = time.time() - t0
+            toks = np.asarray(out.tokens)
+            n_tok = toks.size
+            print(f"arch={cfg.name} backend=static(vision) "
+                  f"batch={args.batch} new_tokens={toks.shape[1]} "
+                  f"wall={dt:.2f}s ({n_tok/dt:.1f} tok/s incl. compile)")
+            print("sample:", toks[0, :16].tolist())
+            return 0
+        if backend == "speculative":
             import dataclasses
             draft_cfg = dataclasses.replace(
                 cfg, name=cfg.name + "-draft",
                 n_layers=max(2, cfg.n_layers // 4))
             draft = build_model(draft_cfg)
             draft_params = draft.init(jax.random.fold_in(key, 3))
+            llm = LLMEngine(model, params, backend="speculative",
+                            max_len=max_len, draft_model=draft,
+                            draft_params=draft_params, gamma=4)
             t0 = time.time()
-            res = speculative_generate(
-                draft, draft_params, model, params,
-                batch["tokens"][:1], max_new_tokens=args.max_new,
-                gamma=4, temperature=args.temperature, key=key)
+            outs = llm.generate(prompts[:1], base, max_new_tokens=args.max_new)
             dt = time.time() - t0
-            acc = float(res.accepted_per_window.mean()) if res.windows else 0.0
-            print(f"speculative: accepted/window={acc:.2f} over {res.windows} windows")
-            toks = res.tokens[None, :]
+            m = outs[0].metrics
+            print(f"speculative: accepted/window="
+                  f"{m['accepted_per_window']:.2f} over {m['windows']} windows")
         else:
-            eng = ServeEngine(model, params, max_len=max_len,
-                              temperature=args.temperature)
+            llm = LLMEngine(model, params, backend="static", max_len=max_len)
             t0 = time.time()
-            out = eng.generate(batch, max_new_tokens=args.max_new, key=key)
+            outs = llm.generate(prompts, base, max_new_tokens=args.max_new)
             dt = time.time() - t0
-            toks = out.tokens
 
-    n_tok = int(toks.shape[0] * toks.shape[1])
-    print(f"arch={cfg.name} batch={args.batch} new_tokens={toks.shape[1]} "
+    n_tok = sum(len(o.token_ids) for o in outs)
+    print(f"arch={cfg.name} backend={backend} batch={len(outs)} "
+          f"new_tokens={len(outs[0].token_ids)} "
           f"wall={dt:.2f}s ({n_tok/dt:.1f} tok/s incl. compile)")
-    print("sample:", toks[0, :16].tolist())
+    print("sample:", outs[0].token_ids[:16])
     return 0
 
 

@@ -1,9 +1,15 @@
 """Serving runtime: engines, paged KV cache, scheduler, sampling, speculative."""
 from repro.runtime.engine import (
-    ContinuousServeEngine, ContinuousStats, ServeEngine, prefill_step_fn,
-    serve_step_fn,
+    ContinuousServeEngine, ContinuousStats, GenerationResult, RequestOutput,
+    ServeEngine, prefill_step_fn, serve_step_fn,
 )
 from repro.runtime.kv_cache import PageAllocator, PagedKVCache, SCRATCH_PAGE
-from repro.runtime.sampling import greedy, sample, probs
+from repro.runtime.llm import LLMEngine
+from repro.runtime.sampling import (
+    MAX_TOP_K, SamplingParams, SlotSampling, dist, draw, greedy, probs,
+    sample, sample_slots, stack_params, token_key,
+)
 from repro.runtime.scheduler import Request, Scheduler
-from repro.runtime.speculative import speculative_generate, SpecStats, make_speculative_window
+from repro.runtime.speculative import (
+    SpecStats, make_speculative_window, speculative_generate,
+)

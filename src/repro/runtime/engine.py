@@ -20,6 +20,17 @@ matching prompt's leading pages read-only and prefill starts at the first
 unseen token — lower TTFT and fewer prefill FLOPs for shared-prefix
 traffic.
 
+Request-level generation API (see ``runtime.sampling``): every request
+carries its own ``SamplingParams``; the batched per-slot sampler is fused
+into the jitted decode step, with per-slot temperature / top-k / top-p /
+min-p / seed as ``(num_slots,)`` DATA arrays — changing the request mix
+never recompiles.  Stop-token and max-tokens finish reasons are applied
+on-host between steps, and progress is emitted as structured
+``RequestOutput`` deltas through the incremental ``add_request()`` /
+``step()`` interface (or the ``run(..., on_output=)`` streaming callback).
+``runtime.llm.LLMEngine`` is the one front-end over both engines plus
+speculative decoding.
+
 Both engines are mesh-agnostic: pass shardings built by ``parallel.plan``
 to run the same code distributed; CPU tests run them single-device.
 """
@@ -27,7 +38,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Iterable
+import warnings
+from typing import Any, Callable, Iterable
 
 import jax
 import jax.numpy as jnp
@@ -35,8 +47,52 @@ import numpy as np
 
 from repro.models.model import Model
 from repro.runtime import sampling
+from repro.runtime.sampling import SamplingParams
 from repro.runtime.kv_cache import PagedKVCache
 from repro.runtime.scheduler import RUNNING, Request, Scheduler
+
+
+@dataclasses.dataclass
+class RequestOutput:
+    """One structured progress/result record for a request.
+
+    Streaming emits one per request per engine iteration that produced
+    tokens (``new_token_ids`` is the delta — across a preemption-restart
+    the re-derived tokens are NOT re-emitted); the final record has
+    ``finished=True`` with a ``finish_reason`` of "stop" or "length".
+    The cumulative fields (``token_ids``, ``logprobs``) are populated on
+    finished records only — intermediate deltas leave them empty so the
+    host loop stays O(tokens), not O(tokens^2), per request.  Contract
+    across backends: concatenating ``new_token_ids`` over every emitted
+    record yields the full stream (static/speculative emit one record
+    carrying everything; continuous spreads it over deltas), and the
+    finished record's ``token_ids`` always holds the complete result —
+    one-shot callers read ``token_ids``, streaming callers accumulate
+    ``new_token_ids``."""
+    rid: int
+    new_token_ids: list[int]
+    token_ids: list[int]               # cumulative; finished records only
+    finished: bool = False
+    finish_reason: str | None = None
+    logprobs: list[float] | None = None    # cumulative, iff requested
+    metrics: dict = dataclasses.field(default_factory=dict)
+
+
+def _legacy_sampling(temperature, top_k, where: str) -> SamplingParams | None:
+    """Deprecation shim: engine-global ``temperature=``/``top_k=`` kwargs
+    become the engine's default ``SamplingParams`` for one release."""
+    if temperature is None and top_k is None:
+        return None
+    warnings.warn(
+        f"{where}(temperature=, top_k=) is deprecated; pass "
+        f"sampling=SamplingParams(...) or per-request SamplingParams",
+        DeprecationWarning, stacklevel=3)
+    return SamplingParams(temperature=temperature or 0.0, top_k=top_k or 0)
+
+
+def _seed_from_key(key) -> int:
+    """Legacy ``key=`` arguments map onto the seeded-stream scheme."""
+    return int(np.asarray(jax.random.key_data(key)).ravel()[-1]) & 0x7FFFFFFF
 
 
 @dataclasses.dataclass
@@ -47,16 +103,21 @@ class GenerationResult:
 
 
 class ServeEngine:
-    """Batched request serving for one model."""
+    """Batched request serving for one model (static batch)."""
 
     def __init__(self, model: Model, params: Any, *, max_len: int,
-                 temperature: float = 0.0, top_k: int = 0,
-                 donate_cache: bool = True, cache_dtype=None):
+                 temperature: float | None = None, top_k: int | None = None,
+                 sampling_params: SamplingParams | None = None,
+                 donate_cache: bool = True, cache_dtype=None,
+                 max_top_k: int = sampling.MAX_TOP_K):
         self.model = model
         self.params = params
         self.max_len = max_len
-        self.temperature = temperature
-        self.top_k = top_k
+        self.default_sampling = (
+            sampling_params
+            or _legacy_sampling(temperature, top_k, "ServeEngine")
+            or sampling.GREEDY)
+        self.max_top_k = int(max_top_k)
         self.cache_dtype = cache_dtype
         self._decode_loop = jax.jit(
             self._decode_loop_impl,
@@ -64,6 +125,14 @@ class ServeEngine:
             donate_argnums=(1,) if donate_cache else (),
         )
         self._prefill = jax.jit(self.model.prefill)
+
+    @property
+    def temperature(self) -> float:        # back-compat read accessor
+        return self.default_sampling.temperature
+
+    @property
+    def top_k(self) -> int:
+        return self.default_sampling.top_k
 
     # -- phase 1: prefill ---------------------------------------------------
     def prefill(self, batch: dict):
@@ -77,30 +146,64 @@ class ServeEngine:
         return logits, cache, plen
 
     # -- phase 2: autonomous decode loop -------------------------------------
-    def _decode_loop_impl(self, first_tokens, cache, start_pos, key, *,
-                          n_steps: int):
+    def _decode_loop_impl(self, first_tokens, cache, start_pos, temp, topk,
+                          topp, minp, seed, *, n_steps: int):
         def step(carry, _):
-            tokens, cache, pos, key = carry
-            logits, cache = self.model.decode_step(self.params, tokens, cache, pos)
-            key, sub = jax.random.split(key)
-            nxt = sampling.sample(sub, logits, self.temperature, self.top_k)
-            return (nxt, cache, pos + 1, key), nxt
+            tokens, cache, pos = carry
+            logits, cache = self.model.decode_step(self.params, tokens, cache,
+                                                   pos)
+            # the token being generated sits at sequence index pos + 1
+            nxt, lp = sampling.sample_slots(
+                logits, temp, topk, topp, minp, seed, pos + 1,
+                max_top_k=self.max_top_k)
+            return (nxt, cache, pos + 1), (nxt, lp)
 
-        (_, cache, _, _), toks = jax.lax.scan(
-            step, (first_tokens, cache, start_pos, key), length=n_steps)
-        return jnp.moveaxis(toks, 0, 1), cache     # (B, n_steps)
+        (_, cache, _), (toks, lps) = jax.lax.scan(
+            step, (first_tokens, cache, start_pos), length=n_steps)
+        return jnp.moveaxis(toks, 0, 1), jnp.moveaxis(lps, 0, 1), cache
+
+    def _resolve_params(self, b: int, sampling_params, key) -> list[SamplingParams]:
+        if sampling_params is None:
+            sp = self.default_sampling
+            if key is not None and not sp.is_greedy and sp.seed == 0:
+                sp = dataclasses.replace(sp, seed=_seed_from_key(key))
+            sps = [sp] * b
+        elif isinstance(sampling_params, SamplingParams):
+            sps = [sampling_params] * b
+        else:
+            sps = list(sampling_params)
+            if len(sps) != b:
+                raise ValueError(f"{len(sps)} SamplingParams for batch {b}")
+        for sp in sps:
+            if sp.top_k > self.max_top_k:
+                raise ValueError(f"top_k={sp.top_k} exceeds the engine's "
+                                 f"static max_top_k={self.max_top_k}")
+        return sps
 
     def generate(self, batch: dict, *, max_new_tokens: int,
-                 key=None) -> GenerationResult:
-        """prefill + decode max_new_tokens; returns all generated tokens."""
-        key = key if key is not None else jax.random.PRNGKey(0)
+                 sampling_params=None, key=None) -> GenerationResult:
+        """prefill + decode max_new_tokens; returns all generated tokens.
+
+        ``sampling_params``: one ``SamplingParams`` for the whole batch or a
+        per-row list — data, not shapes, so any mix shares the compiled
+        loop.  Stop-token truncation is the caller's concern (the scan has
+        a fixed trip count); ``LLMEngine`` applies it."""
+        b = (batch["features"] if "features" in batch
+             else batch["tokens"]).shape[0]
+        sps = self._resolve_params(b, sampling_params, key)
+        temp, topk, topp, minp, seed = (
+            jnp.asarray(a) for a in sampling.stack_params(sps))
         logits, cache, plen = self.prefill(batch)
-        key, sub = jax.random.split(key)
-        first = sampling.sample(sub, logits, self.temperature, self.top_k)
-        toks, cache = self._decode_loop(
-            first, cache, jnp.int32(plen), key, n_steps=max_new_tokens - 1)
+        first, lp0 = sampling.sample_slots(
+            logits, temp, topk, topp, minp, seed,
+            jnp.full((b,), plen, jnp.int32), max_top_k=self.max_top_k)
+        toks, lps, cache = self._decode_loop(
+            first, cache, jnp.int32(plen), temp, topk, topp, minp, seed,
+            n_steps=max_new_tokens - 1)
         all_toks = jnp.concatenate([first[:, None], toks], axis=1)
-        return GenerationResult(tokens=all_toks, logprobs=None,
+        all_lps = (jnp.concatenate([lp0[:, None], lps], axis=1)
+                   if any(sp.logprobs for sp in sps) else None)
+        return GenerationResult(tokens=all_toks, logprobs=all_lps,
                                 steps=max_new_tokens)
 
 
@@ -119,6 +222,8 @@ class ContinuousStats:
     cow_events: int = 0
     per_request: dict = dataclasses.field(default_factory=dict)
     # per_request[rid] = {"preemptions", "chunks", "shared_tokens", "ttft"}
+    outputs: dict = dataclasses.field(default_factory=dict)
+    # outputs[rid] = final RequestOutput (finish_reason, logprobs, timing)
 
     @property
     def total_tokens(self) -> int:
@@ -145,18 +250,27 @@ class ContinuousServeEngine:
     The jitted decode step has a fixed slot batch; per-slot page tables and
     ragged positions route each slot's K/V stream through the physical page
     pools (``Model.decode_step_paged`` — on accelerators the gather-fused
-    Pallas kernel, no dense intermediate).  Admission (chunked prefill into
-    the pools via ``Model.prefill_chunk_paged``), growth, eviction,
-    copy-on-write, and retirement are host-side bookkeeping between steps —
-    no recompiles: the only jitted shapes are the decode step and one
-    ``(bucket, prefill_chunk)`` prefill chunk per power-of-two bucket.
+    Pallas kernel, no dense intermediate), and the batched per-slot sampler
+    draws each slot's next token inside the same jitted step.  Admission
+    (chunked prefill into the pools via ``Model.prefill_chunk_paged``),
+    growth, eviction, copy-on-write, finish-reason checks, and output
+    emission are host-side bookkeeping between steps — no recompiles: the
+    only jitted shapes are the decode step and one ``(bucket,
+    prefill_chunk)`` prefill chunk per power-of-two bucket, and every
+    sampling control is data.
+
+    Drive it incrementally (``add_request`` then ``step`` until
+    ``has_unfinished()`` is False, collecting ``RequestOutput`` deltas) or
+    in batch via ``run(requests, on_output=...)``.
     """
 
     def __init__(self, model: Model, params: Any, *, num_slots: int,
                  page_size: int, num_pages: int, max_len: int,
-                 temperature: float = 0.0, top_k: int = 0,
+                 temperature: float | None = None, top_k: int | None = None,
+                 sampling_params: SamplingParams | None = None,
                  cache_dtype=None, prefill_chunk: int = 64,
-                 enable_prefix_cache: bool = True):
+                 enable_prefix_cache: bool = True,
+                 max_top_k: int = sampling.MAX_TOP_K):
         if model.cfg.frontend is not None:
             raise NotImplementedError(
                 "continuous batching serves token frontends only")
@@ -170,32 +284,43 @@ class ContinuousServeEngine:
             raise ValueError(
                 f"num_pages={num_pages} cannot back even one max-length "
                 f"request ({self.max_blocks} blocks + scratch)")
-        self.temperature = temperature
-        self.top_k = top_k
+        self.default_sampling = (
+            sampling_params
+            or _legacy_sampling(temperature, top_k, "ContinuousServeEngine")
+            or sampling.GREEDY)
+        self.max_top_k = int(max_top_k)
         self.cache_dtype = cache_dtype
         if int(prefill_chunk) < 1:
             raise ValueError(f"prefill_chunk={prefill_chunk} must be >= 1")
         self.prefill_chunk = int(prefill_chunk)
         self.enable_prefix_cache = enable_prefix_cache
-        self._step = jax.jit(self._step_impl, donate_argnums=(1,))
+        self.defrag_every = 0
+        self._step_fn = jax.jit(self._step_impl, donate_argnums=(1,))
         self._chunk = jax.jit(self._chunk_impl, donate_argnums=(1,))
         self._copy_page = jax.jit(self._copy_page_impl, donate_argnums=(0,))
+        self._sched: Scheduler | None = None
 
     # -- jitted pieces ------------------------------------------------------
-    def _step_impl(self, params, pools, tokens, pos, page_table, key):
+    def _step_impl(self, params, pools, tokens, pos, page_table, temp, topk,
+                   topp, minp, seed):
         logits, pools = self.model.decode_step_paged(params, tokens, pools,
                                                      page_table, pos)
-        key, sub = jax.random.split(key)
-        nxt = sampling.sample(sub, logits, self.temperature, self.top_k)
-        return nxt, pools, key
+        # the incoming token sits at index pos; the one being generated at
+        # pos + 1 — its PRNG key is fold_in(seed, pos + 1)
+        nxt, lp = sampling.sample_slots(logits, temp, topk, topp, minp, seed,
+                                        pos + 1, max_top_k=self.max_top_k)
+        return nxt, lp, pools
 
     def _chunk_impl(self, params, pools, tokens, page_table, start, valid,
-                    key):
+                    temp, topk, topp, minp, seed):
         logits, pools = self.model.prefill_chunk_paged(
             params, tokens, pools, page_table, start, valid)
-        key, sub = jax.random.split(key)
-        first = sampling.sample(sub, logits, self.temperature, self.top_k)
-        return first, pools, key
+        # a request's first token is generated at index prompt_len ==
+        # start + valid of its final chunk (other rows' draws are ignored)
+        first, lp = sampling.sample_slots(logits, temp, topk, topp, minp,
+                                          seed, start + valid,
+                                          max_top_k=self.max_top_k)
+        return first, lp, pools
 
     def _copy_page_impl(self, pools, dst, src):
         """pools[dst] = pools[src] on every pool leaf (copy-on-write)."""
@@ -218,6 +343,58 @@ class ContinuousServeEngine:
                 for pool in pools[si]))
         return new_pools
 
+    # -- serving state ------------------------------------------------------
+    def reset(self) -> None:
+        """Drop all serving state and start an empty session (jitted
+        functions and their compile caches survive across sessions)."""
+        self.cache = PagedKVCache(num_slots=self.num_slots,
+                                  num_pages=self.num_pages,
+                                  page_size=self.page_size,
+                                  max_blocks=self.max_blocks,
+                                  enable_prefix_cache=self.enable_prefix_cache)
+        self._sched = Scheduler(self.cache, on_release=self._on_release)
+        self._slots = sampling.SlotSampling(self.num_slots)
+        self._pools = self.model.init_paged_cache(self.num_pages,
+                                                  self.page_size,
+                                                  dtype=self.cache_dtype)
+        self._t0 = time.monotonic()
+        self._steps, self._occ_sum = 0, 0.0
+        self._n_chunks, self._prefill_tokens = 0, 0
+        self._requests: list[Request] = []
+        self.defrag_every = 0      # run-scoped; run() re-applies its arg
+
+    def _on_release(self, slot: int) -> None:
+        self._slots.clear(slot)
+
+    def _now(self) -> float:
+        return time.monotonic() - self._t0
+
+    def has_unfinished(self) -> bool:
+        return self._sched is not None and self._sched.has_work()
+
+    def add_request(self, req: Request,
+                    sampling_params: SamplingParams | None = None) -> None:
+        """Submit one request; it enters the slot batch on a later
+        ``step()`` once a slot and pages free up (honoring arrival_time)."""
+        if self._sched is None:
+            self.reset()
+        if req.sampling is None:
+            req.sampling = sampling_params or self.default_sampling
+        if req.sampling.max_tokens is not None:
+            req.max_new_tokens = min(req.max_new_tokens,
+                                     req.sampling.max_tokens)
+        if req.sampling.top_k > self.max_top_k:
+            raise ValueError(f"request {req.rid}: top_k={req.sampling.top_k} "
+                             f"exceeds the engine's static "
+                             f"max_top_k={self.max_top_k}")
+        if req.prompt_len + req.max_new_tokens > self.max_blocks * self.page_size:
+            raise ValueError(
+                f"request {req.rid}: prompt {req.prompt_len} + "
+                f"{req.max_new_tokens} new tokens exceeds max_len "
+                f"{self.max_blocks * self.page_size}")
+        self._requests.append(req)
+        self._sched.submit([req])
+
     # -- host loop ----------------------------------------------------------
     @staticmethod
     def _bucket(n: int) -> int:
@@ -226,7 +403,34 @@ class ContinuousServeEngine:
             b *= 2
         return b
 
-    def _prefill_chunks(self, sched: Scheduler, pools, key, now):
+    def _make_output(self, req: Request, new: list[int],
+                     finished: bool) -> RequestOutput:
+        metrics = {"ttft": req.ttft, "preemptions": req.preemptions,
+                   "chunks": req.chunks, "shared_tokens": req.shared_tokens}
+        if finished:
+            metrics["finish_time"] = req.finish_time
+        return RequestOutput(
+            rid=req.rid, new_token_ids=list(new),
+            token_ids=list(req.tokens) if finished else [],
+            finished=finished,
+            finish_reason=req.finish_reason if finished else None,
+            logprobs=(list(req.logprobs)
+                      if finished and req.sampling.logprobs else None),
+            metrics=metrics)
+
+    def _progress(self, req: Request, outs: list[RequestOutput]) -> None:
+        """Apply finish reasons on-host and emit the unstreamed delta."""
+        reason = req.check_finish()
+        if reason is not None:
+            req.finish_reason = reason
+            self._sched.finish(req, self._now())
+        if len(req.tokens) > req.emitted or reason is not None:
+            new = req.tokens[req.emitted:]
+            req.emitted = len(req.tokens)
+            outs.append(self._make_output(req, new,
+                                          finished=reason is not None))
+
+    def _run_prefill_chunks(self, outs: list[RequestOutput]) -> None:
         """Advance every PREFILL request by one chunk (one jitted call,
         batched across slots at ragged offsets).
 
@@ -238,6 +442,7 @@ class ContinuousServeEngine:
         short prompt's chunk never gathers (or attends over) the full
         ``max_blocks`` view; jitted shapes stay bounded by
         O(log2(num_slots) * log2(max_blocks))."""
+        sched = self._sched
         pre = sched.prefilling()
         c = self.prefill_chunk
         bucket = self._bucket(len(pre))
@@ -255,11 +460,13 @@ class ContinuousServeEngine:
             tables[i] = table[r.slot, :nb]
             start[i] = r.pos
             valid[i] = n
-        first, pools, key = self._chunk(
-            self.params, pools, jnp.asarray(tokens), jnp.asarray(tables),
-            jnp.asarray(start), jnp.asarray(valid), key)
+        samp = sampling.stack_params([r.sampling for r in pre], bucket)
+        first, lp, self._pools = self._chunk(
+            self.params, self._pools, jnp.asarray(tokens), jnp.asarray(tables),
+            jnp.asarray(start), jnp.asarray(valid),
+            *(jnp.asarray(a) for a in samp))
         first = np.asarray(first)                      # device sync
-        done_now = []
+        lp = np.asarray(lp)
         for i, r in enumerate(pre):
             r.chunks += 1
             self._n_chunks += 1
@@ -268,93 +475,111 @@ class ContinuousServeEngine:
             if r.pos == r.prompt_len:                  # prefill complete
                 r.state = RUNNING
                 r.tokens.append(int(first[i]))
+                if r.sampling.logprobs:
+                    r.logprobs.append(float(lp[i]))
                 if r.first_token_time is None:
-                    # greedy restart re-emits the tokens the client already
-                    # has, so a preempted request keeps its original TTFT
-                    r.first_token_time = now()
+                    # a restart re-emits the tokens the client already has
+                    # (seeded streams), so a preempted request keeps its
+                    # original TTFT
+                    r.first_token_time = self._now()
                 self.cache.index_prompt(r.slot, r.prompt)
-                if r.done:
-                    done_now.append(r)
-        for r in done_now:
-            sched.finish(r, now())
-        return pools, key
+                self._progress(r, outs)
+
+    def step(self) -> list[RequestOutput]:
+        """One scheduler iteration: admit arrived requests, advance every
+        prefilling request by one chunk, run one fused decode step over the
+        decoding slots.  Returns the ``RequestOutput`` deltas produced this
+        iteration (may be empty — e.g. a chunk that completed no prompt).
+        Never sleeps; with no work due yet it returns immediately."""
+        if self._sched is None:
+            return []
+        sched = self._sched
+        outs: list[RequestOutput] = []
+        for r in sched.admit(self._now()):
+            self._slots.set(r.slot, r.sampling)
+        # -- chunked prefill, interleaved with the decode iterations --
+        if sched.prefilling():
+            self._run_prefill_chunks(outs)
+        if not sched.decoding():
+            return outs
+        # -- capacity + copy-on-write barrier for the decode writes --
+        for req in sched.decoding():
+            if sched.running.get(req.slot) is req:  # not yet preempted
+                if sched.ensure_capacity(req):
+                    moved = self.cache.cow(req.slot,
+                                           req.pos // self.page_size)
+                    if moved is not None:
+                        self._pools = self._copy_page(self._pools, moved[1],
+                                                      moved[0])
+        decoding = sched.decoding()
+        if not decoding:
+            return outs
+        if self.defrag_every and (self._steps + 1) % self.defrag_every == 0:
+            gather = self.cache.defrag()
+            if gather is not None:
+                self._pools = self._permute_pools(self._pools, gather)
+
+        tokens = np.zeros((self.num_slots,), np.int32)
+        pos = np.zeros((self.num_slots,), np.int32)
+        # slots still prefilling (or free) must not touch live pages:
+        # their rows are routed to the scratch page for this step
+        step_table = np.zeros_like(self.cache.table())
+        for req in decoding:
+            tokens[req.slot] = req.tokens[-1]
+            pos[req.slot] = req.pos
+            step_table[req.slot] = self.cache.table()[req.slot]
+        nxt, lp, self._pools = self._step_fn(
+            self.params, self._pools, jnp.asarray(tokens), jnp.asarray(pos),
+            jnp.asarray(step_table), *self._slots.arrays())
+        nxt = np.asarray(nxt)                          # device sync
+        lp = np.asarray(lp)
+        self._occ_sum += len(decoding) / self.num_slots
+        self._steps += 1
+        for req in decoding:
+            if sched.running.get(req.slot) is not req:
+                continue
+            req.tokens.append(int(nxt[req.slot]))
+            if req.sampling.logprobs:
+                req.logprobs.append(float(lp[req.slot]))
+            req.pos += 1
+            self._progress(req, outs)
+        return outs
 
     def run(self, requests: Iterable[Request], *, key=None,
-            defrag_every: int = 0) -> ContinuousStats:
-        """Serve ``requests`` to completion; honors ``arrival_time``."""
-        self.cache = PagedKVCache(num_slots=self.num_slots,
-                                  num_pages=self.num_pages,
-                                  page_size=self.page_size,
-                                  max_blocks=self.max_blocks,
-                                  enable_prefix_cache=self.enable_prefix_cache)
-        sched = Scheduler(self.cache)
+            defrag_every: int = 0,
+            on_output: Callable[[RequestOutput], None] | None = None
+            ) -> ContinuousStats:
+        """Serve ``requests`` to completion; honors ``arrival_time``.
+
+        ``on_output`` streams every ``RequestOutput`` delta as it is
+        produced.  ``key`` is the legacy entropy argument: it only seeds
+        requests that carry no ``SamplingParams`` of their own when the
+        engine default is stochastic."""
+        if self._sched is not None and self._sched.has_work():
+            raise RuntimeError(
+                "run() would reset the engine while incrementally-submitted "
+                "requests are unfinished; drive step() to completion first")
+        self.reset()
+        self.defrag_every = defrag_every
+        default = None
+        if (key is not None and not self.default_sampling.is_greedy
+                and self.default_sampling.seed == 0):
+            default = dataclasses.replace(self.default_sampling,
+                                          seed=_seed_from_key(key))
         requests = list(requests)
         for r in requests:
-            if r.prompt_len + r.max_new_tokens > self.max_blocks * self.page_size:
-                raise ValueError(
-                    f"request {r.rid}: prompt {r.prompt_len} + "
-                    f"{r.max_new_tokens} new tokens exceeds max_len "
-                    f"{self.max_blocks * self.page_size}")
-        sched.submit(requests)
-        pools = self.model.init_paged_cache(self.num_pages, self.page_size,
-                                            dtype=self.cache_dtype)
-        key = key if key is not None else jax.random.PRNGKey(0)
-        t0 = time.monotonic()
-        now = lambda: time.monotonic() - t0
-        steps, occ_sum = 0, 0.0
-        self._n_chunks, self._prefill_tokens = 0, 0
+            self.add_request(r, sampling_params=default)
 
+        sched = self._sched
         while sched.has_work():
-            sched.admit(now())
-            # -- chunked prefill, interleaved with the decode iterations --
-            if sched.prefilling():
-                pools, key = self._prefill_chunks(sched, pools, key, now)
-            if not sched.decoding():
-                if sched.prefilling():
-                    continue                           # more chunks to run
+            if not sched.running:
                 nxt_t = sched.next_arrival()
                 if nxt_t is None:
                     break
-                time.sleep(max(nxt_t - now(), 0.0))
-                continue
-            # -- capacity + copy-on-write barrier for the decode writes --
-            for req in sched.decoding():
-                if sched.running.get(req.slot) is req:  # not yet preempted
-                    if sched.ensure_capacity(req):
-                        moved = self.cache.cow(req.slot,
-                                               req.pos // self.page_size)
-                        if moved is not None:
-                            pools = self._copy_page(pools, moved[1], moved[0])
-            decoding = sched.decoding()
-            if not decoding:
-                continue
-            if defrag_every and (steps + 1) % defrag_every == 0:
-                gather = self.cache.defrag()
-                if gather is not None:
-                    pools = self._permute_pools(pools, gather)
-
-            tokens = np.zeros((self.num_slots,), np.int32)
-            pos = np.zeros((self.num_slots,), np.int32)
-            # slots still prefilling (or free) must not touch live pages:
-            # their rows are routed to the scratch page for this step
-            step_table = np.zeros_like(self.cache.table())
-            for req in decoding:
-                tokens[req.slot] = req.tokens[-1]
-                pos[req.slot] = req.pos
-                step_table[req.slot] = self.cache.table()[req.slot]
-            nxt, pools, key = self._step(
-                self.params, pools, jnp.asarray(tokens), jnp.asarray(pos),
-                jnp.asarray(step_table), key)
-            nxt = np.asarray(nxt)                      # device sync
-            occ_sum += len(decoding) / self.num_slots
-            steps += 1
-            for req in decoding:
-                if sched.running.get(req.slot) is not req:
-                    continue
-                req.tokens.append(int(nxt[req.slot]))
-                req.pos += 1
-                if req.done:
-                    sched.finish(req, now())
+                time.sleep(max(nxt_t - self._now(), 0.0))
+            for o in self.step():
+                if on_output is not None:
+                    on_output(o)
 
         results = {r.rid: np.asarray(r.tokens[:r.max_new_tokens], np.int32)
                    for r in requests}
@@ -363,17 +588,20 @@ class ContinuousServeEngine:
                                "shared_tokens": r.shared_tokens,
                                "ttft": r.ttft}
                        for r in requests}
+        outputs = {r.rid: self._make_output(r, [], finished=True)
+                   for r in requests}
         return ContinuousStats(
-            results=results, steps=steps,
-            occupancy=occ_sum / max(steps, 1),
-            wall=now(),
+            results=results, steps=self._steps,
+            occupancy=self._occ_sum / max(self._steps, 1),
+            wall=self._now(),
             preemptions=sum(r.preemptions for r in requests),
             chunks=self._n_chunks,
             prefill_tokens=self._prefill_tokens,
             prompt_tokens=self.cache.lookup_tokens,
             prefix_hit_tokens=self.cache.hit_tokens,
             cow_events=self.cache.cow_events,
-            per_request=per_request)
+            per_request=per_request,
+            outputs=outputs)
 
 
 def serve_step_fn(model: Model):

@@ -1,0 +1,242 @@
+"""``LLMEngine`` — one request-level generation front-end.
+
+The paper's serving scenario is many concurrent reasoning requests with
+long sampled output streams; the execution strategy underneath (static
+batch scan, continuous batching over paged KV, speculative draft/target)
+is a deployment decision, not an API.  ``LLMEngine`` is the single seam:
+
+    llm = LLMEngine(model, params, backend="continuous", max_len=256,
+                    num_slots=8)
+    outs = llm.generate(prompts, SamplingParams(temperature=0.8, top_p=0.9,
+                                                seed=7, max_tokens=64))
+
+Every backend takes the same per-request ``SamplingParams`` and returns
+the same structured ``RequestOutput`` list (token ids, finish_reason,
+optional logprobs, timing metrics).  Greedy requests are token-exact
+across all three backends; sampled requests are reproducible across the
+static and continuous backends (fold_in(seed, pos) streams — see
+``runtime.sampling``).  The continuous backend additionally streams
+incremental deltas through ``on_output`` / the ``add_request()``/
+``step()`` interface; static and speculative execution have no per-token
+host loop (that is their point), so they emit one final output per
+request.
+
+Future backends (SWA ring pages, SSM state admission, real-TPU serving)
+plug in behind this façade instead of growing new ad-hoc entrypoints.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+from repro.runtime import sampling
+from repro.runtime.engine import (
+    ContinuousServeEngine, RequestOutput, ServeEngine,
+)
+from repro.runtime.sampling import SamplingParams
+from repro.runtime.scheduler import Request
+
+BACKENDS = ("static", "continuous", "speculative")
+
+
+def _truncate(tokens: list[int], sp: SamplingParams,
+              budget: int) -> tuple[list[int], str]:
+    """Apply stop-token / budget finish semantics to a pre-generated
+    stream (the static scan and speculative windows have fixed trip
+    counts; the host applies the finish reason afterwards)."""
+    tokens = tokens[:budget]
+    for j, t in enumerate(tokens):
+        if t in sp.stop_token_ids:
+            return tokens[:j + 1], "stop"
+    return tokens, "length"
+
+
+class LLMEngine:
+    """One ``generate(prompts, sampling_params)`` API over static,
+    continuous, and speculative execution."""
+
+    def __init__(self, model: Model, params: Any, *,
+                 backend: str = "continuous", max_len: int = 256,
+                 num_slots: int = 8, page_size: int = 16,
+                 num_pages: int | None = None, prefill_chunk: int = 64,
+                 enable_prefix_cache: bool = True, cache_dtype=None,
+                 max_top_k: int = sampling.MAX_TOP_K,
+                 draft_model: Model | None = None, draft_params: Any = None,
+                 gamma: int = 8,
+                 default_sampling: SamplingParams | None = None):
+        if backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}, "
+                             f"got {backend!r}")
+        self.model = model
+        self.params = params
+        self.backend = backend
+        self.max_len = max_len
+        self.default_sampling = default_sampling or sampling.GREEDY
+        self.max_top_k = int(max_top_k)
+        self.last_stats = None          # ContinuousStats of the last run
+        if backend == "continuous":
+            if num_pages is None:
+                num_pages = 1 + 2 * num_slots * -(-max_len // page_size)
+            self._eng = ContinuousServeEngine(
+                model, params, num_slots=num_slots, page_size=page_size,
+                num_pages=num_pages, max_len=max_len,
+                sampling_params=self.default_sampling,
+                cache_dtype=cache_dtype, prefill_chunk=prefill_chunk,
+                enable_prefix_cache=enable_prefix_cache,
+                max_top_k=self.max_top_k)
+        elif backend == "static":
+            self._eng = ServeEngine(
+                model, params, max_len=max_len,
+                sampling_params=self.default_sampling, donate_cache=False,
+                cache_dtype=cache_dtype, max_top_k=self.max_top_k)
+        else:                            # speculative
+            # with no draft the target drafts for itself ("ideal draft"):
+            # every window accepts, output equals the target-only stream
+            self.draft_model = draft_model or model
+            self.draft_params = draft_params if draft_model is not None \
+                else params
+            self.gamma = gamma
+            self._eng = None
+
+    # -- request plumbing ---------------------------------------------------
+    def _resolve(self, prompts, sampling_params, max_new_tokens):
+        prompts = [np.asarray(p, np.int32).reshape(-1) for p in prompts]
+        n = len(prompts)
+        if sampling_params is None:
+            sps = [self.default_sampling] * n
+        elif isinstance(sampling_params, SamplingParams):
+            sps = [sampling_params] * n
+        else:
+            sps = list(sampling_params)
+            if len(sps) != n:
+                raise ValueError(f"{len(sps)} SamplingParams for "
+                                 f"{n} prompts")
+        budgets = []
+        for p, sp in zip(prompts, sps):
+            budget = sp.max_tokens if sp.max_tokens is not None \
+                else max_new_tokens
+            if budget is None:
+                raise ValueError("set SamplingParams.max_tokens or pass "
+                                 "max_new_tokens")
+            # the continuous engine enforces its own (page-rounded)
+            # capacity in add_request; static caches are exactly max_len
+            if (self.backend != "continuous"
+                    and p.shape[0] + budget > self.max_len):
+                raise ValueError(f"max_tokens={budget} exceeds max_len="
+                                 f"{self.max_len} for a {p.shape[0]}-token "
+                                 f"prompt")
+            budgets.append(int(budget))
+        return prompts, sps, budgets
+
+    # -- incremental interface (continuous backend) -------------------------
+    def add_request(self, prompt, sampling_params: SamplingParams | None = None,
+                    *, rid: int | None = None, max_new_tokens: int | None = None,
+                    arrival_time: float = 0.0) -> int:
+        """Submit one request to the continuous engine; returns its rid.
+        Drive with ``step()`` until ``has_unfinished()`` is False."""
+        if self.backend != "continuous":
+            raise ValueError("add_request()/step() need backend='continuous'")
+        (prompt,), (sp,), (budget,) = self._resolve(
+            [prompt], sampling_params, max_new_tokens)
+        if rid is None:
+            rid = getattr(self, "_next_rid", 0)
+        # explicit low rids must never rewind the auto-rid counter into
+        # collision with live requests
+        self._next_rid = max(getattr(self, "_next_rid", 0), rid + 1)
+        self._eng.add_request(Request(rid=rid, prompt=prompt,
+                                      max_new_tokens=budget, sampling=sp,
+                                      arrival_time=arrival_time))
+        return rid
+
+    def step(self) -> list[RequestOutput]:
+        if self.backend != "continuous":
+            raise ValueError("add_request()/step() need backend='continuous'")
+        return self._eng.step()
+
+    def has_unfinished(self) -> bool:
+        return self.backend == "continuous" and self._eng.has_unfinished()
+
+    # -- one-shot interface (all backends) ----------------------------------
+    def generate(self, prompts: Iterable, sampling_params=None, *,
+                 max_new_tokens: int | None = None,
+                 arrival_times: Sequence[float] | None = None,
+                 on_output: Callable[[RequestOutput], None] | None = None
+                 ) -> list[RequestOutput]:
+        """Generate for ``prompts`` (sequences of token ids); returns one
+        final ``RequestOutput`` per prompt, in order.
+
+        ``sampling_params``: one ``SamplingParams`` or a per-prompt list.
+        ``arrival_times`` (continuous only) replays a ragged arrival trace.
+        ``on_output`` streams incremental deltas (continuous) or final
+        outputs as each request completes (static / speculative)."""
+        prompts, sps, budgets = self._resolve(prompts, sampling_params,
+                                              max_new_tokens)
+        if arrival_times is not None and self.backend != "continuous":
+            raise ValueError("arrival_times needs backend='continuous'")
+        if self.backend == "continuous":
+            return self._generate_continuous(prompts, sps, budgets,
+                                             arrival_times, on_output)
+        if self.backend == "static":
+            return self._generate_static(prompts, sps, budgets, on_output)
+        return self._generate_speculative(prompts, sps, budgets, on_output)
+
+    def _generate_continuous(self, prompts, sps, budgets, arrival_times,
+                             on_output):
+        reqs = [Request(rid=i, prompt=prompts[i], max_new_tokens=budgets[i],
+                        sampling=sps[i],
+                        arrival_time=(float(arrival_times[i])
+                                      if arrival_times is not None else 0.0))
+                for i in range(len(prompts))]
+        stats = self._eng.run(reqs, on_output=on_output)
+        self.last_stats = stats
+        return [stats.outputs[i] for i in range(len(prompts))]
+
+    def _generate_static(self, prompts, sps, budgets, on_output):
+        lens = {p.shape[0] for p in prompts}
+        if len(lens) != 1:
+            raise ValueError(
+                "backend='static' batches one prompt length per call "
+                f"(got {sorted(lens)}); use backend='continuous' for "
+                "ragged prompts")
+        res = self._eng.generate({"tokens": jnp.asarray(np.stack(prompts))},
+                                 max_new_tokens=max(budgets),
+                                 sampling_params=sps)
+        toks = np.asarray(res.tokens)
+        outs = []
+        for i, sp in enumerate(sps):
+            ids, reason = _truncate([int(t) for t in toks[i]], sp, budgets[i])
+            lps = ([float(v) for v in np.asarray(res.logprobs)[i, :len(ids)]]
+                   if sp.logprobs else None)
+            out = RequestOutput(rid=i, new_token_ids=list(ids),
+                                token_ids=list(ids), finished=True,
+                                finish_reason=reason, logprobs=lps,
+                                metrics={})
+            outs.append(out)
+            if on_output is not None:
+                on_output(out)
+        return outs
+
+    def _generate_speculative(self, prompts, sps, budgets, on_output):
+        from repro.runtime.speculative import speculative_generate
+        outs = []
+        for i, (p, sp, budget) in enumerate(zip(prompts, sps, budgets)):
+            stats = speculative_generate(
+                self.draft_model, self.draft_params, self.model, self.params,
+                jnp.asarray(p)[None], max_new_tokens=budget,
+                gamma=self.gamma, sampling_params=sp,
+                key=jax.random.PRNGKey(sp.seed))
+            ids, reason = _truncate([int(t) for t in stats.tokens[:budget]],
+                                    sp, budget)
+            out = RequestOutput(
+                rid=i, new_token_ids=list(ids), token_ids=list(ids),
+                finished=True, finish_reason=reason, logprobs=None,
+                metrics={"windows": stats.windows,
+                         "accepted_per_window": stats.mean_accepted})
+            outs.append(out)
+            if on_output is not None:
+                on_output(out)
+        return outs

@@ -1,26 +1,320 @@
-"""Token sampling for the serve path (fp32 HP-VOPs analogue)."""
+"""Request-level sampling for the serve path (fp32 HP-VOPs analogue).
+
+``SamplingParams`` is the per-request generation contract shared by every
+engine front-end (static, continuous, speculative).  The batched per-slot
+sampler ``sample_slots`` runs *inside* the jitted decode step: per-slot
+temperature / top-k / top-p / min-p / seed live as ``(num_slots,)`` data
+arrays — changing the request mix never changes the jit signature, so an
+arbitrary blend of greedy and sampled requests shares one compiled step.
+
+Reproducibility invariant: each request draws the token at sequence index
+``pos`` from its own ``fold_in(PRNGKey(seed), pos)`` stream.  The key is a
+function of (seed, position) only — not the slot, not the step the engine
+happened to batch it into — so a restart-style preemption re-emits the
+SAME sampled tokens (extending the greedy-restart invariant to stochastic
+decoding), and slot permutations / static-vs-continuous execution agree
+token for token.
+"""
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+# Static cap for the per-slot top-k threshold: one ``lax.top_k(lg, MAX_TOP_K)``
+# yields the k-th-largest value for every per-slot k <= MAX_TOP_K as a data
+# lookup, keeping per-request k out of the jit signature.
+MAX_TOP_K = 64
+
+# Static budget for the standalone helpers' top-p nucleus scan: cumulative
+# mass is taken over the ``lax.top_k(p, TOP_P_BUDGET)`` prefix instead of a
+# full-vocab sort (XLA:CPU sorts are ~20x slower than top_k at serving
+# vocab sizes).  Exact whenever the nucleus fits the budget; if a
+# (near-flat) distribution spills past it, the filter degrades soundly to
+# keep-everything.
+TOP_P_BUDGET = 512
+
+# Candidate-set width of the fused per-slot sampler: ONE
+# ``lax.top_k(logits, SLOT_CANDIDATES)`` supplies the greedy argmax, every
+# per-slot top-k threshold, the top-p nucleus scan, and the draw
+# candidates, so the whole sampler runs in a (B, 128) subspace with a
+# single full-vocab reduction (the greedy-logprob normalizer).  Sampling
+# is truncated to the 128 most probable tokens: exact for any top-k <=
+# MAX_TOP_K (the kept set then lies inside the subspace, so the top-p
+# nucleus matches ``dist``); with top-k off, the distribution — and hence
+# the nucleus scale — is renormalized over the subspace, dropping the deep
+# tail (a standard serving trade-off), which keeps the sampler well under
+# 5% of decode-step latency (benchmarks/sampling_overhead.py).
+SLOT_CANDIDATES = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request generation parameters.
+
+    temperature  0.0 = greedy; > 0 scales logits before sampling.
+    top_k        0 = disabled; else sample among the k highest logits
+                 (engines cap k at their static ``max_top_k``).
+    top_p        nucleus sampling: keep the smallest prefix of the sorted
+                 distribution with cumulative mass >= top_p (1.0 = off).
+    min_p        drop tokens below ``min_p * max_prob`` (0.0 = off).
+    seed         PRNG stream id; token at position ``pos`` is drawn with
+                 ``fold_in(PRNGKey(seed), pos)`` (see module docstring).
+    stop_token_ids  generation finishes ("stop") when one is emitted.
+    max_tokens   generation budget; finishes with reason "length".
+                 None defers to the caller's ``max_new_tokens``.
+    logprobs     return the chosen token's logprob under the final
+                 (filtered, temperature-scaled) distribution.
+    """
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    min_p: float = 0.0
+    seed: int = 0
+    stop_token_ids: tuple[int, ...] = ()
+    max_tokens: int | None = None
+    logprobs: bool = False
+
+    def __post_init__(self):
+        if self.temperature < 0.0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        if not 0.0 <= self.min_p < 1.0:
+            raise ValueError(f"min_p must be in [0, 1), got {self.min_p}")
+        if not 0 <= self.seed < 2 ** 31:   # lives in int32 slot tensors
+            raise ValueError(f"seed must be in [0, 2^31), got {self.seed}")
+        if self.max_tokens is not None and self.max_tokens < 1:
+            raise ValueError(f"max_tokens must be >= 1, got {self.max_tokens}")
+        object.__setattr__(self, "stop_token_ids",
+                           tuple(int(t) for t in self.stop_token_ids))
+
+    @property
+    def is_greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+GREEDY = SamplingParams()
 
 
 def greedy(logits: jnp.ndarray) -> jnp.ndarray:
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
 
+def token_key(seed, pos):
+    """The PRNG key for the token at sequence index ``pos`` of stream
+    ``seed`` — the whole reproducibility invariant lives here."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), pos)
+
+
+def _topp_threshold(probs: jnp.ndarray, top_p,
+                    budget: int = TOP_P_BUDGET) -> jnp.ndarray:
+    """Smallest kept probability of the top-p nucleus, per row.
+
+    probs (..., V); top_p broadcastable to (...,).  An entry is in the
+    nucleus iff the cumulative mass of strictly-larger entries is < top_p,
+    so the max-prob token is always kept and top_p=1.0 keeps everything.
+    The scan runs over the descending ``lax.top_k`` prefix of ``budget``
+    entries (no full-vocab sort); a nucleus spilling past the budget keeps
+    everything (threshold 0)."""
+    v = probs.shape[-1]
+    budget = min(budget, v)
+    tops = jax.lax.top_k(probs, budget)[0]             # descending
+    cum = jnp.cumsum(tops, axis=-1)
+    top_p = jnp.asarray(top_p)[..., None]
+    keep = (cum - tops) < top_p
+    thresh = jnp.min(jnp.where(keep, tops, jnp.inf), axis=-1)
+    if budget == v:
+        return thresh
+    spilled = cum[..., -1] < top_p[..., 0]
+    return jnp.where(spilled, 0.0, thresh)
+
+
 def sample(key, logits: jnp.ndarray, temperature: float = 1.0,
-           top_k: int = 0) -> jnp.ndarray:
-    """Temperature / top-k sampling.  logits: (..., V) -> (...) int32."""
+           top_k: int = 0, top_p: float = 1.0,
+           min_p: float = 0.0) -> jnp.ndarray:
+    """Single-distribution sampling with static (Python-level) params.
+
+    logits: (..., V) -> (...) int32.  top-k uses ``jax.lax.top_k``
+    (O(V log k)) rather than a full vocab sort."""
     if temperature <= 0.0:
         return greedy(logits)
     lg = logits.astype(jnp.float32) / temperature
     if top_k:
-        kth = jnp.sort(lg, axis=-1)[..., -top_k][..., None]
+        kth = jax.lax.top_k(lg, min(top_k, lg.shape[-1]))[0][..., -1:]
         lg = jnp.where(lg < kth, -jnp.inf, lg)
+    if top_p < 1.0 or min_p > 0.0:
+        p = jax.nn.softmax(lg, axis=-1)
+        keep = p >= _topp_threshold(p, top_p)[..., None] if top_p < 1.0 \
+            else jnp.ones_like(p, bool)
+        if min_p > 0.0:
+            keep &= p >= min_p * jnp.max(p, axis=-1, keepdims=True)
+        lg = jnp.where(keep, lg, -jnp.inf)
     return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
 
 
 def probs(logits: jnp.ndarray, temperature: float = 1.0) -> jnp.ndarray:
     return jax.nn.softmax(logits.astype(jnp.float32) / max(temperature, 1e-6),
                           axis=-1)
+
+
+def dist(logits: jnp.ndarray, params: SamplingParams) -> jnp.ndarray:
+    """The full filtered distribution a request samples from: (..., V) probs.
+
+    Greedy requests get an exact one-hot at the argmax (not a sharpened
+    softmax), so draft/target acceptance ratios in speculative decoding are
+    well-defined at temperature 0.  Draft proposals MUST be drawn from this
+    same distribution (via ``draw``) for the acceptance rule to be correct
+    under top-k/top-p filtering."""
+    lg = logits.astype(jnp.float32)
+    if params.is_greedy:
+        return jax.nn.one_hot(jnp.argmax(lg, -1), lg.shape[-1],
+                              dtype=jnp.float32)
+    lg = lg / params.temperature
+    if params.top_k:
+        kth = jax.lax.top_k(lg, min(params.top_k, lg.shape[-1]))[0][..., -1:]
+        lg = jnp.where(lg < kth, -jnp.inf, lg)
+    p = jax.nn.softmax(lg, axis=-1)
+    if params.top_p < 1.0 or params.min_p > 0.0:
+        keep = p >= _topp_threshold(p, params.top_p)[..., None]
+        if params.min_p > 0.0:
+            keep &= p >= params.min_p * jnp.max(p, axis=-1, keepdims=True)
+        p = jnp.where(keep, p, 0.0)
+        p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return p
+
+
+def draw(key, dist: jnp.ndarray) -> jnp.ndarray:
+    """Sample token ids from an explicit distribution (..., V) -> (...)."""
+    return jax.random.categorical(
+        key, jnp.log(jnp.maximum(dist, 1e-20)), axis=-1).astype(jnp.int32)
+
+
+def sample_slots(logits: jnp.ndarray, temperature, top_k, top_p, min_p,
+                 seed, pos, *, max_top_k: int = MAX_TOP_K):
+    """Batched per-slot sampler, fused into the jitted decode step.
+
+    logits: (B, V).  temperature/top_p/min_p: (B,) f32; top_k/seed/pos:
+    (B,) i32 (``pos`` broadcastable) — all DATA, so one compiled step
+    serves any mix of greedy and sampled slots.  Slots with temperature
+    <= 0 take the argmax; everything else draws from the filtered
+    temperature-scaled distribution with ``token_key(seed, pos)``.
+
+    Returns (tokens (B,) i32, logprobs (B,) f32) — the chosen token's
+    logprob under the distribution it was drawn from (raw softmax for
+    greedy slots).
+
+    Hot-path shape: ONE static ``lax.top_k`` extracts the
+    ``SLOT_CANDIDATES`` candidate subspace (argmax, per-slot top-k
+    thresholds, top-p nucleus scan, and draw candidates all come from it —
+    no full-vocab sort, and sampling beyond the candidate set is
+    truncated, see ``SLOT_CANDIDATES``); the draw is a single uniform per
+    slot inverted through the filtered CDF (no per-token Gumbel noise).
+    ``benchmarks/sampling_overhead.py`` holds the whole sampler under 5%
+    of decode-step latency.
+    """
+    lg = logits.astype(jnp.float32)
+    b, v = lg.shape
+    rows = jnp.arange(b)
+    pos = jnp.broadcast_to(pos, (b,))
+    is_greedy = temperature <= 0.0
+    kmax = min(int(max_top_k), v)
+    budget = min(max(kmax, SLOT_CANDIDATES), v)
+    # VALUES-only top_k: touching the indices output from a fused compute
+    # chain makes XLA:CPU fall back to a full-vocab variadic sort (~10x
+    # slower than the top-k itself); token ids are recovered at the end by
+    # matching the drawn value back into the logits row
+    tops = jax.lax.top_k(lg, budget)[0]         # (B, budget) descending
+    s = tops / jnp.where(is_greedy, 1.0, temperature)[:, None]
+    # per-slot top-k is a rank cut in the descending subspace (k == 0
+    # disables); top-p / min-p act on the post-top-k renormalized
+    # distribution (same order as the standalone ``sample`` / ``dist``)
+    k = jnp.clip(top_k, 0, kmax)
+    ranks = jnp.arange(budget)[None, :]
+    keep = (k == 0)[:, None] | (ranks < k[:, None])
+    z = jax.nn.logsumexp(jnp.where(keep, s, -jnp.inf), axis=-1,
+                         keepdims=True)
+    p = jnp.where(keep, jnp.exp(s - z), 0.0)    # descending within keep
+    cum = jnp.cumsum(p, axis=-1)
+    keep &= (cum - p) < top_p[:, None]          # nucleus (rank 0 always in)
+    keep &= p >= min_p[:, None] * p[:, :1]
+    w = jnp.where(keep, p, 0.0)
+    # inverse-CDF draw: one uniform per slot from its fold_in(seed, pos)
+    # stream, inverted through the filtered distribution's CDF
+    wcum = jnp.cumsum(w, axis=-1)
+    total = wcum[:, -1]
+    keys = jax.vmap(token_key)(seed, pos)
+    u = jax.vmap(lambda kk: jax.random.uniform(kk, ()))(keys)
+    r = jnp.sum(wcum <= (u * total)[:, None], axis=-1)
+    r = jnp.minimum(r, budget - 1)
+    # recover the token id by matching the drawn rank's VALUE back into
+    # the logits row; exact-equal logits collapse to the lowest index
+    # (deterministic; bit-equal logits are vanishingly rare off toy
+    # models, and such tokens are equiprobable up to that relabeling)
+    chosen = jnp.take_along_axis(tops, r[:, None], axis=1)
+    sampled = jnp.argmax(lg == chosen, axis=-1).astype(jnp.int32)
+    tok = jnp.where(is_greedy, jnp.argmax(lg, axis=-1).astype(jnp.int32),
+                    sampled)
+    # chosen-token logprob under the distribution it was drawn from
+    lp_greedy = tops[:, 0] - jax.nn.logsumexp(lg, axis=-1)
+    lp_sampled = jnp.log(jnp.maximum(w[rows, r], 1e-38)) - jnp.log(total)
+    return tok, jnp.where(is_greedy, lp_greedy, lp_sampled)
+
+
+def stack_params(ps, n: int | None = None):
+    """Stack per-request ``SamplingParams`` into per-row data arrays.
+
+    Returns (temperature, top_k, top_p, min_p, seed) numpy arrays of shape
+    (n,); rows past ``len(ps)`` are greedy padding."""
+    n = len(ps) if n is None else n
+    temp = np.zeros((n,), np.float32)
+    topk = np.zeros((n,), np.int32)
+    topp = np.ones((n,), np.float32)
+    minp = np.zeros((n,), np.float32)
+    seed = np.zeros((n,), np.int32)
+    for i, sp in enumerate(ps):
+        temp[i] = sp.temperature
+        topk[i] = sp.top_k
+        topp[i] = sp.top_p
+        minp[i] = sp.min_p
+        seed[i] = sp.seed
+    return temp, topk, topp, minp, seed
+
+
+class SlotSampling:
+    """Per-slot sampling tensors living alongside the page table.
+
+    Set on admission, cleared on eviction/finish; freed slots fall back to
+    greedy so their (masked, scratch-routed) rows stay harmless.  The
+    engine hands ``arrays()`` to the jitted step every iteration — data,
+    not shapes, so the mix never recompiles."""
+
+    def __init__(self, num_slots: int):
+        (self.temperature, self.top_k, self.top_p, self.min_p,
+         self.seed) = stack_params([], num_slots)
+        self._device = None
+
+    def set(self, slot: int, sp: SamplingParams) -> None:
+        self.temperature[slot] = sp.temperature
+        self.top_k[slot] = sp.top_k
+        self.top_p[slot] = sp.top_p
+        self.min_p[slot] = sp.min_p
+        self.seed[slot] = sp.seed
+        self._device = None
+
+    def clear(self, slot: int) -> None:
+        self.set(slot, GREEDY)
+
+    def arrays(self):
+        # slots mutate only at admit/release; steady-state decode steps
+        # reuse the transferred device arrays
+        if self._device is None:
+            self._device = (
+                jnp.asarray(self.temperature), jnp.asarray(self.top_k),
+                jnp.asarray(self.top_p), jnp.asarray(self.min_p),
+                jnp.asarray(self.seed))
+        return self._device

@@ -21,20 +21,25 @@ then prefill in fixed-size chunks interleaved with decode iterations, so
 admission never stalls the running batch.
 
 Preemption (when the page pool is exhausted) is restart-style: the victim
-loses its pages and generated tokens and re-queues at the front.  With
-greedy decoding a restart reproduces the same tokens (and may re-hit the
-prefix cache for its prompt), so preemption is invisible in the output
-stream.
+loses its pages and generated tokens and re-queues at the front.  A
+restart reproduces the same tokens — greedy trivially, and sampled
+requests because every token's PRNG key is ``fold_in(seed, pos)`` (a
+function of the request's seed and the token's sequence index only, see
+``runtime.sampling``) — so preemption is invisible in the output stream.
+The ``emitted`` counter is the one field a restart must NOT reset: it
+marks how much of the stream the client has already seen, so the engine
+re-emits nothing twice.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Iterable
+from typing import Callable, Iterable
 
 import numpy as np
 
 from repro.runtime.kv_cache import PagedKVCache
+from repro.runtime.sampling import SamplingParams
 
 PENDING, PREFILL, RUNNING, FINISHED = "pending", "prefill", "running", "finished"
 
@@ -45,11 +50,15 @@ class Request:
     prompt: np.ndarray                 # (plen,) int32 token ids
     max_new_tokens: int
     arrival_time: float = 0.0          # seconds relative to serve start
+    sampling: SamplingParams | None = None   # engine default when None
     # -- mutable lifecycle state --
     state: str = PENDING
     slot: int = -1
     pos: int = 0                       # next cache write/prefill position
     tokens: list[int] = dataclasses.field(default_factory=list)
+    logprobs: list[float] = dataclasses.field(default_factory=list)
+    emitted: int = 0                   # tokens already streamed to the client
+    finish_reason: str | None = None   # "stop" | "length" once finished
     admit_time: float | None = None
     first_token_time: float | None = None
     finish_time: float | None = None
@@ -61,9 +70,20 @@ class Request:
     def prompt_len(self) -> int:
         return int(self.prompt.shape[0])
 
+    def check_finish(self) -> str | None:
+        """The finish reason the current token stream implies, or None —
+        the single source of the stop/length rule (the engine applies it
+        between steps)."""
+        if (self.sampling and self.sampling.stop_token_ids and self.tokens
+                and self.tokens[-1] in self.sampling.stop_token_ids):
+            return "stop"
+        if len(self.tokens) >= self.max_new_tokens:
+            return "length"
+        return None
+
     @property
     def done(self) -> bool:
-        return len(self.tokens) >= self.max_new_tokens
+        return self.check_finish() is not None
 
     @property
     def ttft(self) -> float | None:
@@ -76,12 +96,16 @@ class Request:
 class Scheduler:
     """Slot-based admission over a paged KV cache."""
 
-    def __init__(self, cache: PagedKVCache):
+    def __init__(self, cache: PagedKVCache,
+                 on_release: Callable[[int], None] | None = None):
         self.cache = cache
         self.num_slots = cache.num_slots
         self.waiting: deque[Request] = deque()
         self.running: dict[int, Request] = {}
         self._free_slots: list[int] = list(range(self.num_slots))[::-1]
+        # engine hook: a slot's per-slot sampling tensors are cleared the
+        # moment the slot frees (preempt/finish), alongside its page rows
+        self.on_release = on_release
 
     # -- queries ------------------------------------------------------------
     def has_work(self) -> bool:
@@ -154,17 +178,26 @@ class Scheduler:
         return True
 
     def preempt(self, req: Request) -> None:
-        self.cache.release(req.slot)
-        self.running.pop(req.slot)
-        self._free_slots.append(req.slot)
+        slot = req.slot
+        self.cache.release(slot)
+        self.running.pop(slot)
+        self._free_slots.append(slot)
         req.preemptions += 1
         req.state, req.slot, req.pos = PENDING, -1, 0
+        # restart re-derives the identical tokens (fold_in(seed, pos)
+        # streams); ``emitted`` survives so nothing is streamed twice
         req.tokens.clear()
+        req.logprobs.clear()
         self.waiting.appendleft(req)
+        if self.on_release:
+            self.on_release(slot)
 
     def finish(self, req: Request, now: float) -> None:
-        self.cache.release(req.slot)
-        self.running.pop(req.slot)
-        self._free_slots.append(req.slot)
+        slot = req.slot
+        self.cache.release(slot)
+        self.running.pop(slot)
+        self._free_slots.append(slot)
         req.state, req.finish_time = FINISHED, now
         req.slot = -1
+        if self.on_release:
+            self.on_release(slot)

@@ -15,6 +15,15 @@ positions carry slot_pos > cur_pos so they are masked out and later
 overwritten — no explicit rollback pass is needed.  SSM-state models
 cannot rewind state and are rejected (the paper's draft/target pairs are
 attention-based).
+
+Draft proposals and target verification both go through the SHARED
+``sampling.dist`` / ``sampling.draw`` helpers with the request's
+``SamplingParams``: the draft draws from exactly the distribution recorded
+as q, and the target scores with the same temperature / top-k / top-p /
+min-p filtering — so the acceptance ratio p/q (and the acceptance-rate
+stats built on it) stays correct under per-request sampling parameters.
+At temperature 0 both distributions are exact one-hots, keeping greedy
+speculation lossless.
 """
 from __future__ import annotations
 
@@ -25,6 +34,7 @@ import jax.numpy as jnp
 
 from repro.models.model import Model
 from repro.runtime import sampling
+from repro.runtime.sampling import SamplingParams
 
 
 @dataclasses.dataclass
@@ -45,23 +55,28 @@ def _check_rewindable(model: Model):
 
 
 def make_speculative_window(draft: Model, target: Model, *, gamma: int = 8,
-                            temperature: float = 1.0):
+                            temperature: float = 1.0,
+                            sampling_params: SamplingParams | None = None):
     """Build the jitted draft-propose / target-verify window (batch=1).
 
     window(dparams, tparams, last_token (1,), dcache, tcache, pos, key)
       -> (tokens (gamma+1,), n_emitted, dcache, tcache, new_pos)
     Entries past n_emitted are padding and must be ignored.
     """
+    sp = (sampling_params if sampling_params is not None
+          else SamplingParams(temperature=temperature))
 
     def window(dparams, tparams, last_token, dcache, tcache, pos, key):
         kd, kr = jax.random.split(key, 2)
 
-        # --- draft proposes gamma tokens, recording its full distributions
+        # --- draft proposes gamma tokens; each draw comes from the SAME
+        # filtered distribution recorded as q (sampling.dist/draw), so the
+        # acceptance ratio sees the true proposal distribution
         def d_step(carry, k):
             tok, cache, p = carry
             logits, cache = draft.decode_step(dparams, tok, cache, p)
-            dist = sampling.probs(logits, temperature)[0]         # (V,)
-            nxt = sampling.sample(k, logits, temperature)
+            dist = sampling.dist(logits, sp)[0]                   # (V,)
+            nxt = sampling.draw(k, dist[None])
             return (nxt, cache, p + 1), (nxt[0], dist)
 
         (_, dcache, _), (prop, q_dist) = jax.lax.scan(
@@ -85,7 +100,7 @@ def make_speculative_window(draft: Model, target: Model, *, gamma: int = 8,
         def t_step(carry, tok):
             cache, p = carry
             logits, cache = target.decode_step(tparams, tok[None], cache, p)
-            return (cache, p + 1), sampling.probs(logits, temperature)[0]
+            return (cache, p + 1), sampling.dist(logits, sp)[0]
 
         (tcache, _), p_dist = jax.lax.scan(t_step, (tcache, pos), t_inputs)
 
@@ -105,10 +120,9 @@ def make_speculative_window(draft: Model, target: Model, *, gamma: int = 8,
         resid = jnp.maximum(p_dist[n_acc] - q_pad[n_acc], 0.0)
         resid_ok = jnp.sum(resid) > 1e-20
         full_accept = n_acc == gamma
-        dist = jnp.where(full_accept | ~resid_ok, p_dist[n_acc], resid)
-        key2 = jax.random.fold_in(kr, 1)
-        corrected = jax.random.categorical(
-            key2, jnp.log(jnp.maximum(dist, 1e-20))).astype(jnp.int32)
+        corr_dist = jnp.where(full_accept | ~resid_ok, p_dist[n_acc], resid)
+        corrected = sampling.draw(jax.random.fold_in(kr, 1),
+                                  corr_dist / jnp.sum(corr_dist))
 
         tokens = jnp.where(idx < n_acc, prop, 0)
         tokens = jnp.concatenate([tokens, jnp.zeros((1,), jnp.int32)])
@@ -122,12 +136,15 @@ def make_speculative_window(draft: Model, target: Model, *, gamma: int = 8,
 def speculative_generate(draft: Model, dparams, target: Model, tparams,
                          prompt: jnp.ndarray, *, max_new_tokens: int,
                          gamma: int = 8, temperature: float = 1.0,
+                         sampling_params: SamplingParams | None = None,
                          max_len: int | None = None,
                          key=None) -> SpecStats:
     """Generate ``max_new_tokens`` tokens for a (1, S) prompt."""
     _check_rewindable(draft)
     _check_rewindable(target)
-    key = key if key is not None else jax.random.PRNGKey(0)
+    sp = (sampling_params if sampling_params is not None
+          else SamplingParams(temperature=temperature))
+    key = key if key is not None else jax.random.PRNGKey(sp.seed)
     s = prompt.shape[1]
     max_len = max_len or (s + max_new_tokens + gamma + 2)
 
@@ -137,11 +154,11 @@ def speculative_generate(draft: Model, dparams, target: Model, tparams,
     tlogits, tcache = jax.jit(target.prefill)(tparams, {"tokens": prompt}, tcache)
 
     key, k0 = jax.random.split(key)
-    last = sampling.sample(k0, tlogits, temperature)       # (1,)
+    last = sampling.draw(k0, sampling.dist(tlogits, sp))   # (1,)
     pos = jnp.int32(s)
 
     window = make_speculative_window(draft, target, gamma=gamma,
-                                     temperature=temperature)
+                                     sampling_params=sp)
 
     out = [int(last[0])]
     accepted = []

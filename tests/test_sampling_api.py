@@ -1,0 +1,389 @@
+"""Request-level generation API: SamplingParams, the fused per-slot
+sampler, determinism invariants (slot permutation / preemption-restart /
+static-vs-continuous), the no-recompile guarantee, finish reasons,
+streaming outputs, and the LLMEngine façade over all three backends."""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.models.model import build_model
+from repro.runtime import sampling
+from repro.runtime.engine import ContinuousServeEngine, ServeEngine
+from repro.runtime.llm import LLMEngine
+from repro.runtime.sampling import SamplingParams
+from repro.runtime.scheduler import Request
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = reduced_config(get_config("qwen3-14b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+# ---------------------------------------------------------------------------
+# SamplingParams + standalone helpers
+# ---------------------------------------------------------------------------
+
+
+def test_sampling_params_validation():
+    with pytest.raises(ValueError):
+        SamplingParams(temperature=-1.0)
+    with pytest.raises(ValueError):
+        SamplingParams(top_p=0.0)
+    with pytest.raises(ValueError):
+        SamplingParams(min_p=1.0)
+    with pytest.raises(ValueError):
+        SamplingParams(max_tokens=0)
+    sp = SamplingParams(stop_token_ids=[3, np.int32(7)])
+    assert sp.stop_token_ids == (3, 7)
+    assert sp.is_greedy and not SamplingParams(temperature=0.5).is_greedy
+
+
+def test_sample_top_p_restricts_support():
+    lg = jnp.log(jnp.asarray([[0.5, 0.3, 0.15, 0.05]]))
+    for i in range(30):
+        t = sampling.sample(jax.random.fold_in(jax.random.PRNGKey(1), i),
+                            lg, 1.0, 0, 0.6)
+        assert int(t[0]) in (0, 1)            # nucleus = {0.5, 0.3}
+    # top_p=1.0 eventually reaches the tail
+    seen = {int(sampling.sample(jax.random.fold_in(jax.random.PRNGKey(2), i),
+                                lg, 1.0)[0]) for i in range(200)}
+    assert len(seen) > 2
+
+
+def test_sample_min_p_restricts_support():
+    lg = jnp.log(jnp.asarray([[0.5, 0.3, 0.15, 0.05]]))
+    for i in range(30):
+        t = sampling.sample(jax.random.fold_in(jax.random.PRNGKey(3), i),
+                            lg, 1.0, 0, 1.0, 0.4)
+        assert int(t[0]) in (0, 1)            # floor = 0.4 * 0.5 = 0.2
+
+
+def test_sample_slots_greedy_rows_match_argmax():
+    key = jax.random.PRNGKey(0)
+    logits = jax.random.normal(key, (5, 97))
+    temp, topk, topp, minp, seed = sampling.stack_params(
+        [sampling.GREEDY] * 5)
+    tok, lp = sampling.sample_slots(logits, jnp.asarray(temp),
+                                    jnp.asarray(topk), jnp.asarray(topp),
+                                    jnp.asarray(minp), jnp.asarray(seed),
+                                    jnp.zeros((5,), jnp.int32))
+    np.testing.assert_array_equal(np.asarray(tok),
+                                  np.asarray(jnp.argmax(logits, -1)))
+    ref_lp = jax.nn.log_softmax(logits, -1)[jnp.arange(5), tok]
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(ref_lp), rtol=1e-5)
+
+
+def test_sample_slots_row_permutation_invariant():
+    """The sampler is per-row: permuting rows permutes tokens — the device
+    half of the slot-assignment determinism invariant."""
+    logits = jax.random.normal(jax.random.PRNGKey(4), (6, 64))
+    args = sampling.stack_params(
+        [SamplingParams(temperature=0.9, top_k=7, top_p=0.9, seed=i)
+         for i in range(6)])
+    pos = np.arange(10, 16, dtype=np.int32)
+    tok, lp = sampling.sample_slots(
+        logits, *(jnp.asarray(a) for a in args), jnp.asarray(pos))
+    perm = np.asarray([3, 0, 5, 1, 4, 2])
+    tok2, lp2 = sampling.sample_slots(
+        jnp.asarray(np.asarray(logits)[perm]),
+        *(jnp.asarray(np.asarray(a)[perm]) for a in args),
+        jnp.asarray(pos[perm]))
+    np.testing.assert_array_equal(np.asarray(tok)[perm], np.asarray(tok2))
+    np.testing.assert_array_equal(np.asarray(lp)[perm], np.asarray(lp2))
+
+
+def test_sample_slots_topk_topp_support():
+    p = jnp.asarray([[0.4, 0.3, 0.2, 0.05, 0.05]])
+    lg = jnp.log(jnp.tile(p, (32, 1)))
+    # top_k=3 cuts {3,4}; top_p=0.5 then cuts index 2 (0.4+0.3 >= 0.5)
+    args = sampling.stack_params(
+        [SamplingParams(temperature=1.0, top_k=3, top_p=0.5, seed=s)
+         for s in range(32)])
+    tok, _ = sampling.sample_slots(lg, *(jnp.asarray(a) for a in args),
+                                   jnp.arange(32, dtype=jnp.int32))
+    assert set(np.asarray(tok).tolist()) <= {0, 1}
+
+
+# ---------------------------------------------------------------------------
+# Engine determinism invariants (the tentpole's acceptance criteria)
+# ---------------------------------------------------------------------------
+
+
+SP = [SamplingParams(temperature=0.8, top_k=8, top_p=0.95, seed=100 + i)
+      for i in range(4)]
+
+
+def _reqs(toks, order, G=8):
+    return [Request(rid=i, prompt=np.asarray(toks[i]), max_new_tokens=G,
+                    sampling=SP[i]) for i in order]
+
+
+@pytest.fixture(scope="module")
+def sampled_runs(small):
+    """One reference sampled run shared by the determinism tests."""
+    cfg, model, params = small
+    toks = np.asarray(jax.random.randint(jax.random.PRNGKey(1), (4, 12), 0,
+                                         cfg.vocab_size))
+    eng = ContinuousServeEngine(model, params, num_slots=3, page_size=4,
+                                num_pages=64, max_len=21)
+    ref = eng.run(_reqs(toks, [0, 1, 2, 3]))
+    return toks, eng, ref
+
+
+def test_sampled_deterministic_across_slot_assignments(sampled_runs):
+    """Same seeds, submission order reversed => different rid->slot map,
+    byte-identical tokens per request."""
+    toks, eng, ref = sampled_runs
+    out = eng.run(_reqs(toks, [3, 2, 1, 0]))
+    for i in range(4):
+        np.testing.assert_array_equal(ref.results[i], out.results[i])
+
+
+def test_sampled_deterministic_across_forced_preemption(small, sampled_runs):
+    """A page pool tight enough to force eviction/restart must re-emit the
+    same sampled tokens (fold_in(seed, pos) streams)."""
+    cfg, model, params = small
+    toks, _, ref = sampled_runs
+    tight = ContinuousServeEngine(model, params, num_slots=3, page_size=4,
+                                  num_pages=12, max_len=21)
+    out = tight.run(_reqs(toks, [0, 1, 2, 3]))
+    assert out.preemptions > 0                 # pressure was real
+    for i in range(4):
+        np.testing.assert_array_equal(ref.results[i], out.results[i])
+
+
+def test_sampled_static_matches_continuous_batch1(small, sampled_runs):
+    cfg, model, params = small
+    toks, eng, _ = sampled_runs
+    seng = ServeEngine(model, params, max_len=21, donate_cache=False)
+    st = seng.generate({"tokens": jnp.asarray(toks[:1])}, max_new_tokens=8,
+                       sampling_params=SP[0])
+    ct = eng.run(_reqs(toks, [0]))
+    np.testing.assert_array_equal(np.asarray(st.tokens[0]), ct.results[0])
+
+
+def test_changing_sampling_params_never_recompiles(small, sampled_runs):
+    """One decode-step jit signature serves any greedy/sampled mix."""
+    cfg, model, params = small
+    toks, eng, _ = sampled_runs
+    n_step = eng._step_fn._cache_size()
+    n_chunk = eng._chunk._cache_size()
+    mix = [SamplingParams(),                          # greedy
+           SamplingParams(temperature=1.3, top_p=0.8, seed=1),
+           SamplingParams(temperature=0.4, top_k=2, min_p=0.2, seed=2),
+           SamplingParams(temperature=1.0, top_k=5, top_p=0.7, seed=3,
+                          stop_token_ids=(1, 2), logprobs=True)]
+    eng.run([Request(rid=i, prompt=np.asarray(toks[i]), max_new_tokens=6,
+                     sampling=mix[i]) for i in range(4)])
+    assert eng._step_fn._cache_size() == n_step
+    assert eng._chunk._cache_size() == n_chunk
+
+
+def test_seed_changes_output_temperature_zero_does_not(small, sampled_runs):
+    toks, eng, _ = sampled_runs
+    base = SamplingParams(temperature=1.2, top_p=0.98, seed=5)
+    runs = {}
+    for seed in (5, 5, 6):
+        out = eng.run([Request(rid=0, prompt=np.asarray(toks[0]),
+                               max_new_tokens=8,
+                               sampling=dataclasses.replace(base, seed=seed))])
+        runs.setdefault(seed, []).append(out.results[0])
+    np.testing.assert_array_equal(runs[5][0], runs[5][1])   # reproducible
+    assert not np.array_equal(runs[5][0], runs[6][0])       # seed matters
+
+
+# ---------------------------------------------------------------------------
+# Finish reasons, streaming, logprobs
+# ---------------------------------------------------------------------------
+
+
+def test_stop_token_finishes_early_with_reason(small, sampled_runs):
+    cfg, model, params = small
+    toks, eng, ref = sampled_runs
+    # pick the 3rd token of a greedy run as the stop token
+    greedy = eng.run([Request(rid=0, prompt=np.asarray(toks[0]),
+                              max_new_tokens=8)])
+    stop = int(greedy.results[0][2])
+    out = eng.run([Request(rid=0, prompt=np.asarray(toks[0]),
+                           max_new_tokens=8,
+                           sampling=SamplingParams(stop_token_ids=(stop,)))])
+    o = out.outputs[0]
+    assert o.finish_reason == "stop"
+    assert o.token_ids[-1] == stop and len(o.token_ids) == 3
+    assert out.outputs[0].finished
+
+
+def test_max_tokens_reason_and_sampling_max_tokens_cap(small, sampled_runs):
+    toks, eng, _ = sampled_runs
+    out = eng.run([Request(rid=0, prompt=np.asarray(toks[0]),
+                           max_new_tokens=8,
+                           sampling=SamplingParams(max_tokens=4))])
+    o = out.outputs[0]
+    assert o.finish_reason == "length" and len(o.token_ids) == 4
+
+
+def test_streaming_deltas_no_duplicates_across_preemption(small):
+    """Concatenated streamed deltas == final tokens, exactly once per
+    token, even when preemption restarts regeneration."""
+    cfg, model, params = small
+    toks = np.asarray(jax.random.randint(jax.random.PRNGKey(7), (4, 12), 0,
+                                         cfg.vocab_size))
+    tight = ContinuousServeEngine(model, params, num_slots=3, page_size=4,
+                                  num_pages=12, max_len=21)
+    seen: dict[int, list[int]] = {i: [] for i in range(4)}
+    finished = set()
+
+    def on_output(o):
+        seen[o.rid].extend(o.new_token_ids)
+        if o.finished:
+            finished.add(o.rid)
+
+    stats = tight.run(_reqs(toks, [0, 1, 2, 3]), on_output=on_output)
+    assert stats.preemptions > 0
+    assert finished == {0, 1, 2, 3}
+    for i in range(4):
+        assert seen[i] == stats.results[i].tolist()
+
+
+def test_incremental_add_request_step_interface(small):
+    cfg, model, params = small
+    toks = np.asarray(jax.random.randint(jax.random.PRNGKey(8), (2, 8), 0,
+                                         cfg.vocab_size))
+    llm = LLMEngine(model, params, backend="continuous", max_len=17,
+                    num_slots=2, page_size=4)
+    r0 = llm.add_request(toks[0], SamplingParams(max_tokens=5))
+    r1 = llm.add_request(toks[1], SamplingParams(temperature=0.7, seed=3,
+                                                 max_tokens=5))
+    got: dict[int, list[int]] = {r0: [], r1: []}
+    while llm.has_unfinished():
+        for o in llm.step():
+            got[o.rid].extend(o.new_token_ids)
+    assert len(got[r0]) == 5 and len(got[r1]) == 5
+    # greedy request must equal the one-shot API's result
+    ref = llm.generate([toks[0]], SamplingParams(max_tokens=5))
+    assert got[r0] == ref[0].token_ids
+    # generate() must refuse to clobber in-flight incremental requests
+    llm.add_request(toks[0], SamplingParams(max_tokens=3))
+    with pytest.raises(RuntimeError, match="unfinished"):
+        llm.generate([toks[1]], SamplingParams(max_tokens=3))
+    while llm.has_unfinished():
+        llm.step()
+
+
+def test_request_logprobs_returned_and_consistent(small, sampled_runs):
+    cfg, model, params = small
+    toks, eng, _ = sampled_runs
+    out = eng.run([Request(rid=0, prompt=np.asarray(toks[0]),
+                           max_new_tokens=6,
+                           sampling=SamplingParams(logprobs=True))])
+    o = out.outputs[0]
+    assert o.logprobs is not None and len(o.logprobs) == 6
+    assert all(lp <= 0.0 for lp in o.logprobs)
+    # greedy chose the argmax, so its logprob is the row max
+    seng = ServeEngine(model, params, max_len=21, donate_cache=False)
+    st = seng.generate({"tokens": jnp.asarray(toks[:1])}, max_new_tokens=6,
+                       sampling_params=SamplingParams(logprobs=True))
+    np.testing.assert_allclose(np.asarray(st.logprobs[0]),
+                               np.asarray(o.logprobs), rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# LLMEngine façade
+# ---------------------------------------------------------------------------
+
+
+def test_llm_engine_greedy_identical_across_backends(small):
+    cfg, model, params = small
+    prompt = np.asarray(jax.random.randint(jax.random.PRNGKey(9), (10,), 0,
+                                           cfg.vocab_size))
+    outs = {}
+    for backend in ("static", "continuous", "speculative"):
+        llm = LLMEngine(model, params, backend=backend, max_len=32,
+                        num_slots=2, page_size=4, gamma=4)
+        outs[backend] = llm.generate([prompt], max_new_tokens=6)[0]
+    assert (outs["static"].token_ids == outs["continuous"].token_ids
+            == outs["speculative"].token_ids)
+    assert all(o.finished and o.finish_reason == "length"
+               for o in outs.values())
+    assert outs["speculative"].metrics["accepted_per_window"] >= 3.9
+
+
+def test_llm_engine_per_request_mix_and_stop(small):
+    cfg, model, params = small
+    prompts = np.asarray(jax.random.randint(jax.random.PRNGKey(10), (3, 8),
+                                            0, cfg.vocab_size))
+    llm = LLMEngine(model, params, backend="continuous", max_len=20,
+                    num_slots=2, page_size=4)
+    greedy = llm.generate([prompts[0]], max_new_tokens=6)[0]
+    stop = greedy.token_ids[1]
+    mix = [SamplingParams(),
+           SamplingParams(temperature=0.9, top_p=0.9, seed=4),
+           SamplingParams(stop_token_ids=(stop,))]
+    outs = llm.generate(list(prompts), mix, max_new_tokens=6)
+    assert outs[0].token_ids == greedy.token_ids
+    assert outs[2].finish_reason == "stop" if prompts[2].tolist() == \
+        prompts[0].tolist() else outs[2].finish_reason in ("stop", "length")
+    assert [o.rid for o in outs] == [0, 1, 2]
+
+
+def test_llm_engine_static_requires_uniform_lengths(small):
+    cfg, model, params = small
+    llm = LLMEngine(model, params, backend="static", max_len=32)
+    with pytest.raises(ValueError, match="one prompt length"):
+        llm.generate([np.zeros(4, np.int32), np.zeros(6, np.int32)],
+                     max_new_tokens=4)
+
+
+def test_llm_engine_validation(small):
+    cfg, model, params = small
+    with pytest.raises(ValueError, match="backend"):
+        LLMEngine(model, params, backend="magic")
+    llm = LLMEngine(model, params, backend="continuous", max_len=16,
+                    num_slots=2, page_size=4)
+    with pytest.raises(ValueError, match="max_tokens"):
+        llm.generate([np.zeros(4, np.int32)])
+    with pytest.raises(ValueError, match="max_len"):
+        llm.generate([np.zeros(4, np.int32)], max_new_tokens=100)
+    with pytest.raises(ValueError, match="max_top_k"):
+        llm.generate([np.zeros(4, np.int32)],
+                     SamplingParams(top_k=sampling.MAX_TOP_K + 1,
+                                    max_tokens=4))
+
+
+def test_legacy_engine_kwargs_warn_but_work(small):
+    cfg, model, params = small
+    toks = jax.random.randint(jax.random.PRNGKey(11), (1, 8), 0,
+                              cfg.vocab_size)
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        eng = ServeEngine(model, params, max_len=20, temperature=0.7,
+                          top_k=4, donate_cache=False)
+    assert eng.temperature == 0.7 and eng.top_k == 4
+    out = eng.generate({"tokens": toks}, max_new_tokens=4,
+                       key=jax.random.PRNGKey(0))
+    assert out.tokens.shape == (1, 4)
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        ContinuousServeEngine(model, params, num_slots=2, page_size=4,
+                              num_pages=16, max_len=16, temperature=0.5)
+
+
+def test_speculative_acceptance_under_sampled_params(small):
+    """Identical draft/target with per-request sampling params: every
+    proposal is drawn from and verified against the SAME filtered
+    distribution, so acceptance stays ~perfect."""
+    cfg, model, params = small
+    from repro.runtime.speculative import speculative_generate
+    prompt = jax.random.randint(jax.random.PRNGKey(12), (1, 8), 0,
+                                cfg.vocab_size)
+    stats = speculative_generate(
+        model, params, model, params, prompt, max_new_tokens=8, gamma=4,
+        sampling_params=SamplingParams(temperature=0.8, top_k=8, top_p=0.9,
+                                       seed=2))
+    assert float(stats.accepted_per_window.mean()) >= 3.9
