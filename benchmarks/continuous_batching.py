@@ -44,6 +44,8 @@ compares backends, not entrypoints.
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
 import jax
@@ -244,6 +246,101 @@ def run_shared_prefix(model, params, batch: int, n_req: int,
     return rows + decode_hbm_rows(mean_ctx)
 
 
+# ---------------------------------------------------------------------------
+# Tensor-parallel strong scaling (--mesh): 1 -> 8 host devices
+# ---------------------------------------------------------------------------
+
+_MESH_WORKER = """
+import os, json, sys, time, dataclasses
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(tp)d"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import jax, jax.numpy as jnp, numpy as np
+sys.path.insert(0, %(root)r)
+from benchmarks.continuous_batching import (BENCH_CONFIG, MAX_NEW, PAGE,
+                                            PROMPT_LEN, make_trace)
+from repro.models.model import build_model
+from repro.runtime.engine import ContinuousServeEngine
+from repro.runtime.sampling import SamplingParams
+from repro.runtime.scheduler import Request
+
+tp, n_req, batch, seed = %(tp)d, %(n_req)d, %(batch)d, %(seed)d
+# 8 KV heads so every TP degree of the sweep divides the KV-head axis
+cfg = dataclasses.replace(BENCH_CONFIG, name="bench-serve-tp", n_kv_heads=8)
+model = build_model(cfg)
+params = jax.tree.map(
+    lambda a: a.astype(jnp.float32) if a.dtype == jnp.bfloat16 else a,
+    model.init(jax.random.PRNGKey(seed)))
+mesh = jax.make_mesh((1, tp), ("data", "model")) if tp > 1 else None
+eng = ContinuousServeEngine(
+    model, params, num_slots=batch, page_size=PAGE,
+    num_pages=1 + 2 * batch * -(-(PROMPT_LEN + MAX_NEW) // PAGE),
+    max_len=PROMPT_LEN + MAX_NEW, cache_dtype=jnp.float32,
+    prefill_chunk=PROMPT_LEN, mesh=mesh)
+_, new_tokens, prompts = make_trace(n_req, seed, 0.0)
+mk = lambda rs: [Request(rid=i, prompt=prompts[i],
+                         max_new_tokens=int(new_tokens[i]),
+                         sampling=SamplingParams(max_tokens=int(new_tokens[i])))
+                 for i in rs]
+eng.run(mk(range(min(batch, n_req))))           # warm/compile
+stats = min((eng.run(mk(range(n_req))) for _ in range(2)),
+            key=lambda s: s.wall)
+plan = eng.serve_plan
+print(json.dumps({
+    "tp": tp,
+    "tokens_per_s": stats.total_tokens / stats.wall,
+    "steps": stats.steps,
+    "kv_bytes_per_token_per_device": eng.kv_token_bytes_per_device(),
+    "psum_bytes_per_step_per_device":
+        plan.psum_bytes_per_step(model, batch) if plan else 0,
+    "reduce": plan.reduce if plan else "none",
+}))
+"""
+
+
+def run_mesh_sweep(n_req: int, batch: int, seed: int,
+                   tps=(1, 2, 4, 8)) -> list[Row]:
+    """Strong-scaling sweep over the TP degree, one subprocess per point
+    (each needs its own XLA host-device count and a clean compile cache).
+    CPU host devices share one socket, so tokens/s is a smoke signal here;
+    the architectural observables are per-device KV bytes/token (must
+    shrink 1/TP — the paper's add-bandwidth-by-adding-CUs lever) and the
+    per-step collective bytes the Megatron pairing costs."""
+    import pathlib
+    import subprocess
+    import sys
+
+    root = str(pathlib.Path(__file__).resolve().parents[1])
+    results = []
+    for tp in tps:
+        code = _MESH_WORKER % {"tp": tp, "n_req": n_req, "batch": batch,
+                               "seed": seed, "root": root}
+        r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                           text=True, timeout=1200,
+                           env={**os.environ,
+                                "PYTHONPATH": os.path.join(root, "src")})
+        assert r.returncode == 0, r.stderr[-3000:]
+        results.append(json.loads(r.stdout.strip().splitlines()[-1]))
+    base = results[0]
+    rows = []
+    for res in results:
+        tp = res["tp"]
+        ratio = base["kv_bytes_per_token_per_device"] \
+            / res["kv_bytes_per_token_per_device"]
+        rows.append(Row("ours:tp-serving", f"tp={tp} useful tok/s",
+                        res["tokens_per_s"], None, "",
+                        f"{res['steps']} steps, reduce={res['reduce']}"))
+        rows.append(Row("ours:tp-serving", f"tp={tp} KV bytes/token/device",
+                        res["kv_bytes_per_token_per_device"] / 1e3, None,
+                        "KB", f"{ratio:.0f}x below tp=1 (expect {tp}x)"))
+        rows.append(Row("ours:tp-serving", f"tp={tp} collective bytes/step",
+                        res["psum_bytes_per_step_per_device"] / 1e3, None,
+                        "KB", "per device, attention+MLP pair closes"))
+        assert res["kv_bytes_per_token_per_device"] \
+            == base["kv_bytes_per_token_per_device"] // tp, \
+            "per-device KV bytes must scale 1/TP"
+    return rows
+
+
 def run(model, params, batch: int = 8, n_req: int = 64,
         seed: int = 0) -> list[Row]:
     # Calibrate the arrival rate to the hardware: mean interarrival = one
@@ -298,7 +395,18 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--skip-throughput", action="store_true",
                     help="run only the shared-prefix workload (faster)")
+    ap.add_argument("--mesh", action="store_true",
+                    help="tensor-parallel strong-scaling sweep instead: "
+                         "1 -> 8 host devices, one subprocess per TP "
+                         "degree (tokens/s, per-device KV bytes/token, "
+                         "per-step collective bytes)")
     args = ap.parse_args(argv)
+    if args.mesh:
+        rows = run_mesh_sweep(args.requests, args.batch, args.seed)
+        for r in rows:
+            print(r.render())
+        dump(rows, "continuous_batching_mesh")
+        return 0
     model = build_model(BENCH_CONFIG)
     params = model.init(jax.random.PRNGKey(args.seed))
     params = jax.tree.map(

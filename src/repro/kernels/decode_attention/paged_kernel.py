@@ -14,6 +14,14 @@ query heads ride along per kv head (GQA head-packing), and the mask family
 covers both the prefix case (``idx <= pos``) and sliding windows
 (``pos - window < idx <= pos``).
 
+Under tensor-parallel serving the kernel is already per-shard: the page
+pools shard their KV-head axis over the mesh's model axis
+(``AttentionBackend.paged_partition_spec``), so inside the manual
+shard_map region KV_HEADS here is the LOCAL head count and the grid walks
+only the shard's slice of every page — each CU streams its own KV$ cut,
+the page table is the same replicated array on every shard, and no
+cross-shard traffic happens until the block's closing reduction.
+
 Two accumulator modes:
 
   * ``accum="online"`` — classic flash-decode: fp32 (m, l, acc) running

@@ -36,3 +36,22 @@ def make_small_mesh(n_devices: int | None = None, model_axis: int | None = None)
 
 def mesh_chip_count(mesh) -> int:
     return int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+
+
+def parse_mesh(spec: str):
+    """``"DxM"`` -> a (data=D, model=M) mesh over the visible devices.
+
+    The serve launcher's ``--mesh 2x4`` etc.; ``D * M`` must equal the
+    device count (use ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    for CPU host devices).
+    """
+    try:
+        d, m = (int(x) for x in spec.lower().split("x"))
+    except ValueError:
+        raise ValueError(f"--mesh wants DxM (e.g. 2x4), got {spec!r}") from None
+    n = len(jax.devices())
+    if d * m != n:
+        raise ValueError(f"mesh {d}x{m} needs {d * m} devices, "
+                         f"have {n} (set "
+                         f"XLA_FLAGS=--xla_force_host_platform_device_count)")
+    return jax.make_mesh((d, m), ("data", "model"))

@@ -38,7 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced_config
-from repro.launch.mesh import make_small_mesh
+from repro.launch.mesh import make_small_mesh, parse_mesh
 from repro.models.model import build_model
 from repro.parallel.hints import sharding_rules
 from repro.parallel.plan import make_plan
@@ -104,6 +104,18 @@ def main(argv=None) -> int:
     ap.add_argument("--no-prefix-cache", dest="prefix_cache",
                     action="store_false", default=True,
                     help="disable prompt-prefix page sharing")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="shard the continuous serve path over a "
+                         "(data=D, model=M) mesh: KV page pools split "
+                         "per KV head over the model axis (e.g. --mesh 2x4 "
+                         "with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    ap.add_argument("--tp-reduce", default="auto",
+                    choices=["auto", "gather", "psum"],
+                    help="how each Megatron column pair closes on the mesh: "
+                         "gather = bit-exact all-gather composition (CPU "
+                         "default), psum = one f32 psum per attention/MLP "
+                         "block (accelerator default)")
     ap.add_argument("--seed", type=int, default=0,
                     help="model-init seed AND per-request sampling seed")
     args = ap.parse_args(argv)
@@ -121,6 +133,11 @@ def main(argv=None) -> int:
     key = jax.random.PRNGKey(args.seed)
     params = model.init(key)
 
+    serve_mesh = parse_mesh(args.mesh) if args.mesh else None
+    if serve_mesh is not None and backend != "continuous":
+        print("--mesh shards the continuous backend; "
+              f"ignoring it for backend={backend}")
+        serve_mesh = None
     mesh = make_small_mesh()
     plan = make_plan(cfg, mesh, global_batch=args.batch, shape_kind="decode")
     max_len = args.prompt_len + args.max_new + 1
@@ -151,7 +168,8 @@ def main(argv=None) -> int:
                 num_slots=args.batch, page_size=args.page_size,
                 num_pages=1 + args.batch * -(-max_len // args.page_size) * 2,
                 prefill_chunk=args.prefill_chunk,
-                enable_prefix_cache=args.prefix_cache)
+                enable_prefix_cache=args.prefix_cache, mesh=serve_mesh,
+                tp_reduce=args.tp_reduce)
             t0 = time.time()
             outs = llm.generate([pool_prompts[picks[i]] for i in range(n_req)],
                                 sps, max_new_tokens=args.max_new,
@@ -163,6 +181,15 @@ def main(argv=None) -> int:
                   f"requests={n_req} rate={args.arrival_rate}/s "
                   f"steps={stats.steps} occupancy={stats.occupancy:.2f} "
                   f"preemptions={stats.preemptions}")
+            if serve_mesh is not None:
+                sp = llm.serve_plan
+                print(f"mesh: data={serve_mesh.shape['data']} x "
+                      f"model={serve_mesh.shape['model']} "
+                      f"(reduce={sp.reduce}) — "
+                      f"{llm.kv_token_bytes_per_device()} KV bytes/token "
+                      f"per device, "
+                      f"{sp.psum_bytes_per_step(model, args.batch)}"
+                      f" collective bytes/step per device")
             if args.sampling_mix:
                 print(f"sampling mix: {args.sampling_mix} "
                       f"(one decode-step signature, per-slot data)")

@@ -34,6 +34,7 @@ import jax.numpy as jnp
 from repro.models import layers
 from repro.models.common import NEG_INF, ModelConfig, blocked_attention
 from repro.kernels.decode_attention.ref import gather_pages, paged_valid_mask
+from repro.parallel.hints import tp_row_dot
 
 
 # ---------------------------------------------------------------------------
@@ -47,7 +48,7 @@ class AttentionBackend:
     name: str
     paged_leaf_keys: tuple[str, ...]        # pool leaves with a token axis
     mask_families: tuple[str, ...]          # dense paths
-    paged_mask_families: tuple[str, ...]    # paged paths (no "sliding" yet)
+    paged_mask_families: tuple[str, ...]    # paged paths
     init: Callable[..., dict]
     init_cache: Callable[..., dict]
     forward: Callable[..., Any]
@@ -56,6 +57,16 @@ class AttentionBackend:
     init_page_pool: Callable[..., dict] | None = None
     decode_paged: Callable[..., Any] | None = None
     prefill_chunk_paged: Callable[..., Any] | None = None
+    # Tensor-parallel partition of the page pools (sharded paged serving):
+    # leaf key -> the UNSTACKED pool-leaf dim that shards over the mesh's
+    # model axis, or None for a replicated leaf.  GQA pools shard their
+    # KV-head axis (each shard streams only its local head slice — the
+    # paper's "KV$ sharded across CUs"); MLA's latent pools are shared by
+    # every head and stay replicated.  ``parallel.plan.PagedServePlan``
+    # turns this into shard_map specs / NamedShardings, so new families
+    # (ssm state pools, ring pages) declare their sharding here instead of
+    # hard-coding it in the engine.
+    paged_partition_spec: dict[str, int | None] | None = None
 
     @property
     def supports_paged(self) -> bool:
@@ -164,7 +175,7 @@ def attn_decode_paged(p: dict, x: jnp.ndarray, cfg: ModelConfig, pool: dict,
     from repro.kernels.decode_attention.ops import paged_gqa_decode_attention
     out = paged_gqa_decode_attention(q[:, 0], new_k, new_v, page_table, pos,
                                      window=window)
-    out = out.reshape(b, h * hd) @ p["wo"]
+    out = tp_row_dot(out.reshape(b, h * hd), p["wo"])
     return out, {"k": new_k, "v": new_v}
 
 
@@ -191,7 +202,7 @@ def attn_prefill_chunk_paged(p: dict, x: jnp.ndarray, cfg: ModelConfig,
     v_d = gather_pages(new_v, page_table)
     out = blocked_attention(q, k_d, v_d, causal=cfg.causal, window=window,
                             q_offset=start)
-    out = out.reshape(b, c, h * hd) @ p["wo"]
+    out = tp_row_dot(out.reshape(b, c, h * hd), p["wo"])
     return out, {"k": new_k, "v": new_v}
 
 
@@ -243,7 +254,7 @@ def mla_decode_paged(p, x, cfg: ModelConfig, pool: dict, page_table, pos, *,
     ctx = jnp.einsum("bhs,bsr->bhr", pattn, c_d.astype(jnp.float32))
     w_uv = p["w_uv"].reshape(r, h, vhd)
     out = jnp.einsum("bhr,rhv->bhv", ctx, w_uv.astype(jnp.float32))
-    out = out.reshape(b, h * vhd).astype(x.dtype) @ p["wo"]
+    out = tp_row_dot(out.reshape(b, h * vhd).astype(x.dtype), p["wo"])
     return out, {"c_kv": new_c, "k_rope": new_kr}
 
 
@@ -271,7 +282,7 @@ def mla_prefill_chunk_paged(p, x, cfg: ModelConfig, pool: dict, page_table,
     scale = 1.0 / math.sqrt(hd + rhd)
     out = blocked_attention(q, k, v_d, causal=cfg.causal, scale=scale,
                             q_offset=start)
-    out = out.reshape(b, c, h * vhd) @ p["wo"]
+    out = tp_row_dot(out.reshape(b, c, h * vhd), p["wo"])
     return out, {"c_kv": new_c, "k_rope": new_kr}
 
 
@@ -284,7 +295,10 @@ GQA = register_backend(AttentionBackend(
     name="gqa",
     paged_leaf_keys=("k", "v"),
     mask_families=("prefix", "sliding"),
-    paged_mask_families=("prefix",),      # ring pages for SWA: future PR
+    # sliding covers the MASK family only: the fused kernel / oracle skip
+    # out-of-window positions, but pages behind the window stay allocated
+    # (ring-aware page reclamation is the remaining capacity half).
+    paged_mask_families=("prefix", "sliding"),
     init=layers.init_attn,
     init_cache=layers.init_attn_cache,
     forward=layers.attn_forward,
@@ -293,6 +307,7 @@ GQA = register_backend(AttentionBackend(
     init_page_pool=init_attn_page_pool,
     decode_paged=attn_decode_paged,
     prefill_chunk_paged=attn_prefill_chunk_paged,
+    paged_partition_spec={"k": 2, "v": 2},     # (P, page, KVH, HD): KV heads
 ))
 
 MLA = register_backend(AttentionBackend(
@@ -312,4 +327,7 @@ MLA = register_backend(AttentionBackend(
     init_page_pool=init_mla_page_pool,
     decode_paged=mla_decode_paged,
     prefill_chunk_paged=mla_prefill_chunk_paged,
+    # the latent stream is shared by every head: heads shard (w_uk/w_uv
+    # columns), the per-token latents replicate across the TP ring
+    paged_partition_spec={"c_kv": None, "k_rope": None},
 ))

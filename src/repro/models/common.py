@@ -171,9 +171,11 @@ def gated_rmsnorm(x: jnp.ndarray, z: jnp.ndarray, w: jnp.ndarray,
 
 
 def swiglu(x: jnp.ndarray, w_gate, w_up, w_down) -> jnp.ndarray:
+    from repro.parallel.hints import tp_row_dot
     g = x @ w_gate
     u = x @ w_up
-    return (jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u) @ w_down
+    return tp_row_dot(jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u,
+                      w_down)
 
 
 # ---------------------------------------------------------------------------

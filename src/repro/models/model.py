@@ -30,7 +30,7 @@ from repro.models.attention_backends import backend_for_kind
 from repro.models.common import (
     ModelConfig, count_params, dense_init, embed_init, rmsnorm, split_keys,
 )
-from repro.parallel.hints import shard_hint
+from repro.parallel.hints import shard_hint, tp_psum
 
 
 @dataclasses.dataclass(frozen=True)
@@ -127,7 +127,12 @@ def _init_block_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int,
 
 def _ffn(kind: str, p: dict, x, cfg: ModelConfig, moe_impl: str):
     if kind.endswith("_moe") or kind == "attn_moe":
-        return moe_lib.moe_forward(x, p["moe"], cfg, impl=moe_impl)
+        # inside a manual TP serve region MoE weights are replicated —
+        # every expert matmul (incl. shared experts) is already complete,
+        # so the whole subtree traces with the Megatron marks off
+        from repro.parallel.hints import no_manual_tp
+        with no_manual_tp():
+            return moe_lib.moe_forward(x, p["moe"], cfg, impl=moe_impl)
     return layers.mlp_forward(p["mlp"], x)
 
 
@@ -194,16 +199,23 @@ def _init_block_page_pool(kind: str, cfg: ModelConfig, num_pages: int,
 def _block_decode_paged(kind: str, p: dict, x, cfg: ModelConfig, window,
                         pool, page_table, pos, moe_impl: str):
     """Paged analogue of ``_block_decode``: per-slot ragged positions and
-    K/V streamed through the page table.  x: (B, D)."""
+    K/V streamed through the page table.  x: (B, D).
+
+    The ``tp_psum`` marks close the Megatron column->row pairs when this
+    traces inside the sharded serve path's manual region (one reduction
+    per attention block, one per dense MLP; MoE experts run replicated
+    there, so their output is already complete).  Off-mesh they are
+    identity."""
     be = backend_for_kind(kind)
     if be is None or be.decode_paged is None or kind == "hybrid":
         raise NotImplementedError(kind)
     h = rmsnorm(x, p["ln1"], cfg.norm_eps)
     a, c = be.decode_paged(p["attn"], h, cfg, pool, page_table, pos,
                            window=window)
-    x = x + a
-    x = x + _ffn(kind, p, rmsnorm(x[:, None, :], p["ln2"], cfg.norm_eps), cfg,
-                 moe_impl)[:, 0]
+    x = x + tp_psum(a).astype(x.dtype)
+    f = _ffn(kind, p, rmsnorm(x[:, None, :], p["ln2"], cfg.norm_eps), cfg,
+             moe_impl)[:, 0]
+    x = x + (f if kind.endswith("_moe") else tp_psum(f).astype(x.dtype))
     return x, c
 
 
@@ -218,8 +230,9 @@ def _block_prefill_chunk_paged(kind: str, p: dict, x, cfg: ModelConfig,
     h = rmsnorm(x, p["ln1"], cfg.norm_eps)
     a, c = be.prefill_chunk_paged(p["attn"], h, cfg, pool, page_table, start,
                                   valid, window=window)
-    x = x + a
-    x = x + _ffn(kind, p, rmsnorm(x, p["ln2"], cfg.norm_eps), cfg, moe_impl)
+    x = x + tp_psum(a).astype(x.dtype)
+    f = _ffn(kind, p, rmsnorm(x, p["ln2"], cfg.norm_eps), cfg, moe_impl)
+    x = x + (f if kind.endswith("_moe") else tp_psum(f).astype(x.dtype))
     return x, c
 
 

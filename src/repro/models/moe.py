@@ -251,7 +251,14 @@ def moe_forward(x: jnp.ndarray, p: dict, cfg: ModelConfig,
         else:
             impl = "capacity"
     if impl == "ep":
-        mesh, axis = hints.ep_context()
+        ep = hints.ep_context()
+        if ep is None:
+            raise ValueError(
+                "moe_impl='ep' needs an expert-parallel context "
+                "(sharding_rules with a >1 model axis) and cannot nest "
+                "inside an already-manual region (e.g. the TP serve "
+                "shard_map, where experts run replicated); use impl='auto'")
+        mesh, axis = ep
         y = _chunked(lambda xc: moe_ep(xc, p, cfg, mesh, axis), x)
     elif impl == "dense":
         y = moe_dense(x, p, cfg)

@@ -126,8 +126,101 @@ def shard_hint(x, name: str):
 
 def ep_context():
     """(mesh, model_axis_name) for expert-parallel shard_map regions, or
-    None outside a sharded launch (single-device tests)."""
+    None outside a sharded launch (single-device tests).  Also None inside
+    a suspended (already-manual) region: shard_map does not nest, so MoE
+    layers traced there must run their local (replicated) path."""
+    if _SUSPENDED.get():
+        return None
     rules = _RULES.get()
     if rules is None:
         return None
     return rules.get("__ep__")
+
+
+# -- manual tensor-parallel regions (sharded paged serving) -----------------
+#
+# The sharded serve path (parallel.plan.PagedServePlan) wraps the paged
+# decode/prefill-chunk step in a manual shard_map over the mesh's model
+# axis: every projection runs on its local head/d_ff slice and the model
+# code marks the point where a Megatron column pair closes with
+# ``tp_row_dot`` (the K-contracted matmul) + ``tp_psum``.  Outside a
+# manual region (single-device tests, GSPMD launches) the marks are
+# no-ops, so the model stays pure single-device code.
+#
+# Two reduction modes, mirroring the paged kernel's exact/online split:
+#
+#   * ``"gather"`` — all-gather the column-sharded intermediate (a pure
+#     concatenation, in shard order == the unsharded column order) and run
+#     the closing matmul replicated against the FULL row weight.  Every
+#     activation is then BIT-IDENTICAL to the single-device trace — the
+#     mode the byte-identical serve invariant is tested under (and the
+#     CPU default).
+#   * ``"psum"``   — classic Megatron: row-sharded weight, f32 partial
+#     sums, ONE psum per block, round to the activation dtype after.
+#     Minimal collective bytes and no replicated matmul — the production
+#     accelerator mode; equal to single-device up to f32 reassociation of
+#     the K split (token streams agree in practice, not by construction).
+
+_TP_AXIS: contextvars.ContextVar[str | None] = contextvars.ContextVar(
+    "manual_tp_axis", default=None)
+_TP_MODE: contextvars.ContextVar[str] = contextvars.ContextVar(
+    "manual_tp_mode", default="gather")
+
+
+@contextlib.contextmanager
+def manual_tp_axis(axis: str, mode: str = "gather"):
+    """Declare that the enclosed trace runs inside a manual shard_map over
+    ``axis``, closing each column/row pair per ``mode`` (see above)."""
+    if mode not in ("gather", "psum"):
+        raise ValueError(f"mode={mode!r} (want 'gather' or 'psum')")
+    token = _TP_AXIS.set(axis)
+    mtoken = _TP_MODE.set(mode)
+    try:
+        yield
+    finally:
+        _TP_MODE.reset(mtoken)
+        _TP_AXIS.reset(token)
+
+
+@contextlib.contextmanager
+def no_manual_tp():
+    """Disable the TP marks for the enclosed trace: subtrees whose weights
+    run REPLICATED inside a manual region (MoE experts, shared experts)
+    must close no pair — their matmuls are already complete."""
+    token = _TP_AXIS.set(None)
+    try:
+        yield
+    finally:
+        _TP_AXIS.reset(token)
+
+
+def tp_psum(x):
+    """Close a Megatron column->row pair: the one reduction per block in
+    ``"psum"`` mode; identity in ``"gather"`` mode (the all-gather inside
+    ``tp_row_dot`` already completed the value) and outside manual TP."""
+    axis = _TP_AXIS.get()
+    if axis is None or _TP_MODE.get() == "gather":
+        return x
+    return jax.lax.psum(x, axis)
+
+
+def tp_row_dot(x, w):
+    """The K-contracted matmul closing a Megatron pair.
+
+    Outside a manual region this is exactly ``x @ w``.  In ``"gather"``
+    mode, ``x``'s sharded last dim is all-gathered (tiled, shard order ==
+    column order) and the matmul runs against the full replicated ``w`` —
+    bit-identical to the single-device dot.  In ``"psum"`` mode ``w`` is
+    row-sharded and the contraction runs with f32 inputs so each shard's
+    PARTIAL sum stays unrounded until ``tp_psum``: XLA accumulates a bf16
+    dot in f32 and rounds once at the end, so rounding partials to bf16
+    before the reduction would land a bf16 quantum off — the caller casts
+    back to the activation dtype AFTER the psum instead."""
+    axis = _TP_AXIS.get()
+    if axis is None:
+        return x @ w
+    if _TP_MODE.get() == "gather":
+        full = jax.lax.all_gather(x, axis, axis=x.ndim - 1, tiled=True)
+        return full @ w
+    import jax.numpy as jnp
+    return x.astype(jnp.float32) @ w.astype(jnp.float32)

@@ -32,6 +32,7 @@ import dataclasses
 from typing import Any, Sequence
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.common import ModelConfig
@@ -207,6 +208,218 @@ class ParallelPlan:
         if self.ep and self.tp == "model" and "model" in self.mesh.axis_names:
             rules["__ep__"] = (self.mesh, "model")
         return rules
+
+
+# ---------------------------------------------------------------------------
+# Tensor-parallel paged serving (continuous batching over the mesh)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedServePlan:
+    """Partitioning of the continuous-batching serve path over a mesh.
+
+    The paged decode / prefill-chunk step runs inside ONE manual
+    ``shard_map`` over the mesh's ``model`` axis (the paper's CU ring):
+
+      * attention + MLP weights Megatron column-shard over ``axis``
+        (``param_specs``); each block closes its pair at the
+        ``tp_row_dot``/``tp_psum`` marks in ``models.model`` (no-ops
+        off-mesh).  ``reduce="gather"`` (CPU/test default) all-gathers the
+        column intermediate and keeps row weights replicated — every
+        activation bit-identical to single-device, the mode the
+        byte-identical invariant is asserted under; ``reduce="psum"``
+        (accelerator default) row-shards the closing weight and spends ONE
+        f32 psum per block — minimal bytes, equal up to f32 reassociation;
+      * page pools shard per the owning backend's ``paged_partition_spec``
+        (GQA: KV-head axis — per-device KV bytes/token shrink 1/TP; MLA:
+        latent pools replicate, heads shard) while the logical page-id
+        space, page tables, positions, and ``SlotSampling`` tensors stay
+        replicated — the host-side allocator is sharding-agnostic;
+      * embeddings / head / norms / MoE experts replicate: decode logits
+        are tiny next to the KV stream, and expert-sharded MoE would need
+        nested shard_map (the EP path) inside the manual region.  Follow-on
+        work, recorded in ROADMAP.md.
+
+    Everything the engine batches per-iteration (tokens, pos, page table,
+    sampling tensors) is data with replicated specs, so the sharded step
+    keeps the single-device invariant: one compiled signature per mesh
+    shape, any request mix.
+    """
+
+    mesh: Mesh
+    axis: str = "model"
+    reduce: str = "gather"         # "gather" (bit-exact) | "psum" (Megatron)
+
+    @property
+    def tp(self) -> int:
+        return int(self.mesh.shape[self.axis])
+
+    # ---------------- local (per-shard) model geometry ----------------
+    def local_config(self, cfg: ModelConfig) -> ModelConfig:
+        """The per-shard config the manual region's model code runs with:
+        head counts and the dense-MLP width divide by TP (columns are
+        sliced in contiguous head/d_ff blocks); everything replicated
+        (d_model, vocab, MoE experts, latent ranks) keeps its full size."""
+        if self.tp == 1:
+            return cfg
+        return dataclasses.replace(
+            cfg, n_heads=cfg.n_heads // self.tp,
+            n_kv_heads=(cfg.n_kv_heads // self.tp
+                        if cfg.n_kv_heads % self.tp == 0 else cfg.n_kv_heads),
+            d_ff=cfg.d_ff // self.tp)
+
+    # ---------------- parameters ----------------
+    def _serve_param_spec(self, names: list[str], ndim: int) -> P:
+        name = names[-1]
+        in_moe = any(n == "moe" for n in names)
+        in_ssm = any(n == "ssm" for n in names)
+        if in_moe or in_ssm:
+            return P()          # replicated (computed fully on every shard)
+        if name in _BIAS_COL:
+            return P(*([None] * (ndim - 1)), self.axis)
+        if name in _COL_SHARD and name not in ("head", "in_proj"):
+            if ndim >= 2:
+                return P(*([None] * (ndim - 2)), None, self.axis)
+            return P(*([None] * (ndim - 1)), self.axis)
+        if name in _ROW_SHARD:
+            if self.reduce == "gather":
+                return P()      # closing matmul runs replicated, bit-exact
+            return P(*([None] * (ndim - 2)), self.axis, None)
+        return P()              # embed / head / norms: replicated
+
+    def param_specs(self, params) -> Any:
+        """PartitionSpec pytree for the manual region's in_specs."""
+        return jax.tree_util.tree_map_with_path(
+            lambda path, leaf: self._serve_param_spec(_path_names(path),
+                                                      leaf.ndim),
+            params)
+
+    def param_shardings(self, params) -> Any:
+        return jax.tree.map(lambda spec: NamedSharding(self.mesh, spec),
+                            self.param_specs(params),
+                            is_leaf=lambda s: isinstance(s, P))
+
+    # ---------------- page pools ----------------
+    def pool_specs(self, model) -> list:
+        """PartitionSpec pytree matching ``Model.init_paged_cache``'s
+        structure (list over segments, tuple over kinds, dict leaves —
+        stacked along a leading reps axis for scanned segments)."""
+        from repro.models.attention_backends import backend_for_kind
+
+        specs = []
+        for seg in model.plan:
+            kinds_specs = []
+            for kind in seg.kinds:
+                be = backend_for_kind(kind)
+                part = (be.paged_partition_spec or {}) if be else {}
+                leaf_specs = {}
+                for key in (be.paged_leaf_keys if be else ()):
+                    dim = part.get(key)
+                    lead = 0 if seg.reps == 1 else 1
+                    if dim is None or self.tp == 1:
+                        leaf_specs[key] = P()
+                    else:
+                        spec = [None] * (lead + 4)
+                        spec[lead + dim] = self.axis
+                        leaf_specs[key] = P(*spec)
+                kinds_specs.append(leaf_specs)
+            specs.append(tuple(kinds_specs))
+        return specs
+
+    def pool_shardings(self, model) -> list:
+        return jax.tree.map(lambda spec: NamedSharding(self.mesh, spec),
+                            self.pool_specs(model),
+                            is_leaf=lambda s: isinstance(s, P))
+
+    # ---------------- accounting ----------------
+    def psum_bytes_per_step(self, model, num_slots: int,
+                            dtype_bytes: int = 4) -> int:
+        """Per-device bytes a decode step moves through its TP collectives,
+        summed over the attention + dense-MLP reduction of every layer.
+        ``"psum"``: ring all-reduce of the (slots, d_model) partial —
+        2(tp-1)/tp of the payload.  ``"gather"``: all-gather of the
+        column-sharded intermediate — (tp-1)/tp of its (wider) payload."""
+        if self.tp == 1:
+            return 0
+        cfg = model.cfg
+        n = self.tp
+        total = 0.0
+        for seg in model.plan:
+            for kind in seg.kinds:
+                if self.reduce == "psum":
+                    att = mlp = 2 * (n - 1) / n * num_slots * cfg.d_model
+                else:
+                    width = (cfg.n_heads * (cfg.v_hd if kind.startswith("mla")
+                                            else cfg.hd))
+                    att = (n - 1) / n * num_slots * width
+                    mlp = (n - 1) / n * num_slots * cfg.d_ff
+                total += att * seg.reps
+                if not kind.endswith("_moe"):
+                    total += mlp * seg.reps
+        return int(total * dtype_bytes)
+
+
+def paged_kv_token_bytes(model, *, tp: int = 1, dtype_bytes: int = 4) -> int:
+    """Per-device pool bytes one cached token costs — the strong-scaling
+    observable: leaves sharded by their backend's ``paged_partition_spec``
+    divide by ``tp``, replicated leaves don't."""
+    from repro.models.attention_backends import backend_for_kind
+
+    total = 0
+    for seg in model.plan:
+        for kind in seg.kinds:
+            be = backend_for_kind(kind)
+            if be is None or not be.supports_paged:
+                continue
+            pool = be.init_page_pool(model.cfg, 2, 1)
+            part = be.paged_partition_spec or {}
+            for key, leaf in pool.items():
+                per_tok = int(np.prod(leaf.shape[2:])) * dtype_bytes
+                if tp > 1 and part.get(key) is not None:
+                    per_tok //= tp
+                total += per_tok * seg.reps
+    return total
+
+
+def make_paged_serve_plan(cfg: ModelConfig, mesh: Mesh,
+                          axis: str = "model",
+                          reduce: str = "auto") -> PagedServePlan:
+    """Validate and build the TP partitioning of the paged serve path.
+
+    ``reduce="auto"``: the bit-exact ``"gather"`` composition on CPU
+    (where byte-identity to single-device is the test contract), the
+    one-psum-per-block ``"psum"`` Megatron pairing on accelerators."""
+    if reduce == "auto":
+        from repro.kernels import on_cpu
+        reduce = "gather" if on_cpu() else "psum"
+    if reduce not in ("gather", "psum"):
+        raise ValueError(f"reduce={reduce!r} (want 'auto'/'gather'/'psum')")
+    if axis not in mesh.axis_names:
+        raise ValueError(f"mesh {mesh.axis_names} has no {axis!r} axis")
+    tp = int(mesh.shape[axis])
+    plan = PagedServePlan(mesh=mesh, axis=axis, reduce=reduce)
+    if tp == 1:
+        return plan
+    if cfg.family in ("ssm", "hybrid") or cfg.ssm:
+        raise NotImplementedError(
+            "sharded paged serving needs a paged state pool for SSM/hybrid "
+            "families first (see ROADMAP)")
+    problems = []
+    if cfg.n_heads % tp:
+        problems.append(f"n_heads={cfg.n_heads}")
+    if not cfg.mla and cfg.n_kv_heads % tp:
+        # GQA shards q and kv heads together; kv replication with sharded
+        # q heads (kvh < tp) is a recorded follow-on
+        problems.append(f"n_kv_heads={cfg.n_kv_heads}")
+    if cfg.d_ff % tp:
+        problems.append(f"d_ff={cfg.d_ff}")
+    if problems:
+        raise ValueError(
+            f"{cfg.name}: {', '.join(problems)} not divisible by the "
+            f"{tp}-way {axis!r} axis; pick a mesh whose TP degree divides "
+            "the head/FFN widths")
+    return plan
 
 
 def _as_tuple(x) -> tuple:

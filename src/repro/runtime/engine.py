@@ -38,14 +38,16 @@ from __future__ import annotations
 
 import dataclasses
 import time
-import warnings
 from typing import Any, Callable, Iterable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.models.model import Model
+from repro.parallel import hints
+from repro.parallel.compat import shard_map
 from repro.runtime import sampling
 from repro.runtime.sampling import SamplingParams
 from repro.runtime.kv_cache import PagedKVCache
@@ -78,18 +80,6 @@ class RequestOutput:
     metrics: dict = dataclasses.field(default_factory=dict)
 
 
-def _legacy_sampling(temperature, top_k, where: str) -> SamplingParams | None:
-    """Deprecation shim: engine-global ``temperature=``/``top_k=`` kwargs
-    become the engine's default ``SamplingParams`` for one release."""
-    if temperature is None and top_k is None:
-        return None
-    warnings.warn(
-        f"{where}(temperature=, top_k=) is deprecated; pass "
-        f"sampling=SamplingParams(...) or per-request SamplingParams",
-        DeprecationWarning, stacklevel=3)
-    return SamplingParams(temperature=temperature or 0.0, top_k=top_k or 0)
-
-
 def _seed_from_key(key) -> int:
     """Legacy ``key=`` arguments map onto the seeded-stream scheme."""
     return int(np.asarray(jax.random.key_data(key)).ravel()[-1]) & 0x7FFFFFFF
@@ -106,17 +96,13 @@ class ServeEngine:
     """Batched request serving for one model (static batch)."""
 
     def __init__(self, model: Model, params: Any, *, max_len: int,
-                 temperature: float | None = None, top_k: int | None = None,
                  sampling_params: SamplingParams | None = None,
                  donate_cache: bool = True, cache_dtype=None,
                  max_top_k: int = sampling.MAX_TOP_K):
         self.model = model
         self.params = params
         self.max_len = max_len
-        self.default_sampling = (
-            sampling_params
-            or _legacy_sampling(temperature, top_k, "ServeEngine")
-            or sampling.GREEDY)
+        self.default_sampling = sampling_params or sampling.GREEDY
         self.max_top_k = int(max_top_k)
         self.cache_dtype = cache_dtype
         self._decode_loop = jax.jit(
@@ -125,14 +111,6 @@ class ServeEngine:
             donate_argnums=(1,) if donate_cache else (),
         )
         self._prefill = jax.jit(self.model.prefill)
-
-    @property
-    def temperature(self) -> float:        # back-compat read accessor
-        return self.default_sampling.temperature
-
-    @property
-    def top_k(self) -> int:
-        return self.default_sampling.top_k
 
     # -- phase 1: prefill ---------------------------------------------------
     def prefill(self, batch: dict):
@@ -266,11 +244,11 @@ class ContinuousServeEngine:
 
     def __init__(self, model: Model, params: Any, *, num_slots: int,
                  page_size: int, num_pages: int, max_len: int,
-                 temperature: float | None = None, top_k: int | None = None,
                  sampling_params: SamplingParams | None = None,
                  cache_dtype=None, prefill_chunk: int = 64,
                  enable_prefix_cache: bool = True,
-                 max_top_k: int = sampling.MAX_TOP_K):
+                 max_top_k: int = sampling.MAX_TOP_K,
+                 mesh=None, tp_reduce: str = "auto"):
         if model.cfg.frontend is not None:
             raise NotImplementedError(
                 "continuous batching serves token frontends only")
@@ -284,10 +262,7 @@ class ContinuousServeEngine:
             raise ValueError(
                 f"num_pages={num_pages} cannot back even one max-length "
                 f"request ({self.max_blocks} blocks + scratch)")
-        self.default_sampling = (
-            sampling_params
-            or _legacy_sampling(temperature, top_k, "ContinuousServeEngine")
-            or sampling.GREEDY)
+        self.default_sampling = sampling_params or sampling.GREEDY
         self.max_top_k = int(max_top_k)
         self.cache_dtype = cache_dtype
         if int(prefill_chunk) < 1:
@@ -295,16 +270,62 @@ class ContinuousServeEngine:
         self.prefill_chunk = int(prefill_chunk)
         self.enable_prefix_cache = enable_prefix_cache
         self.defrag_every = 0
+        # -- mesh execution (tensor-parallel paged serving) --
+        self.mesh = mesh
+        self.serve_plan = None
+        if mesh is not None:
+            from repro.parallel.plan import make_paged_serve_plan
+            self.serve_plan = make_paged_serve_plan(model.cfg, mesh,
+                                                    reduce=tp_reduce)
+            self._local_model = Model(
+                self.serve_plan.local_config(model.cfg),
+                moe_impl=model.moe_impl)
+            self.params = jax.device_put(
+                params, self.serve_plan.param_shardings(params))
+            self._param_specs = self.serve_plan.param_specs(params)
+            self._pool_specs = self.serve_plan.pool_specs(model)
+            self._paged_decode = self._shard_paged(
+                self._local_model.decode_step_paged, n_extra=1)   # pos
+            self._paged_chunk = self._shard_paged(
+                self._local_model.prefill_chunk_paged, n_extra=2)  # start, valid
+        else:
+            self._paged_decode = model.decode_step_paged
+            self._paged_chunk = model.prefill_chunk_paged
         self._step_fn = jax.jit(self._step_impl, donate_argnums=(1,))
         self._chunk = jax.jit(self._chunk_impl, donate_argnums=(1,))
         self._copy_page = jax.jit(self._copy_page_impl, donate_argnums=(0,))
         self._sched: Scheduler | None = None
 
+    # -- sharded execution --------------------------------------------------
+    def _shard_paged(self, fn, *, n_extra: int):
+        """Wrap a paged model fn (params, tokens, pools, table, *extras) ->
+        (logits, pools) in one manual shard_map over the serve plan's TP
+        axis: params/pools enter pre-sliced per their specs, the body runs
+        the LOCAL-geometry model (its ``tp_psum`` marks close each
+        column/row pair), and logits come back replicated.  Page tables,
+        positions, and every sampling tensor stay replicated data, so the
+        jit signature is identical to the single-device path — no extra
+        compiles per mesh shape."""
+        sp = self.serve_plan
+
+        def body(params, tokens, pools, table, *extras):
+            with hints.suspend_hints(), hints.manual_tp_axis(sp.axis,
+                                                             sp.reduce):
+                return fn(params, tokens, pools, table, *extras)
+
+        rep = P()
+        return shard_map(
+            body, mesh=sp.mesh,
+            in_specs=(self._param_specs, rep, self._pool_specs, rep)
+            + (rep,) * n_extra,
+            out_specs=(rep, self._pool_specs),
+            axis_names={sp.axis}, check_vma=False)
+
     # -- jitted pieces ------------------------------------------------------
     def _step_impl(self, params, pools, tokens, pos, page_table, temp, topk,
                    topp, minp, seed):
-        logits, pools = self.model.decode_step_paged(params, tokens, pools,
-                                                     page_table, pos)
+        logits, pools = self._paged_decode(params, tokens, pools,
+                                           page_table, pos)
         # the incoming token sits at index pos; the one being generated at
         # pos + 1 — its PRNG key is fold_in(seed, pos + 1)
         nxt, lp = sampling.sample_slots(logits, temp, topk, topp, minp, seed,
@@ -313,7 +334,7 @@ class ContinuousServeEngine:
 
     def _chunk_impl(self, params, pools, tokens, page_table, start, valid,
                     temp, topk, topp, minp, seed):
-        logits, pools = self.model.prefill_chunk_paged(
+        logits, pools = self._paged_chunk(
             params, tokens, pools, page_table, start, valid)
         # a request's first token is generated at index prompt_len ==
         # start + valid of its final chunk (other rows' draws are ignored)
@@ -357,6 +378,11 @@ class ContinuousServeEngine:
         self._pools = self.model.init_paged_cache(self.num_pages,
                                                   self.page_size,
                                                   dtype=self.cache_dtype)
+        if self.serve_plan is not None:
+            # per-shard pools: each device holds its model-axis slice of
+            # every physical page (shared logical page-id space)
+            self._pools = jax.device_put(
+                self._pools, self.serve_plan.pool_shardings(self.model))
         self._t0 = time.monotonic()
         self._steps, self._occ_sum = 0, 0.0
         self._n_chunks, self._prefill_tokens = 0, 0
@@ -371,6 +397,15 @@ class ContinuousServeEngine:
 
     def has_unfinished(self) -> bool:
         return self._sched is not None and self._sched.has_work()
+
+    def kv_token_bytes_per_device(self) -> int:
+        """Physical pool bytes one cached token costs per device (the
+        strong-scaling observable: sharded leaves divide by TP)."""
+        from repro.parallel.plan import paged_kv_token_bytes
+        dtype = jnp.dtype(self.cache_dtype or jnp.bfloat16)
+        return paged_kv_token_bytes(
+            self.model, tp=self.serve_plan.tp if self.serve_plan else 1,
+            dtype_bytes=dtype.itemsize)
 
     def add_request(self, req: Request,
                     sampling_params: SamplingParams | None = None) -> None:

@@ -32,6 +32,16 @@ donor page stays byte-identical).
 Device pools themselves live in the engine (they are model-shaped pytrees
 built by ``Model.init_paged_cache``); this module is deliberately
 JAX-light so the allocator invariants are testable without compiles.
+
+Tensor-parallel serving shards the pool arrays over the mesh's model axis
+(per the owning backend's ``paged_partition_spec`` — e.g. GQA pools split
+their KV-head axis), but the page-id space stays LOGICAL and shared: every
+shard holds its slice of the same physical page, so one host-side
+allocator + one page table drive all shards, and admission / growth /
+CoW / defrag bookkeeping is unchanged.  The allocator itself is
+sharding-agnostic; per-device capacity accounting (pool bytes divide by
+the shard degree for sharded leaves) lives in
+``parallel.plan.paged_kv_token_bytes``.
 """
 from __future__ import annotations
 

@@ -67,10 +67,16 @@ class LLMEngine:
                  max_top_k: int = sampling.MAX_TOP_K,
                  draft_model: Model | None = None, draft_params: Any = None,
                  gamma: int = 8,
-                 default_sampling: SamplingParams | None = None):
+                 default_sampling: SamplingParams | None = None,
+                 mesh=None, tp_reduce: str = "auto"):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, "
                              f"got {backend!r}")
+        if mesh is not None and backend != "continuous":
+            raise ValueError(
+                "mesh= shards the continuous paged serve path; run the "
+                f"{backend!r} backend under an ambient mesh + sharding_rules "
+                "context instead")
         self.model = model
         self.params = params
         self.backend = backend
@@ -87,7 +93,7 @@ class LLMEngine:
                 sampling_params=self.default_sampling,
                 cache_dtype=cache_dtype, prefill_chunk=prefill_chunk,
                 enable_prefix_cache=enable_prefix_cache,
-                max_top_k=self.max_top_k)
+                max_top_k=self.max_top_k, mesh=mesh, tp_reduce=tp_reduce)
         elif backend == "static":
             self._eng = ServeEngine(
                 model, params, max_len=max_len,
@@ -95,12 +101,31 @@ class LLMEngine:
                 cache_dtype=cache_dtype, max_top_k=self.max_top_k)
         else:                            # speculative
             # with no draft the target drafts for itself ("ideal draft"):
-            # every window accepts, output equals the target-only stream
+            # every window accepts, output equals the target-only stream.
+            # One SpeculativeEngine for the LLMEngine's lifetime: the
+            # prefill jits and per-SamplingParams window jits are cached,
+            # so repeated prompts stop re-tracing.
+            from repro.runtime.speculative import SpeculativeEngine
             self.draft_model = draft_model or model
             self.draft_params = draft_params if draft_model is not None \
                 else params
             self.gamma = gamma
+            self._spec = SpeculativeEngine(
+                self.draft_model, self.draft_params, model, params,
+                gamma=gamma)
             self._eng = None
+
+    # -- mesh introspection (continuous backend) ----------------------------
+    @property
+    def serve_plan(self):
+        """The engine's ``PagedServePlan`` (None off-mesh / other backends)."""
+        return getattr(self._eng, "serve_plan", None)
+
+    def kv_token_bytes_per_device(self) -> int:
+        """Per-device pool bytes one cached token costs (continuous only)."""
+        if self.backend != "continuous":
+            raise ValueError("KV accounting needs backend='continuous'")
+        return self._eng.kv_token_bytes_per_device()
 
     # -- request plumbing ---------------------------------------------------
     def _resolve(self, prompts, sampling_params, max_new_tokens):
@@ -221,14 +246,11 @@ class LLMEngine:
         return outs
 
     def _generate_speculative(self, prompts, sps, budgets, on_output):
-        from repro.runtime.speculative import speculative_generate
         outs = []
         for i, (p, sp, budget) in enumerate(zip(prompts, sps, budgets)):
-            stats = speculative_generate(
-                self.draft_model, self.draft_params, self.model, self.params,
+            stats = self._spec.generate(
                 jnp.asarray(p)[None], max_new_tokens=budget,
-                gamma=self.gamma, sampling_params=sp,
-                key=jax.random.PRNGKey(sp.seed))
+                sampling_params=sp, key=jax.random.PRNGKey(sp.seed))
             ids, reason = _truncate([int(t) for t in stats.tokens[:budget]],
                                     sp, budget)
             out = RequestOutput(

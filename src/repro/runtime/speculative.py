@@ -28,6 +28,7 @@ speculation lossless.
 from __future__ import annotations
 
 import dataclasses
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -133,45 +134,90 @@ def make_speculative_window(draft: Model, target: Model, *, gamma: int = 8,
     return jax.jit(window)
 
 
+class SpeculativeEngine:
+    """Draft/target speculative decoding with cached compilations.
+
+    ``speculative_generate`` builds fresh jit objects (two prefills + the
+    window) on every call, so serving N prompts re-traces everything N
+    times.  This engine owns the jitted prefills and a window cache keyed
+    by the ``SamplingParams`` fields the window actually bakes in
+    (temperature / top-k / top-p / min-p — seed and stop conditions are
+    data), so repeated prompts reuse the compiled program; only a NEW
+    filtering configuration (or a new prompt-length shape, handled by jit's
+    own shape cache) traces again.  ``LLMEngine(backend="speculative")``
+    holds one instance for its lifetime.
+    """
+
+    def __init__(self, draft: Model, dparams, target: Model, tparams, *,
+                 gamma: int = 8):
+        _check_rewindable(draft)
+        _check_rewindable(target)
+        self.draft, self.dparams = draft, dparams
+        self.target, self.tparams = target, tparams
+        self.gamma = gamma
+        self._prefill_d = jax.jit(draft.prefill)
+        self._prefill_t = jax.jit(target.prefill)
+        self._windows: dict[tuple, Callable] = {}
+
+    def _window_for(self, sp: SamplingParams):
+        key = (sp.temperature, sp.top_k, sp.top_p, sp.min_p)
+        win = self._windows.get(key)
+        if win is None:
+            win = make_speculative_window(self.draft, self.target,
+                                          gamma=self.gamma,
+                                          sampling_params=sp)
+            self._windows[key] = win
+        return win
+
+    def generate(self, prompt: jnp.ndarray, *, max_new_tokens: int,
+                 sampling_params: SamplingParams | None = None,
+                 max_len: int | None = None, key=None) -> SpecStats:
+        """Generate ``max_new_tokens`` tokens for a (1, S) prompt."""
+        sp = sampling_params if sampling_params is not None \
+            else SamplingParams(temperature=1.0)
+        key = key if key is not None else jax.random.PRNGKey(sp.seed)
+        s = prompt.shape[1]
+        max_len = max_len or (s + max_new_tokens + self.gamma + 2)
+
+        dcache = self.draft.init_cache(1, max_len)
+        tcache = self.target.init_cache(1, max_len)
+        _, dcache = self._prefill_d(self.dparams, {"tokens": prompt}, dcache)
+        tlogits, tcache = self._prefill_t(self.tparams, {"tokens": prompt},
+                                          tcache)
+
+        key, k0 = jax.random.split(key)
+        last = sampling.draw(k0, sampling.dist(tlogits, sp))   # (1,)
+        pos = jnp.int32(s)
+        window = self._window_for(sp)
+
+        out = [int(last[0])]
+        accepted = []
+        windows = 0
+        while len(out) < max_new_tokens + 1:
+            key, kw = jax.random.split(key)
+            tokens, n_emit, dcache, tcache, pos = window(
+                self.dparams, self.tparams, last, dcache, tcache, pos, kw)
+            n = int(n_emit)
+            out.extend(int(t) for t in tokens[:n])
+            accepted.append(n - 1)
+            last = tokens[n - 1][None]
+            windows += 1
+        return SpecStats(tokens=jnp.asarray(out[:max_new_tokens + 1]),
+                         accepted_per_window=jnp.asarray(accepted,
+                                                         jnp.float32),
+                         windows=windows)
+
+
 def speculative_generate(draft: Model, dparams, target: Model, tparams,
                          prompt: jnp.ndarray, *, max_new_tokens: int,
                          gamma: int = 8, temperature: float = 1.0,
                          sampling_params: SamplingParams | None = None,
                          max_len: int | None = None,
                          key=None) -> SpecStats:
-    """Generate ``max_new_tokens`` tokens for a (1, S) prompt."""
-    _check_rewindable(draft)
-    _check_rewindable(target)
+    """One-shot wrapper: a throwaway ``SpeculativeEngine``.  Callers doing
+    repeated generation should hold an engine (or ``LLMEngine``) instead."""
     sp = (sampling_params if sampling_params is not None
           else SamplingParams(temperature=temperature))
-    key = key if key is not None else jax.random.PRNGKey(sp.seed)
-    s = prompt.shape[1]
-    max_len = max_len or (s + max_new_tokens + gamma + 2)
-
-    dcache = draft.init_cache(1, max_len)
-    tcache = target.init_cache(1, max_len)
-    _, dcache = jax.jit(draft.prefill)(dparams, {"tokens": prompt}, dcache)
-    tlogits, tcache = jax.jit(target.prefill)(tparams, {"tokens": prompt}, tcache)
-
-    key, k0 = jax.random.split(key)
-    last = sampling.draw(k0, sampling.dist(tlogits, sp))   # (1,)
-    pos = jnp.int32(s)
-
-    window = make_speculative_window(draft, target, gamma=gamma,
-                                     sampling_params=sp)
-
-    out = [int(last[0])]
-    accepted = []
-    windows = 0
-    while len(out) < max_new_tokens + 1:
-        key, kw = jax.random.split(key)
-        tokens, n_emit, dcache, tcache, pos = window(
-            dparams, tparams, last, dcache, tcache, pos, kw)
-        n = int(n_emit)
-        out.extend(int(t) for t in tokens[:n])
-        accepted.append(n - 1)
-        last = tokens[n - 1][None]
-        windows += 1
-    return SpecStats(tokens=jnp.asarray(out[:max_new_tokens + 1]),
-                     accepted_per_window=jnp.asarray(accepted, jnp.float32),
-                     windows=windows)
+    eng = SpeculativeEngine(draft, dparams, target, tparams, gamma=gamma)
+    return eng.generate(prompt, max_new_tokens=max_new_tokens,
+                        sampling_params=sp, max_len=max_len, key=key)

@@ -346,8 +346,7 @@ def test_continuous_engine_matches_static_greedy(small):
     cfg, model, params = small
     B, S, G = 4, 12, 10
     toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
-    eng = ServeEngine(model, params, max_len=S + G + 1, temperature=0.0,
-                      donate_cache=False)
+    eng = ServeEngine(model, params, max_len=S + G + 1, donate_cache=False)
     ref = eng.generate({"tokens": toks}, max_new_tokens=G)
 
     # page-aligned max_len so the paged gather width equals the dense width
@@ -369,8 +368,7 @@ def test_continuous_engine_chunked_prefill_prefix_reuse_matches_static(small):
     B, S, G = 6, 12, 6
     base = jax.random.randint(jax.random.PRNGKey(5), (2, S), 0, cfg.vocab_size)
     prompts = np.asarray(base)[np.array([0, 1, 0, 1, 0, 0])]   # 2 distinct
-    eng = ServeEngine(model, params, max_len=S + G + 1, temperature=0.0,
-                      donate_cache=False)
+    eng = ServeEngine(model, params, max_len=S + G + 1, donate_cache=False)
     refs = {i: np.asarray(eng.generate(
         {"tokens": jnp.asarray(prompts[i:i + 1])},
         max_new_tokens=G).tokens[0]) for i in range(B)}
@@ -403,8 +401,7 @@ def test_continuous_engine_ragged_eviction_defrag(small):
     R, S = 6, 12
     lens = [3, 7, 12, 5, 9, 1]
     toks = jax.random.randint(jax.random.PRNGKey(2), (R, S), 0, cfg.vocab_size)
-    eng = ServeEngine(model, params, max_len=40, temperature=0.0,
-                      donate_cache=False)
+    eng = ServeEngine(model, params, max_len=40, donate_cache=False)
     refs = {i: np.asarray(eng.generate({"tokens": toks[i:i + 1]},
                                        max_new_tokens=lens[i]).tokens[0])
             for i in range(R)}
@@ -428,11 +425,35 @@ def test_continuous_engine_matches_static_greedy_mla():
     params = model.init(jax.random.PRNGKey(0))
     B, S, G = 2, 8, 6
     toks = jax.random.randint(jax.random.PRNGKey(4), (B, S), 0, cfg.vocab_size)
-    eng = ServeEngine(model, params, max_len=S + G + 1, temperature=0.0,
-                      donate_cache=False)
+    eng = ServeEngine(model, params, max_len=S + G + 1, donate_cache=False)
     ref = eng.generate({"tokens": toks}, max_new_tokens=G)
     ceng = ContinuousServeEngine(model, params, num_slots=B, page_size=4,
                                  num_pages=32, max_len=S + G + 1)
+    reqs = [Request(rid=i, prompt=np.asarray(toks[i]), max_new_tokens=G)
+            for i in range(B)]
+    stats = ceng.run(reqs)
+    cont = np.stack([stats.results[i] for i in range(B)])
+    np.testing.assert_array_equal(np.asarray(ref.tokens), cont)
+
+
+def test_continuous_engine_matches_static_greedy_sliding_window():
+    """Sliding-window masks through the gqa backend's paged dispatch: a
+    SWA arch (prompt longer than the window) serves continuously and
+    matches the static engine's ring-cache decode token for token.  Pages
+    behind the window stay allocated (ring-aware reclamation is the
+    remaining capacity half, see ROADMAP)."""
+    cfg = reduced_config(get_config("h2o-danube-1-8b"))
+    assert cfg.sliding_window is not None
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S, G = 3, 12, 8                     # S > window (8): mask is live
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0,
+                              cfg.vocab_size)
+    eng = ServeEngine(model, params, max_len=S + G + 1, donate_cache=False)
+    ref = eng.generate({"tokens": toks}, max_new_tokens=G)
+    ceng = ContinuousServeEngine(model, params, num_slots=B, page_size=4,
+                                 num_pages=48, max_len=S + G + 1,
+                                 prefill_chunk=5)     # chunked SWA prefill
     reqs = [Request(rid=i, prompt=np.asarray(toks[i]), max_new_tokens=G)
             for i in range(B)]
     stats = ceng.run(reqs)
@@ -445,3 +466,7 @@ def test_unsupported_families_raise():
     model = build_model(cfg)
     with pytest.raises(NotImplementedError):
         model.init_paged_cache(8, 4)
+    # hybrid SWA still needs per-slot SSM state admission
+    hy = build_model(reduced_config(get_config("hymba-1-5b")))
+    with pytest.raises(NotImplementedError):
+        hy.init_paged_cache(8, 4)

@@ -167,3 +167,70 @@ def test_error_feedback_accumulates_to_true_mean():
     mean_sent = total / 200.0
     np.testing.assert_allclose(np.asarray(mean_sent), np.asarray(g),
                                rtol=0.05, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# PagedServePlan (tensor-parallel paged serving)
+# ---------------------------------------------------------------------------
+
+
+def test_paged_serve_plan_specs_and_local_config():
+    from repro.parallel.plan import make_paged_serve_plan, paged_kv_token_bytes
+    import dataclasses
+    cfg = dataclasses.replace(reduced_config(get_config("qwen3-14b")),
+                              n_heads=8, n_kv_heads=4)
+    model = build_model(cfg)
+    mesh = _fake_mesh((2, 4), ("data", "model"))
+    plan = make_paged_serve_plan(cfg, mesh, reduce="gather")
+    lc = plan.local_config(cfg)
+    assert (lc.n_heads, lc.n_kv_heads, lc.d_ff) == (2, 1, cfg.d_ff // 4)
+    # pool specs shard the KV-head axis of the (reps-stacked) gqa pools
+    specs = plan.pool_specs(model)
+    leaf = jax.tree.leaves(specs, is_leaf=lambda s: isinstance(s, P))[0]
+    assert leaf == P(None, None, None, "model", None)
+    # gather mode: column weights shard, row weights stay replicated
+    params = model.init(jax.random.PRNGKey(0))
+    pspecs = plan.param_specs(params)
+    stack = pspecs["stacks"][0][0]
+    assert stack["attn"]["wq"] == P(None, None, "model")
+    assert stack["attn"]["wo"] == P()
+    assert stack["mlp"]["w_gate"] == P(None, None, "model")
+    assert pspecs["embed"] == P()
+    # psum mode row-shards the closing weight instead
+    psplan = make_paged_serve_plan(cfg, mesh, reduce="psum")
+    pstack = psplan.param_specs(params)["stacks"][0][0]
+    assert pstack["attn"]["wo"] == P(None, "model", None)
+    # per-device KV bytes/token shrink 1/TP
+    assert (paged_kv_token_bytes(model, tp=4)
+            == paged_kv_token_bytes(model, tp=1) // 4)
+    assert plan.psum_bytes_per_step(model, num_slots=8) > 0
+
+
+def test_paged_serve_plan_mla_pools_replicated():
+    from repro.parallel.plan import make_paged_serve_plan
+    cfg = reduced_config(get_config("deepseek-v2-lite-16b"))
+    model = build_model(cfg)
+    mesh = _fake_mesh((2, 4), ("data", "model"))
+    plan = make_paged_serve_plan(cfg, mesh)
+    for spec in jax.tree.leaves(plan.pool_specs(model),
+                                is_leaf=lambda s: isinstance(s, P)):
+        assert spec == P()                 # latent pools shard nothing
+    params = model.init(jax.random.PRNGKey(0))
+    pspecs = plan.param_specs(params)
+    moe_stack = pspecs["stacks"][-1][0]
+    assert moe_stack["attn"]["w_uk"][-1] == "model"    # heads column-shard
+    # MoE experts replicate inside the manual region (no nested EP)
+    assert all(s == P() for s in jax.tree.leaves(
+        moe_stack["moe"], is_leaf=lambda s: isinstance(s, P)))
+
+
+def test_paged_serve_plan_validation():
+    from repro.parallel.plan import make_paged_serve_plan
+    mesh = _fake_mesh((2, 4), ("data", "model"))
+    cfg = reduced_config(get_config("qwen3-14b"))   # kvh=2: 4-way TP fails
+    with pytest.raises(ValueError, match="n_kv_heads"):
+        make_paged_serve_plan(cfg, mesh)
+    with pytest.raises(NotImplementedError, match="SSM"):
+        make_paged_serve_plan(reduced_config(get_config("mamba2-370m")), mesh)
+    with pytest.raises(ValueError, match="axis"):
+        make_paged_serve_plan(cfg, _fake_mesh((8,), ("data",)))

@@ -25,8 +25,7 @@ def test_generate_greedy_matches_manual_loop(small):
     cfg, model, params = small
     B, S, G = 2, 8, 6
     toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
-    eng = ServeEngine(model, params, max_len=S + G + 1, temperature=0.0,
-                      donate_cache=False)
+    eng = ServeEngine(model, params, max_len=S + G + 1, donate_cache=False)
     out = eng.generate({"tokens": toks}, max_new_tokens=G)
     assert out.tokens.shape == (B, G)
 
@@ -78,8 +77,7 @@ def test_speculative_exact_with_identical_models(small):
                                  max_new_tokens=G, gamma=4, temperature=0.0)
     assert float(stats.accepted_per_window.mean()) >= 3.9  # all gamma accepted
 
-    eng = ServeEngine(model, params, max_len=64, temperature=0.0,
-                      donate_cache=False)
+    eng = ServeEngine(model, params, max_len=64, donate_cache=False)
     ref = eng.generate({"tokens": prompt}, max_new_tokens=G)
     np.testing.assert_array_equal(np.asarray(stats.tokens[:G]),
                                   np.asarray(ref.tokens[0, :G]))
@@ -97,8 +95,7 @@ def test_speculative_correct_with_different_draft(small):
     G = 8
     stats = speculative_generate(draft, dparams, model, params, prompt,
                                  max_new_tokens=G, gamma=4, temperature=0.0)
-    eng = ServeEngine(model, params, max_len=64, temperature=0.0,
-                      donate_cache=False)
+    eng = ServeEngine(model, params, max_len=64, donate_cache=False)
     ref = eng.generate({"tokens": prompt}, max_new_tokens=G)
     np.testing.assert_array_equal(np.asarray(stats.tokens[:G]),
                                   np.asarray(ref.tokens[0, :G]))

@@ -3,7 +3,6 @@ sampler, determinism invariants (slot permutation / preemption-restart /
 static-vs-continuous), the no-recompile guarantee, finish reasons,
 streaming outputs, and the LLMEngine façade over all three backends."""
 import dataclasses
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -358,20 +357,45 @@ def test_llm_engine_validation(small):
                                     max_tokens=4))
 
 
-def test_legacy_engine_kwargs_warn_but_work(small):
+def test_legacy_engine_kwargs_removed(small):
+    """The one-release ``temperature=``/``top_k=`` deprecation shim is
+    gone: the kwargs are rejected outright."""
     cfg, model, params = small
-    toks = jax.random.randint(jax.random.PRNGKey(11), (1, 8), 0,
-                              cfg.vocab_size)
-    with pytest.warns(DeprecationWarning, match="deprecated"):
-        eng = ServeEngine(model, params, max_len=20, temperature=0.7,
-                          top_k=4, donate_cache=False)
-    assert eng.temperature == 0.7 and eng.top_k == 4
-    out = eng.generate({"tokens": toks}, max_new_tokens=4,
-                       key=jax.random.PRNGKey(0))
-    assert out.tokens.shape == (1, 4)
-    with pytest.warns(DeprecationWarning, match="deprecated"):
+    with pytest.raises(TypeError):
+        ServeEngine(model, params, max_len=20, temperature=0.7, top_k=4)
+    with pytest.raises(TypeError):
         ContinuousServeEngine(model, params, num_slots=2, page_size=4,
                               num_pages=16, max_len=16, temperature=0.5)
+
+
+def test_speculative_compilations_cached_across_prompts(small):
+    """Repeated speculative prompts reuse the engine-held jits: one window
+    per SamplingParams filter config, one target/draft prefill each —
+    re-prompting stops re-tracing (ROADMAP follow-on)."""
+    cfg, model, params = small
+    llm = LLMEngine(model, params, backend="speculative", max_len=40,
+                    gamma=4)
+    prompts = np.asarray(jax.random.randint(jax.random.PRNGKey(13), (3, 8),
+                                            0, cfg.vocab_size))
+    sp = SamplingParams(temperature=0.8, top_k=8, seed=1)
+    llm.generate([prompts[0]], sp, max_new_tokens=4)
+    spec = llm._spec
+    assert len(spec._windows) == 1
+    win = next(iter(spec._windows.values()))
+    n_win = win._cache_size()
+    n_pre = spec._prefill_t._cache_size()
+    # same shapes + same filter config: zero new traces anywhere
+    llm.generate([prompts[1], prompts[2]],
+                 [dataclasses.replace(sp, seed=7),
+                  dataclasses.replace(sp, seed=9)], max_new_tokens=4)
+    assert len(spec._windows) == 1
+    assert win._cache_size() == n_win
+    assert spec._prefill_t._cache_size() == n_pre
+    # a different filter config compiles ONE new window, prefills reused
+    llm.generate([prompts[0]], SamplingParams(temperature=1.2, top_p=0.9),
+                 max_new_tokens=4)
+    assert len(spec._windows) == 2
+    assert spec._prefill_t._cache_size() == n_pre
 
 
 def test_speculative_acceptance_under_sampled_params(small):
