@@ -247,6 +247,105 @@ def run_shared_prefix(model, params, batch: int, n_req: int,
 
 
 # ---------------------------------------------------------------------------
+# Capacity sweep (--capacity-sweep): the paper's capacity-vs-throughput
+# trade-off on the REAL engine
+# ---------------------------------------------------------------------------
+
+# Fixed-bandwidth-interface HBM-CO stacks of growing capacity (the Fig 9/10
+# provisioning axis, scaled to the toy model): the candidate's 256 GB/s
+# interface (1 rank x 4 layers x 1 ch x 1 bank) at sub-array counts chosen
+# so the derived KV budget crosses from cannot-fit-one-request, through
+# preemption-storm, to knee-limited roomy (capacity = 32 x bank_mb MB).
+SWEEP_BANK_MBS = (0.15, 0.22, 0.25, 0.3, 0.5, 1.0)
+
+
+def run_capacity_sweep(model, params, n_req: int, seed: int,
+                       bank_mbs=SWEEP_BANK_MBS) -> list[Row]:
+    """Serve the SAME greedy trace under DeploymentSpecs of growing HBM-CO
+    capacity; report measured tokens/s and preemption rate against the
+    spec's modeled roofline ceiling.
+
+    Architectural assertions: outputs are byte-identical at every feasible
+    point (restart-style preemption is invisible in the stream), and the
+    derived pool grows monotonically with capacity.  Measured-vs-modeled
+    is reported, not asserted — the model is the target hardware's memory
+    roofline, the measurement is XLA:CPU.
+    """
+    from repro.core.hbmco import HBMCOConfig
+    from repro.runtime.deployment import DeploymentError, DeploymentSpec
+
+    max_len = PROMPT_LEN + MAX_NEW
+    _, new_tokens, prompts = make_trace(n_req, seed, 0.0)  # all arrive at t0
+    sps = [SamplingParams(max_tokens=int(t)) for t in new_tokens]
+
+    rows: list[Row] = []
+    ref_results = None
+    last_pages = 0
+    for mb in bank_mbs:
+        hbm = HBMCOConfig(name=f"co-sweep-m{mb:g}", ranks=1,
+                          channels_per_layer=1, banks_per_group=1,
+                          bank_mb=mb)
+        spec = DeploymentSpec(
+            sku="rpu-cu", hbmco=hbm, stacks_per_device=1,
+            weight_format="mxfp4", cache_dtype=jnp.float32,
+            max_len=max_len, page_size=PAGE, prefill_chunk=PROMPT_LEN,
+            max_slots=8, overcommit=2.0,
+            mean_context=PROMPT_LEN + MAX_NEW // 2)
+        try:
+            llm = LLMEngine(model, params, backend="continuous", spec=spec)
+        except DeploymentError as e:
+            rows.append(Row("ours:capacity",
+                            f"{hbm.capacity_mb:.1f}MB stack measured tok/s",
+                            0.0, None, "", f"does not fit: {e}"))
+            continue
+        dep = llm.deployment
+        assert dep.num_pages >= last_pages, \
+            "pool must grow monotonically with capacity"
+        last_pages = dep.num_pages
+        # warm every admission bucket the run can hit: pow-2 counts below
+        # the slot count, plus a full-slots batch (whose prefill bucket is
+        # pow2ceil(num_slots) — reachable even when num_slots is not a
+        # power of two)
+        b = 1
+        while b < dep.num_slots:
+            llm.generate([prompts[0]] * b, max_new_tokens=2)
+            b *= 2
+        llm.generate([prompts[0]] * dep.num_slots, max_new_tokens=2)
+        outs = llm.generate(list(prompts), sps)
+        stats = llm.last_stats
+        results = [tuple(o.token_ids) for o in outs]
+        if ref_results is None:
+            ref_results = results
+        else:
+            assert results == ref_results, \
+                "outputs must be byte-identical across capacity points"
+        measured = stats.total_tokens / stats.wall
+        preempt_rate = stats.preemptions / n_req
+        cap = f"{hbm.capacity_mb:.1f}MB stack"
+        rows.append(Row(
+            "ours:capacity", f"{cap} measured tok/s", measured, None, "",
+            f"{dep.num_pages} pages / {dep.num_slots} slots, "
+            f"occupancy {stats.occupancy:.2f}"))
+        rows.append(Row(
+            "ours:capacity", f"{cap} modeled ceiling",
+            dep.tokens_per_s_ceiling, None, "tok/s",
+            f"memory roofline at {dep.device.decode_bw / 1e9:.0f}GB/s "
+            f"(target hardware, not the CPU host)"))
+        rows.append(Row(
+            "ours:capacity", f"{cap} preemptions/request", preempt_rate,
+            None, "", f"{stats.preemptions} total over {n_req} requests"))
+        rows.append(Row(
+            "ours:capacity", f"{cap} KV budget",
+            dep.kv_budget_bytes / 2**20, None, "MB",
+            f"of {hbm.capacity_mb:.0f}MB after "
+            f"{dep.weight_bytes_per_device / 2**20:.1f}MB mxfp4 weights + "
+            f"{dep.workspace_bytes / 2**20:.1f}MB workspace; "
+            f"{dep.modeled_j_per_token * 1e3:.2f} mJ/token modeled"))
+    assert ref_results is not None, "no sweep point fit the model"
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # Tensor-parallel strong scaling (--mesh): 1 -> 8 host devices
 # ---------------------------------------------------------------------------
 
@@ -400,12 +499,28 @@ def main(argv=None) -> int:
                          "1 -> 8 host devices, one subprocess per TP "
                          "degree (tokens/s, per-device KV bytes/token, "
                          "per-step collective bytes)")
+    ap.add_argument("--capacity-sweep", action="store_true",
+                    help="DeploymentSpec capacity sweep instead: serve the "
+                         "same trace under fixed-bandwidth HBM-CO stacks "
+                         "of growing capacity (paper Fig 9/10 axis); "
+                         "measured tokens/s + preemption rate vs the "
+                         "modeled roofline ceiling, JSON artifact")
     args = ap.parse_args(argv)
     if args.mesh:
         rows = run_mesh_sweep(args.requests, args.batch, args.seed)
         for r in rows:
             print(r.render())
         dump(rows, "continuous_batching_mesh")
+        return 0
+    if args.capacity_sweep:
+        model = build_model(BENCH_CONFIG)
+        params = jax.tree.map(
+            lambda a: a.astype(jnp.float32) if a.dtype == jnp.bfloat16 else a,
+            model.init(jax.random.PRNGKey(args.seed)))
+        rows = run_capacity_sweep(model, params, args.requests, args.seed)
+        for r in rows:
+            print(r.render())
+        dump(rows, "capacity_sweep")
         return 0
     model = build_model(BENCH_CONFIG)
     params = model.init(jax.random.PRNGKey(args.seed))

@@ -12,6 +12,7 @@ import jax.numpy as jnp
 from repro.configs import get_config, reduced_config
 from repro.core.hbmco import CANDIDATE_CO, HBM3E_LIKE
 from repro.models.model import build_model
+from repro.runtime.deployment import DeploymentSpec
 from repro.runtime.llm import LLMEngine
 from repro.runtime.sampling import SamplingParams
 from repro.sim.scaling import iso_tdp_comparison, rpu_point
@@ -50,6 +51,19 @@ def main():
     llm = LLMEngine(model, state.params, backend="static", max_len=80)
     outs = llm.generate([batch["tokens"][0, :16], batch["tokens"][1, :16]],
                         SamplingParams(max_tokens=8))
+    print(f"  generated: {[o.token_ids for o in outs]}")
+
+    # ---------------------------------------- 4. the seam: spec -> runtime
+    # The analytic core (1-2) sizes the serving runtime (3): a hardware
+    # point resolves into the paged-KV pool and decode-slot budget.
+    print("\n== DeploymentSpec: HBM-CO budget drives the real engine ==")
+    spec = DeploymentSpec(sku="rpu-cu", hbmco=CANDIDATE_CO,
+                          weight_format="mxfp4", max_len=80,
+                          cache_dtype=jnp.float32, max_slots=4)
+    sllm = LLMEngine(model, state.params, backend="continuous", spec=spec)
+    print(sllm.deployment.describe())
+    outs = sllm.generate([batch["tokens"][0, :16], batch["tokens"][1, :16]],
+                         SamplingParams(max_tokens=8))
     print(f"  generated: {[o.token_ids for o in outs]}")
 
 

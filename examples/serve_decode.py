@@ -20,10 +20,12 @@ import dataclasses
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced_config
 from repro.models.model import build_model
+from repro.runtime.deployment import DeploymentSpec
 from repro.runtime.llm import LLMEngine
 from repro.runtime.sampling import SamplingParams
 
@@ -64,11 +66,16 @@ def main():
     print("  greedy row:", outs[0].token_ids[:12])
     print("  sampled row:", outs[1].token_ids[:12])
 
-    # -- continuous batching: stream deltas as tokens land ------------------
+    # -- continuous batching: the pool/slot budget comes from a hardware
+    # spec (paper's HBM-CO candidate device), not a hand-tuned knob -------
     try:
-        cllm = LLMEngine(model, params, backend="continuous",
-                         max_len=args.prompt_len + args.new + 1,
-                         num_slots=min(4, args.batch), page_size=16)
+        spec = DeploymentSpec(sku="rpu-cu", hbmco="hbmco-768MB",
+                              weight_format="mxfp4",
+                              max_len=args.prompt_len + args.new + 1,
+                              cache_dtype=jnp.float32,
+                              max_slots=min(4, args.batch))
+        cllm = LLMEngine(model, params, backend="continuous", spec=spec)
+        print(cllm.deployment.describe())
         stream: dict[int, int] = {}
         cllm.generate(list(prompts[:4]), mix[:4], max_new_tokens=8,
                       on_output=lambda o: stream.__setitem__(

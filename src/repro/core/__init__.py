@@ -3,7 +3,7 @@ roofline machinery used by the dry-run."""
 from repro.core.hardware import TPU_V5E, H100, H200, RPU_DEFAULT, ChipSpec, GPUSpec, RPUChipParams
 from repro.core.hbmco import (
     HBMCOConfig, HBM3E_LIKE, CANDIDATE_CO,
-    enumerate_design_space, pareto_frontier, select_sku,
+    enumerate_design_space, hbmco_by_name, pareto_frontier, select_sku,
 )
 from repro.core.roofline import RooflineReport, analyze_compiled, parse_collectives, model_flops_estimate
 from repro.core import provisioning, sku
@@ -11,7 +11,8 @@ from repro.core import provisioning, sku
 __all__ = [
     "TPU_V5E", "H100", "H200", "RPU_DEFAULT", "ChipSpec", "GPUSpec", "RPUChipParams",
     "HBMCOConfig", "HBM3E_LIKE", "CANDIDATE_CO",
-    "enumerate_design_space", "pareto_frontier", "select_sku",
+    "enumerate_design_space", "hbmco_by_name", "pareto_frontier",
+    "select_sku",
     "RooflineReport", "analyze_compiled", "parse_collectives", "model_flops_estimate",
     "provisioning", "sku",
 ]

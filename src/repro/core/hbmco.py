@@ -28,6 +28,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import math
+import re
 from typing import Iterable, Sequence
 
 # --- energy model constants (paper §III) -----------------------------------
@@ -198,6 +199,28 @@ CANDIDATE_CO = HBMCOConfig(
     ranks=1, layers_per_rank=4, channels_per_layer=1,
     banks_per_group=1, bank_mb=24.0,
 )
+
+
+def hbmco_by_name(name: str) -> HBMCOConfig:
+    """Look up a named HBM-CO device.
+
+    Accepts the two reference devices ("hbm3e-like", "hbmco-768MB") and
+    the ``enumerate_design_space`` naming scheme ``co-r{R}c{C}b{B}m{MB}``
+    (e.g. ``co-r1c1b1m24`` — the candidate's knobs), so every point of the
+    Fig-5 grid is addressable from a CLI flag or a ``DeploymentSpec``.
+    """
+    named = {HBM3E_LIKE.name: HBM3E_LIKE, CANDIDATE_CO.name: CANDIDATE_CO}
+    if name in named:
+        return named[name]
+    m = re.fullmatch(r"co-r(\d+)c(\d+)b(\d+)m([0-9.]+)", name)
+    if not m:
+        raise ValueError(
+            f"unknown HBM-CO device {name!r}; want one of {sorted(named)} "
+            "or a design-space point 'co-r<ranks>c<channels>b<banks>m<MB>'")
+    return HBMCOConfig(name=name, ranks=int(m.group(1)),
+                       channels_per_layer=int(m.group(2)),
+                       banks_per_group=int(m.group(3)),
+                       bank_mb=float(m.group(4)))
 
 
 def enumerate_design_space(

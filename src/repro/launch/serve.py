@@ -42,8 +42,12 @@ from repro.launch.mesh import make_small_mesh, parse_mesh
 from repro.models.model import build_model
 from repro.parallel.hints import sharding_rules
 from repro.parallel.plan import make_plan
+from repro.quant import formats
+from repro.runtime.deployment import DeploymentSpec
 from repro.runtime.llm import LLMEngine
 from repro.runtime.sampling import SamplingParams
+
+CACHE_DTYPES = {"bf16": jnp.bfloat16, "f16": jnp.float16, "f32": jnp.float32}
 
 
 def parse_mix(spec: str, base: SamplingParams) -> list[SamplingParams]:
@@ -116,6 +120,27 @@ def main(argv=None) -> int:
                          "gather = bit-exact all-gather composition (CPU "
                          "default), psum = one f32 psum per attention/MLP "
                          "block (accelerator default)")
+    # -- hardware-aware deployment (DeploymentSpec) ----------------------
+    ap.add_argument("--sku", default=None,
+                    help="deployment hardware point: rpu-cu | tpu-v5e | "
+                         "h100 | h200.  Giving --sku/--hbmco/--weight-"
+                         "format switches the engine to the DeploymentSpec "
+                         "path: KV pool pages and decode slots are derived "
+                         "from the per-device memory budget and the "
+                         "bandwidth roofline instead of --batch")
+    ap.add_argument("--hbmco", default=None,
+                    help="HBM-CO memory stack: hbm3e-like | hbmco-768MB | "
+                         "co-r<R>c<C>b<B>m<MB> (paper Fig-5 design-space "
+                         "naming)")
+    ap.add_argument("--weight-format", default=None,
+                    choices=sorted(formats.FORMATS),
+                    help="block-quantized weight format for the capacity "
+                         "budget (the RPU streams compressed weights, §V)")
+    ap.add_argument("--cache-dtype", default=None,
+                    choices=sorted(CACHE_DTYPES),
+                    help="KV page-pool dtype (default: engine default)")
+    ap.add_argument("--max-slots", type=int, default=32,
+                    help="cap on the spec-derived decode slot count")
     ap.add_argument("--seed", type=int, default=0,
                     help="model-init seed AND per-request sampling seed")
     args = ap.parse_args(argv)
@@ -142,6 +167,16 @@ def main(argv=None) -> int:
     plan = make_plan(cfg, mesh, global_batch=args.batch, shape_kind="decode")
     max_len = args.prompt_len + args.max_new + 1
 
+    cache_dtype = CACHE_DTYPES.get(args.cache_dtype)
+    spec = None
+    if args.sku or args.hbmco or args.weight_format:
+        spec = DeploymentSpec(
+            sku=args.sku or "rpu-cu", hbmco=args.hbmco,
+            mesh=serve_mesh, tp_reduce=args.tp_reduce,
+            weight_format=args.weight_format, cache_dtype=cache_dtype,
+            max_len=max_len, page_size=args.page_size,
+            prefill_chunk=args.prefill_chunk, max_slots=args.max_slots)
+
     base = SamplingParams(
         temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
         min_p=args.min_p, seed=args.seed,
@@ -163,13 +198,23 @@ def main(argv=None) -> int:
             mix = parse_mix(args.sampling_mix, base) if args.sampling_mix \
                 else [base]
             sps = [mix[i % len(mix)] for i in range(n_req)]
-            llm = LLMEngine(
-                model, params, backend="continuous", max_len=max_len,
-                num_slots=args.batch, page_size=args.page_size,
-                num_pages=1 + args.batch * -(-max_len // args.page_size) * 2,
-                prefill_chunk=args.prefill_chunk,
-                enable_prefix_cache=args.prefix_cache, mesh=serve_mesh,
-                tp_reduce=args.tp_reduce)
+            if spec is not None:
+                # hardware-derived pool/slots — no manual num_pages knob
+                llm = LLMEngine(model, params, backend="continuous",
+                                spec=spec,
+                                enable_prefix_cache=args.prefix_cache)
+                print(llm.deployment.describe())
+                slots = llm._eng.num_slots
+            else:
+                slots = args.batch
+                llm = LLMEngine(
+                    model, params, backend="continuous", max_len=max_len,
+                    num_slots=slots, page_size=args.page_size,
+                    num_pages=1 + slots * -(-max_len // args.page_size) * 2,
+                    prefill_chunk=args.prefill_chunk,
+                    cache_dtype=cache_dtype,
+                    enable_prefix_cache=args.prefix_cache, mesh=serve_mesh,
+                    tp_reduce=args.tp_reduce)
             t0 = time.time()
             outs = llm.generate([pool_prompts[picks[i]] for i in range(n_req)],
                                 sps, max_new_tokens=args.max_new,
@@ -177,7 +222,7 @@ def main(argv=None) -> int:
             dt = time.time() - t0
             stats = llm.last_stats
             n_tok = sum(len(o.token_ids) for o in outs)
-            print(f"arch={cfg.name} continuous slots={args.batch} "
+            print(f"arch={cfg.name} continuous slots={slots} "
                   f"requests={n_req} rate={args.arrival_rate}/s "
                   f"steps={stats.steps} occupancy={stats.occupancy:.2f} "
                   f"preemptions={stats.preemptions}")
@@ -188,7 +233,7 @@ def main(argv=None) -> int:
                       f"(reduce={sp.reduce}) — "
                       f"{llm.kv_token_bytes_per_device()} KV bytes/token "
                       f"per device, "
-                      f"{sp.psum_bytes_per_step(model, args.batch)}"
+                      f"{sp.psum_bytes_per_step(model, slots)}"
                       f" collective bytes/step per device")
             if args.sampling_mix:
                 print(f"sampling mix: {args.sampling_mix} "
@@ -254,7 +299,10 @@ def main(argv=None) -> int:
             print(f"speculative: accepted/window="
                   f"{m['accepted_per_window']:.2f} over {m['windows']} windows")
         else:
-            llm = LLMEngine(model, params, backend="static", max_len=max_len)
+            llm = LLMEngine(model, params, backend="static", max_len=max_len,
+                            spec=spec, cache_dtype=cache_dtype)
+            if spec is not None:
+                print(llm._eng.deployment.describe())
             t0 = time.time()
             outs = llm.generate(prompts, base, max_new_tokens=args.max_new)
             dt = time.time() - t0

@@ -32,6 +32,7 @@ import dataclasses
 from typing import Any, Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -250,6 +251,12 @@ class PagedServePlan:
     mesh: Mesh
     axis: str = "model"
     reduce: str = "gather"         # "gather" (bit-exact) | "psum" (Megatron)
+    # KV-head replication factor (tp // n_kv_heads) for llama3-style GQA
+    # models with fewer KV heads than the TP degree: each KV head is
+    # materialized on ``kv_repl`` consecutive shards (1 local head per
+    # shard), so q heads still shard tp-way while every shard streams
+    # exactly the KV head its q-group reads.  1 = plain head sharding.
+    kv_repl: int = 1
 
     @property
     def tp(self) -> int:
@@ -260,14 +267,64 @@ class PagedServePlan:
         """The per-shard config the manual region's model code runs with:
         head counts and the dense-MLP width divide by TP (columns are
         sliced in contiguous head/d_ff blocks); everything replicated
-        (d_model, vocab, MoE experts, latent ranks) keeps its full size."""
+        (d_model, vocab, MoE experts, latent ranks) keeps its full size.
+        Under KV-head replication each shard holds exactly ONE KV head
+        (its q-group's), so the local model is plain GQA with group size
+        ``n_heads // tp``."""
         if self.tp == 1:
             return cfg
+        if self.kv_repl > 1:
+            kvh = 1
+        elif cfg.n_kv_heads % self.tp == 0:
+            kvh = cfg.n_kv_heads // self.tp
+        else:
+            kvh = cfg.n_kv_heads
         return dataclasses.replace(
-            cfg, n_heads=cfg.n_heads // self.tp,
-            n_kv_heads=(cfg.n_kv_heads // self.tp
-                        if cfg.n_kv_heads % self.tp == 0 else cfg.n_kv_heads),
+            cfg, n_heads=cfg.n_heads // self.tp, n_kv_heads=kvh,
             d_ff=cfg.d_ff // self.tp)
+
+    def pool_config(self, cfg: ModelConfig) -> ModelConfig:
+        """The config the GLOBAL page pools are built with: under KV-head
+        replication the pool's KV-head axis is physically widened to
+        ``n_kv_heads * kv_repl`` (= tp) heads so the even tp-way shard of
+        that axis hands each shard its one replicated head.  Identity
+        otherwise."""
+        if self.kv_repl == 1:
+            return cfg
+        return dataclasses.replace(cfg,
+                                   n_kv_heads=cfg.n_kv_heads * self.kv_repl)
+
+    def prepare_params(self, params, cfg: ModelConfig):
+        """Physically replicate the KV projections for an uneven
+        ``n_kv_heads < tp`` deployment: each KV head's ``wk``/``wv``
+        columns (and ``bk``/``bv`` entries) are repeated ``kv_repl`` times
+        along the head axis, after which the normal contiguous column
+        shard gives shard ``d`` the exact single head its local q heads
+        attend to (shard d's q heads are global heads
+        ``[d*H/tp, (d+1)*H/tp)``, all inside KV group ``d // kv_repl``).
+        Bit-exact: every shard's k/v equals the single-device values for
+        that head.  Identity when ``kv_repl == 1``."""
+        if self.kv_repl == 1:
+            return params
+        r, kvh, hd = self.kv_repl, cfg.n_kv_heads, cfg.hd
+
+        def expand(path, leaf):
+            names = _path_names(path)
+            if any(n in ("moe", "ssm") for n in names):
+                return leaf
+            name = names[-1]
+            if name in ("wk", "wv"):
+                *lead, d, _ = leaf.shape
+                x = leaf.reshape(*lead, d, kvh, hd)
+                return jnp.repeat(x, r, axis=-2).reshape(*lead, d,
+                                                         kvh * r * hd)
+            if name in ("bk", "bv"):
+                *lead, _ = leaf.shape
+                x = leaf.reshape(*lead, kvh, hd)
+                return jnp.repeat(x, r, axis=-2).reshape(*lead, kvh * r * hd)
+            return leaf
+
+        return jax.tree_util.tree_map_with_path(expand, params)
 
     # ---------------- parameters ----------------
     def _serve_param_spec(self, names: list[str], ndim: int) -> P:
@@ -360,10 +417,14 @@ class PagedServePlan:
         return int(total * dtype_bytes)
 
 
-def paged_kv_token_bytes(model, *, tp: int = 1, dtype_bytes: int = 4) -> int:
+def paged_kv_token_bytes(model, *, tp: int = 1, dtype_bytes: int = 4,
+                         kv_repl: int = 1) -> int:
     """Per-device pool bytes one cached token costs — the strong-scaling
     observable: leaves sharded by their backend's ``paged_partition_spec``
-    divide by ``tp``, replicated leaves don't."""
+    divide by ``tp``, replicated leaves don't.  Under KV-head replication
+    the sharded leaves are first widened by ``kv_repl`` (each KV head is
+    materialized on ``kv_repl`` shards), so per-device bytes bottom out at
+    one head instead of continuing to shrink 1/TP."""
     from repro.models.attention_backends import backend_for_kind
 
     total = 0
@@ -377,7 +438,7 @@ def paged_kv_token_bytes(model, *, tp: int = 1, dtype_bytes: int = 4) -> int:
             for key, leaf in pool.items():
                 per_tok = int(np.prod(leaf.shape[2:])) * dtype_bytes
                 if tp > 1 and part.get(key) is not None:
-                    per_tok //= tp
+                    per_tok = per_tok * kv_repl // tp
                 total += per_tok * seg.reps
     return total
 
@@ -398,28 +459,33 @@ def make_paged_serve_plan(cfg: ModelConfig, mesh: Mesh,
     if axis not in mesh.axis_names:
         raise ValueError(f"mesh {mesh.axis_names} has no {axis!r} axis")
     tp = int(mesh.shape[axis])
-    plan = PagedServePlan(mesh=mesh, axis=axis, reduce=reduce)
     if tp == 1:
-        return plan
+        return PagedServePlan(mesh=mesh, axis=axis, reduce=reduce)
     if cfg.family in ("ssm", "hybrid") or cfg.ssm:
         raise NotImplementedError(
             "sharded paged serving needs a paged state pool for SSM/hybrid "
             "families first (see ROADMAP)")
+    kv_repl = 1
     problems = []
     if cfg.n_heads % tp:
         problems.append(f"n_heads={cfg.n_heads}")
     if not cfg.mla and cfg.n_kv_heads % tp:
-        # GQA shards q and kv heads together; kv replication with sharded
-        # q heads (kvh < tp) is a recorded follow-on
-        problems.append(f"n_kv_heads={cfg.n_kv_heads}")
+        if tp % cfg.n_kv_heads == 0:
+            # llama3-style kvh < tp: replicate each KV head on tp/kvh
+            # consecutive shards (one local head each); see prepare_params
+            kv_repl = tp // cfg.n_kv_heads
+        else:
+            problems.append(f"n_kv_heads={cfg.n_kv_heads}")
     if cfg.d_ff % tp:
         problems.append(f"d_ff={cfg.d_ff}")
     if problems:
         raise ValueError(
             f"{cfg.name}: {', '.join(problems)} not divisible by the "
             f"{tp}-way {axis!r} axis; pick a mesh whose TP degree divides "
-            "the head/FFN widths")
-    return plan
+            "the head/FFN widths (KV heads may also be an integer divisor "
+            "of TP — they replicate)")
+    return PagedServePlan(mesh=mesh, axis=axis, reduce=reduce,
+                          kv_repl=kv_repl)
 
 
 def _as_tuple(x) -> tuple:

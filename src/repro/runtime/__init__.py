@@ -1,4 +1,8 @@
-"""Serving runtime: engines, paged KV cache, scheduler, sampling, speculative."""
+"""Serving runtime: engines, paged KV cache, scheduler, sampling,
+speculative decoding, and the hardware-aware ``DeploymentSpec``."""
+from repro.runtime.deployment import (
+    DeploymentError, DeploymentSpec, DeviceBudget, ResolvedDeployment,
+)
 from repro.runtime.engine import (
     ContinuousServeEngine, ContinuousStats, GenerationResult, RequestOutput,
     ServeEngine, prefill_step_fn, serve_step_fn,
@@ -6,8 +10,9 @@ from repro.runtime.engine import (
 from repro.runtime.kv_cache import PageAllocator, PagedKVCache, SCRATCH_PAGE
 from repro.runtime.llm import LLMEngine
 from repro.runtime.sampling import (
-    MAX_TOP_K, SamplingParams, SlotSampling, dist, draw, greedy, probs,
-    sample, sample_slots, stack_params, token_key,
+    MAX_LOGIT_BIAS, MAX_TOP_K, SamplingParams, SlotSampling, dist, draw,
+    greedy, probs, sample, sample_slots, stack_extras, stack_params,
+    token_key,
 )
 from repro.runtime.scheduler import Request, Scheduler
 from repro.runtime.speculative import (

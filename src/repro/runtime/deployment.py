@@ -1,0 +1,403 @@
+"""``DeploymentSpec``: one hardware-aware deployment API.
+
+The paper's provisioning argument (HBM-CO §III, Fig 9/10; bandwidth-first
+chiplet provisioning §IV) is that a serving deployment is fully determined
+by a *hardware point* — memory capacity, memory bandwidth, energy/bit —
+plus the model's byte footprint.  Until now the analytic side
+(``core.{hbmco,sku,roofline,provisioning}``) and the serving runtime
+(``runtime.{engine,llm,kv_cache,scheduler}``) computed with the same
+quantities but never met: engines sized their paged KV pool from a
+hand-tuned ``num_pages`` knob.
+
+``DeploymentSpec`` is the seam.  It names a hardware point (a device SKU
+and/or an HBM-CO stack), a mesh shape, and the weight/cache number
+formats, and ``resolve()`` turns that into the runtime configuration:
+
+  **memory budget** (per device)
+      capacity  =  weights  +  workspace  +  KV pool
+      ─ weights: total params x bits/weight (``quant.formats`` block
+        formats — the RPU streams compressed weights through the Stream
+        Decoder, §V), per-device under TP via the serve plan's partition
+        specs (KV-replicated ``wk``/``wv`` count their replicas);
+      ─ workspace: a configurable fraction reserved for activations,
+        logits, and allocator metadata;
+      ─ KV pool: whatever capacity remains sizes ``num_pages``
+        (page bytes shrink 1/TP for sharded pool leaves).
+
+  **bandwidth model** (memory roofline — decode is bandwidth-bound, §II)
+      step_seconds(b) = (weight stream + b x KV-context stream) / BW
+      The knee ``b* ~ weight_bytes / kv_context_bytes`` — the batch where
+      the KV stream equals the weight stream and per-token latency has
+      doubled — bounds ``num_slots`` and is surfaced as the scheduler's
+      ``max_decode_slots`` admission hint; ``tokens_per_s_ceiling`` is the
+      modeled throughput the capacity-sweep benchmark compares real runs
+      against.
+
+Every front-end consumes the same object::
+
+    spec = DeploymentSpec(sku="rpu-cu", hbmco="hbmco-768MB",
+                          weight_format="mxfp4", max_len=4096)
+    llm = LLMEngine(model, params, spec=spec)      # pools sized from spec
+    print(llm.deployment.describe())
+
+so a new SKU, HBM-CO stack, or quantized cache is a config change, not an
+engine change.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hardware
+from repro.core.hbmco import CANDIDATE_CO, HBMCOConfig, hbmco_by_name
+from repro.models.footprint import compute_footprint
+from repro.quant import formats
+
+
+class DeploymentError(ValueError):
+    """The spec's hardware point cannot back the requested deployment."""
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceBudget:
+    """The per-device hardware point a spec resolves against."""
+
+    name: str
+    capacity_bytes: float          # usable HBM per device
+    decode_bw: float               # bytes/s sustained during decode
+    energy_pj_per_bit: float | None = None   # memory-stream energy, if known
+
+
+# Named compute SKUs (``core.hardware``).  "rpu-cu" is one RPU compute
+# unit: 2 HBM-CO chiplets on dual 256 GB/s shorelines (paper §IV).
+CHIP_SKUS = {
+    "tpu-v5e": hardware.TPU_V5E,
+    "tpu_v5e": hardware.TPU_V5E,
+    "h100": hardware.H100,
+    "h200": hardware.H200,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class DeploymentSpec:
+    """One hardware-aware deployment configuration.
+
+    sku            "rpu-cu", a name from ``CHIP_SKUS``, or a ``ChipSpec``.
+    hbmco          HBM-CO stack (config or name — see ``hbmco_by_name``).
+                   When set, the memory system is ``stacks_per_device``
+                   such stacks (capacity/bandwidth/energy from the §III
+                   model); required for ``sku="rpu-cu"`` (defaults to the
+                   paper's 768 MB candidate).  When None, the SKU's native
+                   HBM numbers apply (GPU decode bandwidth derated by the
+                   paper's measured §II utilization).
+    mesh           ``jax.sharding.Mesh`` | ``"DxM"`` | ``(D, M)`` | None.
+    weight_format  ``quant.formats`` name ("mxfp4", ...) for the weight
+                   budget; None = native parameter dtype.
+    cache_dtype    KV-pool dtype (None = engine default bf16).
+    max_len        per-request token capacity (prompt + generated).
+    page_size      KV page tokens.
+    prefill_chunk  admission chunk tokens (None = 4 pages).
+    max_slots      upper bound on the derived slot count.
+    overcommit     capacity admission optimism: slots may cover
+                   ``overcommit x`` the pool's worst-case token capacity
+                   (restart-style preemption is the backstop — >1 trades
+                   preemption risk for occupancy, the Fig-10 trade-off).
+    mean_context   expected live context per slot for the bandwidth model
+                   (None = ``max_len // 2``).
+    workspace_fraction  capacity reserved for activations + allocator
+                   metadata before the KV pool is sized.
+    """
+
+    sku: str | hardware.ChipSpec = "rpu-cu"
+    hbmco: str | HBMCOConfig | None = None
+    mesh: Any = None
+    tp_reduce: str = "auto"
+    weight_format: str | None = None
+    cache_dtype: Any = None
+    max_len: int = 256
+    page_size: int = 16
+    prefill_chunk: int | None = None
+    max_slots: int = 32
+    overcommit: float = 1.0
+    mean_context: int | None = None
+    workspace_fraction: float = 0.05
+    stacks_per_device: int = 2
+
+    def __post_init__(self):
+        if self.max_len < 1 or self.page_size < 1:
+            raise ValueError("max_len and page_size must be >= 1")
+        if self.max_slots < 1:
+            raise ValueError(f"max_slots={self.max_slots} must be >= 1")
+        if self.overcommit <= 0.0:
+            raise ValueError(f"overcommit={self.overcommit} must be > 0")
+        if not 0.0 <= self.workspace_fraction < 1.0:
+            raise ValueError("workspace_fraction must be in [0, 1)")
+        if self.weight_format is not None \
+                and self.weight_format not in formats.FORMATS:
+            raise ValueError(f"unknown weight_format {self.weight_format!r}; "
+                             f"known: {sorted(formats.FORMATS)}")
+
+    # ---------------- hardware point ----------------
+    def device_budget(self) -> DeviceBudget:
+        """Resolve (sku, hbmco) into per-device capacity/BW/energy."""
+        hbm = self.hbmco
+        if isinstance(hbm, str):
+            hbm = hbmco_by_name(hbm)
+        if isinstance(self.sku, str) and self.sku == "rpu-cu":
+            hbm = hbm or CANDIDATE_CO
+            rpu = hardware.RPU_DEFAULT
+            n = self.stacks_per_device
+            return DeviceBudget(
+                name=f"rpu-cu[{n}x{hbm.name}]",
+                capacity_bytes=n * hbm.capacity_bytes,
+                decode_bw=min(rpu.cu_mem_bw, n * hbm.bandwidth_gbs * 1e9),
+                energy_pj_per_bit=hbm.energy_pj_per_bit)
+        chip = self.sku if isinstance(self.sku, hardware.ChipSpec) \
+            else CHIP_SKUS.get(self.sku)
+        if chip is None:
+            raise ValueError(f"unknown sku {self.sku!r}; known: 'rpu-cu', "
+                             f"{sorted(set(CHIP_SKUS) - {'tpu_v5e'})}")
+        if hbm is not None:        # HBM-CO retrofit of a named chip
+            n = self.stacks_per_device
+            return DeviceBudget(
+                name=f"{chip.name}[{n}x{hbm.name}]",
+                capacity_bytes=n * hbm.capacity_bytes,
+                decode_bw=min(chip.hbm_bw, n * hbm.bandwidth_gbs * 1e9),
+                energy_pj_per_bit=hbm.energy_pj_per_bit)
+        bw = chip.hbm_bw
+        if isinstance(chip, hardware.GPUSpec):
+            bw *= chip.decode_bw_utilization     # paper §II: 32% on H100
+        return DeviceBudget(name=chip.name, capacity_bytes=chip.hbm_capacity,
+                            decode_bw=bw)
+
+    def _resolve_mesh(self, override=None):
+        mesh = override if override is not None else self.mesh
+        if mesh is None or isinstance(mesh, jax.sharding.Mesh):
+            return mesh
+        if isinstance(mesh, str):
+            try:
+                d, m = (int(x) for x in mesh.lower().split("x"))
+            except ValueError:
+                raise ValueError(f"mesh spec wants 'DxM', got {mesh!r}") \
+                    from None
+            return jax.make_mesh((d, m), ("data", "model"))
+        d, m = mesh
+        return jax.make_mesh((int(d), int(m)), ("data", "model"))
+
+    # ---------------- resolution ----------------
+    def resolve(self, model, params=None, mesh=None) -> "ResolvedDeployment":
+        """Turn the spec into runtime numbers for ``model``.
+
+        ``params`` makes the weight budget exact (per-leaf bytes through
+        the serve plan's partition specs); without it the footprint
+        estimate is used.  ``mesh`` overrides the spec's mesh.
+        """
+        from repro.parallel.plan import make_paged_serve_plan, \
+            paged_kv_token_bytes
+
+        cfg = model.cfg
+        mesh = self._resolve_mesh(mesh)
+        plan = None
+        tp = kv_repl = 1
+        if mesh is not None:
+            plan = make_paged_serve_plan(cfg, mesh, reduce=self.tp_reduce)
+            tp, kv_repl = plan.tp, plan.kv_repl
+        dev = self.device_budget()
+        fp = compute_footprint(cfg)
+        wbits = (formats.bits_per_element(self.weight_format)
+                 if self.weight_format else None)
+
+        # -- weights, per device --
+        if params is not None:
+            weight_bytes = self._weight_bytes_exact(params, plan, tp,
+                                                    kv_repl, wbits)
+        else:
+            # no params: a conservative estimate — treat every weight as
+            # replicated.  Dividing by tp here would need the per-leaf
+            # partition specs (MoE experts, norms, and embeddings stay
+            # replicated in the serve plan, and KV-replicated wk/wv keep
+            # kv_repl copies); overstating weights only shrinks the KV
+            # pool, never passes an infeasible deployment.
+            per = (wbits / 8.0) if wbits else 2.0          # bf16 default
+            weight_bytes = fp.total_params * per
+
+        # -- workspace + KV budget --
+        workspace = self.workspace_fraction * dev.capacity_bytes
+        kv_budget = dev.capacity_bytes - weight_bytes - workspace
+        cache_dtype = self.cache_dtype if self.cache_dtype is not None \
+            else jnp.bfloat16
+        kv_token = paged_kv_token_bytes(
+            model, tp=tp, dtype_bytes=jnp.dtype(cache_dtype).itemsize,
+            kv_repl=kv_repl)
+        max_blocks = -(-self.max_len // self.page_size)
+        page_bytes = kv_token * self.page_size
+        if kv_budget < page_bytes * max_blocks:
+            raise DeploymentError(
+                f"{dev.name}: {_fmt_bytes(dev.capacity_bytes)} capacity "
+                f"leaves {_fmt_bytes(max(kv_budget, 0))} for KV after "
+                f"{_fmt_bytes(weight_bytes)} weights + "
+                f"{_fmt_bytes(workspace)} workspace — cannot back one "
+                f"max_len={self.max_len} request "
+                f"({max_blocks} pages x {_fmt_bytes(page_bytes)}); pick a "
+                "larger-capacity SKU, quantize (weight_format/cache_dtype), "
+                "or lower max_len")
+        budget_pages = int(kv_budget // page_bytes)
+        budget_tokens = budget_pages * self.page_size
+
+        # -- bandwidth model (memory roofline; decode is BW-bound §II) --
+        per_w = (wbits / 8.0) if wbits else 2.0
+        active_bytes = fp.active_params * per_w / tp
+        ctx = self.mean_context if self.mean_context is not None \
+            else max(self.max_len // 2, 1)
+        kv_ctx = max(kv_token * ctx, 1.0)
+        knee = max(1, round(active_bytes / kv_ctx))
+        slots_cap = max(1, int(budget_tokens * self.overcommit
+                               // self.max_len))
+        num_slots = max(1, min(knee, slots_cap, self.max_slots))
+        max_decode_slots = max(1, min(knee, self.max_slots))
+        # the pool never needs more pages than a fully-occupied slot set
+        # plus prefix-cache slack (caps host allocation on huge SKUs)
+        num_pages = 1 + min(budget_pages, 4 * num_slots * max_blocks)
+
+        step_s = (active_bytes + num_slots * kv_ctx) / dev.decode_bw
+        ceiling = num_slots / step_s
+        j_per_tok = None
+        if dev.energy_pj_per_bit is not None:
+            stream = (active_bytes + num_slots * kv_ctx) * tp
+            j_per_tok = stream * 8.0 * dev.energy_pj_per_bit * 1e-12 \
+                / num_slots
+
+        return ResolvedDeployment(
+            spec=self, device=dev, mesh=mesh, tp=tp, kv_repl=kv_repl,
+            tp_reduce=self.tp_reduce, cache_dtype=cache_dtype,
+            weight_bytes_per_device=weight_bytes,
+            workspace_bytes=workspace,
+            kv_budget_bytes=kv_budget,
+            kv_token_bytes=kv_token,
+            budget_tokens=budget_tokens,
+            max_len=self.max_len, page_size=self.page_size,
+            prefill_chunk=(self.prefill_chunk
+                           if self.prefill_chunk is not None
+                           else 4 * self.page_size),
+            num_pages=num_pages, num_slots=num_slots,
+            max_decode_slots=max_decode_slots,
+            mean_context=ctx,
+            step_seconds=step_s,
+            tokens_per_s_ceiling=ceiling,
+            modeled_j_per_token=j_per_tok)
+
+    def _weight_bytes_exact(self, params, plan, tp: int, kv_repl: int,
+                            wbits: float | None) -> float:
+        from repro.parallel.plan import _path_names
+
+        def leaf_bytes(path, leaf):
+            b = leaf.size * (wbits / 8.0 if wbits else leaf.dtype.itemsize)
+            if plan is not None and tp > 1:
+                names = _path_names(path)
+                spec = plan._serve_param_spec(names, leaf.ndim)
+                if any(s is not None for s in spec):
+                    repl = kv_repl if names[-1] in ("wk", "wv", "bk", "bv") \
+                        else 1
+                    b = b * repl / tp
+            return b
+
+        return sum(jax.tree.leaves(
+            jax.tree_util.tree_map_with_path(leaf_bytes, params)))
+
+
+@dataclasses.dataclass(frozen=True)
+class ResolvedDeployment:
+    """A ``DeploymentSpec`` resolved against one model: the engine
+    configuration plus the modeled roofline the benchmark compares real
+    runs against."""
+
+    spec: DeploymentSpec
+    device: DeviceBudget
+    mesh: Any
+    tp: int
+    kv_repl: int
+    tp_reduce: str
+    cache_dtype: Any
+    # memory budget (per device)
+    weight_bytes_per_device: float
+    workspace_bytes: float
+    kv_budget_bytes: float
+    kv_token_bytes: int
+    budget_tokens: int
+    # engine configuration
+    max_len: int
+    page_size: int
+    prefill_chunk: int
+    num_pages: int
+    num_slots: int
+    max_decode_slots: int
+    # bandwidth model
+    mean_context: int
+    step_seconds: float
+    tokens_per_s_ceiling: float
+    modeled_j_per_token: float | None = None
+
+    @property
+    def pool_bytes_per_device(self) -> int:
+        return (self.num_pages - 1) * self.kv_token_bytes * self.page_size
+
+    def describe(self) -> str:
+        d = self.device
+        lines = [
+            f"deployment: {d.name}"
+            + (f" x tp={self.tp}" + (f" (kv_repl={self.kv_repl})"
+                                     if self.kv_repl > 1 else "")
+               if self.tp > 1 else ""),
+            f"  capacity  {_fmt_bytes(d.capacity_bytes):>10}/device = "
+            f"{_fmt_bytes(self.weight_bytes_per_device)} weights + "
+            f"{_fmt_bytes(self.workspace_bytes)} workspace + "
+            f"{_fmt_bytes(self.kv_budget_bytes)} KV budget",
+            f"  KV pool   {self.num_pages} pages x {self.page_size} tok x "
+            f"{_fmt_bytes(self.kv_token_bytes)}/tok = "
+            f"{_fmt_bytes(self.pool_bytes_per_device)}/device",
+            f"  slots     {self.num_slots} "
+            f"(admission hint {self.max_decode_slots}; "
+            f"{self.budget_tokens} budget tokens, max_len {self.max_len})",
+            f"  roofline  {_fmt_bytes(d.decode_bw)}/s -> "
+            f"{self.tokens_per_s_ceiling:.1f} tok/s ceiling at "
+            f"ctx {self.mean_context} "
+            f"({self.step_seconds * 1e3:.2f} ms/step)",
+        ]
+        if self.modeled_j_per_token is not None:
+            lines.append(f"  energy    "
+                         f"{self.modeled_j_per_token * 1e3:.3f} mJ/token "
+                         f"({d.energy_pj_per_bit:.2f} pJ/bit memory)")
+        return "\n".join(lines)
+
+    def as_dict(self) -> dict:
+        """JSON-friendly summary (the capacity-sweep artifact rows)."""
+        return {
+            "device": self.device.name,
+            "capacity_bytes": self.device.capacity_bytes,
+            "decode_bw": self.device.decode_bw,
+            "tp": self.tp, "kv_repl": self.kv_repl,
+            "weight_bytes_per_device": self.weight_bytes_per_device,
+            "workspace_bytes": self.workspace_bytes,
+            "kv_budget_bytes": self.kv_budget_bytes,
+            "kv_token_bytes": self.kv_token_bytes,
+            "budget_tokens": self.budget_tokens,
+            "num_pages": self.num_pages, "num_slots": self.num_slots,
+            "max_decode_slots": self.max_decode_slots,
+            "page_size": self.page_size, "max_len": self.max_len,
+            "prefill_chunk": self.prefill_chunk,
+            "tokens_per_s_ceiling": self.tokens_per_s_ceiling,
+            "step_seconds": self.step_seconds,
+            "modeled_j_per_token": self.modeled_j_per_token,
+        }
+
+
+def _fmt_bytes(b: float) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024.0:
+            return f"{b:.1f}{unit}"
+        b /= 1024.0
+    return f"{b:.1f}PB"

@@ -95,12 +95,21 @@ class GenerationResult:
 class ServeEngine:
     """Batched request serving for one model (static batch)."""
 
-    def __init__(self, model: Model, params: Any, *, max_len: int,
-                 sampling_params: SamplingParams | None = None,
+    def __init__(self, model: Model, params: Any, *, max_len: int | None = None,
+                 spec=None, sampling_params: SamplingParams | None = None,
                  donate_cache: bool = True, cache_dtype=None,
                  max_top_k: int = sampling.MAX_TOP_K):
         self.model = model
         self.params = params
+        self.deployment = None
+        if spec is not None:        # DeploymentSpec (runtime.deployment)
+            dep = spec.resolve(model, params=params)
+            self.deployment = dep
+            max_len = dep.max_len if max_len is None else max_len
+            cache_dtype = dep.cache_dtype if cache_dtype is None \
+                else cache_dtype
+        if max_len is None:
+            raise ValueError("pass max_len= or a DeploymentSpec via spec=")
         self.max_len = max_len
         self.default_sampling = sampling_params or sampling.GREEDY
         self.max_top_k = int(max_top_k)
@@ -125,19 +134,26 @@ class ServeEngine:
 
     # -- phase 2: autonomous decode loop -------------------------------------
     def _decode_loop_impl(self, first_tokens, cache, start_pos, temp, topk,
-                          topp, minp, seed, *, n_steps: int):
+                          topp, minp, seed, rep, bias_ids, bias_vals,
+                          presence, *, n_steps: int):
+        rows = jnp.arange(first_tokens.shape[0])
+
         def step(carry, _):
-            tokens, cache, pos = carry
+            tokens, cache, pos, pres = carry
+            # the incoming token joins the stream before the next draw —
+            # the repetition penalty sees prompt + every generated token
+            pres = pres.at[rows, tokens].set(True)
             logits, cache = self.model.decode_step(self.params, tokens, cache,
                                                    pos)
             # the token being generated sits at sequence index pos + 1
             nxt, lp = sampling.sample_slots(
                 logits, temp, topk, topp, minp, seed, pos + 1,
-                max_top_k=self.max_top_k)
-            return (nxt, cache, pos + 1), (nxt, lp)
+                max_top_k=self.max_top_k, rep_penalty=rep,
+                bias_ids=bias_ids, bias_vals=bias_vals, presence=pres)
+            return (nxt, cache, pos + 1, pres), (nxt, lp)
 
-        (_, cache, _), (toks, lps) = jax.lax.scan(
-            step, (first_tokens, cache, start_pos), length=n_steps)
+        (_, cache, _, _), (toks, lps) = jax.lax.scan(
+            step, (first_tokens, cache, start_pos, presence), length=n_steps)
         return jnp.moveaxis(toks, 0, 1), jnp.moveaxis(lps, 0, 1), cache
 
     def _resolve_params(self, b: int, sampling_params, key) -> list[SamplingParams]:
@@ -171,12 +187,22 @@ class ServeEngine:
         sps = self._resolve_params(b, sampling_params, key)
         temp, topk, topp, minp, seed = (
             jnp.asarray(a) for a in sampling.stack_params(sps))
+        rep, bias_ids, bias_vals = (
+            jnp.asarray(a) for a in sampling.stack_extras(sps))
+        # token-presence rows seed the repetition penalty with the prompt
+        pres0 = np.zeros((b, self.model.cfg.padded_vocab), np.bool_)
+        if "tokens" in batch:
+            pres0[np.arange(b)[:, None], np.asarray(batch["tokens"])] = True
+        pres0 = jnp.asarray(pres0)
         logits, cache, plen = self.prefill(batch)
         first, lp0 = sampling.sample_slots(
             logits, temp, topk, topp, minp, seed,
-            jnp.full((b,), plen, jnp.int32), max_top_k=self.max_top_k)
+            jnp.full((b,), plen, jnp.int32), max_top_k=self.max_top_k,
+            rep_penalty=rep, bias_ids=bias_ids, bias_vals=bias_vals,
+            presence=pres0)
         toks, lps, cache = self._decode_loop(
             first, cache, jnp.int32(plen), temp, topk, topp, minp, seed,
+            rep, bias_ids, bias_vals, pres0,
             n_steps=max_new_tokens - 1)
         all_toks = jnp.concatenate([first[:, None], toks], axis=1)
         all_lps = (jnp.concatenate([lp0[:, None], lps], axis=1)
@@ -240,23 +266,64 @@ class ContinuousServeEngine:
     Drive it incrementally (``add_request`` then ``step`` until
     ``has_unfinished()`` is False, collecting ``RequestOutput`` deltas) or
     in batch via ``run(requests, on_output=...)``.
+
+    Sizing: pass a ``DeploymentSpec`` via ``spec=`` and the pool/slot
+    knobs (``num_pages``/``num_slots``/``page_size``/``max_len``/
+    ``prefill_chunk``/``cache_dtype``/``mesh`` and the scheduler's
+    ``max_decode_slots`` admission hint) derive from the hardware point's
+    memory budget and bandwidth roofline (``runtime.deployment``);
+    explicit kwargs override individual values.  The resolved budget is
+    kept on ``self.deployment``.
     """
 
-    def __init__(self, model: Model, params: Any, *, num_slots: int,
-                 page_size: int, num_pages: int, max_len: int,
+    def __init__(self, model: Model, params: Any, *,
+                 num_slots: int | None = None, page_size: int | None = None,
+                 num_pages: int | None = None, max_len: int | None = None,
+                 spec=None,
                  sampling_params: SamplingParams | None = None,
-                 cache_dtype=None, prefill_chunk: int = 64,
+                 cache_dtype=None, prefill_chunk: int | None = None,
                  enable_prefix_cache: bool = True,
                  max_top_k: int = sampling.MAX_TOP_K,
-                 mesh=None, tp_reduce: str = "auto"):
+                 mesh=None, tp_reduce: str = "auto",
+                 max_decode_slots: int | None = None):
         if model.cfg.frontend is not None:
             raise NotImplementedError(
                 "continuous batching serves token frontends only")
         self.model = model
         self.params = params
+        # -- DeploymentSpec resolution: pool/slot knobs derived from the
+        # hardware point; explicit kwargs override individual values --
+        self.deployment = None
+        if spec is not None:
+            dep = spec.resolve(model, params=params, mesh=mesh)
+            self.deployment = dep
+            mesh = dep.mesh
+            num_slots = dep.num_slots if num_slots is None else num_slots
+            page_size = dep.page_size if page_size is None else page_size
+            num_pages = dep.num_pages if num_pages is None else num_pages
+            max_len = dep.max_len if max_len is None else max_len
+            prefill_chunk = dep.prefill_chunk if prefill_chunk is None \
+                else prefill_chunk
+            cache_dtype = dep.cache_dtype if cache_dtype is None \
+                else cache_dtype
+            max_decode_slots = dep.max_decode_slots \
+                if max_decode_slots is None else max_decode_slots
+            if tp_reduce == "auto":
+                tp_reduce = dep.tp_reduce
+        missing = [k for k, v in (("num_slots", num_slots),
+                                  ("page_size", page_size),
+                                  ("num_pages", num_pages),
+                                  ("max_len", max_len)) if v is None]
+        if missing:
+            raise ValueError(
+                f"pass a DeploymentSpec via spec= or the explicit knobs "
+                f"{missing}")
+        prefill_chunk = 64 if prefill_chunk is None else prefill_chunk
         self.num_slots = num_slots
         self.page_size = page_size
         self.num_pages = num_pages
+        self.max_len = max_len
+        self.max_decode_slots = max_decode_slots
         self.max_blocks = -(-max_len // page_size)
         if num_pages - 1 < self.max_blocks:   # page 0 is scratch
             raise ValueError(
@@ -270,9 +337,11 @@ class ContinuousServeEngine:
         self.prefill_chunk = int(prefill_chunk)
         self.enable_prefix_cache = enable_prefix_cache
         self.defrag_every = 0
+        self._vocab = model.cfg.padded_vocab
         # -- mesh execution (tensor-parallel paged serving) --
         self.mesh = mesh
         self.serve_plan = None
+        self._pool_model = model
         if mesh is not None:
             from repro.parallel.plan import make_paged_serve_plan
             self.serve_plan = make_paged_serve_plan(model.cfg, mesh,
@@ -280,10 +349,17 @@ class ContinuousServeEngine:
             self._local_model = Model(
                 self.serve_plan.local_config(model.cfg),
                 moe_impl=model.moe_impl)
+            if self.serve_plan.kv_repl > 1:
+                # kvh < tp: KV projections physically replicate per head
+                # group, and the pools widen to tp KV heads (one per shard)
+                params = self.serve_plan.prepare_params(params, model.cfg)
+                self._pool_model = Model(
+                    self.serve_plan.pool_config(model.cfg),
+                    moe_impl=model.moe_impl)
             self.params = jax.device_put(
                 params, self.serve_plan.param_shardings(params))
             self._param_specs = self.serve_plan.param_specs(params)
-            self._pool_specs = self.serve_plan.pool_specs(model)
+            self._pool_specs = self.serve_plan.pool_specs(self._pool_model)
             self._paged_decode = self._shard_paged(
                 self._local_model.decode_step_paged, n_extra=1)   # pos
             self._paged_chunk = self._shard_paged(
@@ -291,7 +367,7 @@ class ContinuousServeEngine:
         else:
             self._paged_decode = model.decode_step_paged
             self._paged_chunk = model.prefill_chunk_paged
-        self._step_fn = jax.jit(self._step_impl, donate_argnums=(1,))
+        self._step_fn = jax.jit(self._step_impl, donate_argnums=(1, 2))
         self._chunk = jax.jit(self._chunk_impl, donate_argnums=(1,))
         self._copy_page = jax.jit(self._copy_page_impl, donate_argnums=(0,))
         self._sched: Scheduler | None = None
@@ -322,31 +398,43 @@ class ContinuousServeEngine:
             axis_names={sp.axis}, check_vma=False)
 
     # -- jitted pieces ------------------------------------------------------
-    def _step_impl(self, params, pools, tokens, pos, page_table, temp, topk,
-                   topp, minp, seed):
+    def _step_impl(self, params, pools, presence, tokens, pos, page_table,
+                   temp, topk, topp, minp, seed, rep, bias_ids, bias_vals):
         logits, pools = self._paged_decode(params, tokens, pools,
                                            page_table, pos)
         # the incoming token sits at index pos; the one being generated at
         # pos + 1 — its PRNG key is fold_in(seed, pos + 1)
         nxt, lp = sampling.sample_slots(logits, temp, topk, topp, minp, seed,
-                                        pos + 1, max_top_k=self.max_top_k)
-        return nxt, lp, pools
+                                        pos + 1, max_top_k=self.max_top_k,
+                                        rep_penalty=rep, bias_ids=bias_ids,
+                                        bias_vals=bias_vals,
+                                        presence=presence)
+        # the sampled token joins its slot's presence row for the next
+        # step's repetition penalty (rows of inactive slots accumulate
+        # garbage harmlessly — admission re-uploads the host mirror)
+        presence = presence.at[jnp.arange(nxt.shape[0]), nxt].set(True)
+        return nxt, lp, pools, presence
 
-    def _chunk_impl(self, params, pools, tokens, page_table, start, valid,
-                    temp, topk, topp, minp, seed):
+    def _chunk_impl(self, params, pools, presence, tokens, page_table,
+                    start, valid, temp, topk, topp, minp, seed, rep,
+                    bias_ids, bias_vals):
         logits, pools = self._paged_chunk(
             params, tokens, pools, page_table, start, valid)
         # a request's first token is generated at index prompt_len ==
-        # start + valid of its final chunk (other rows' draws are ignored)
+        # start + valid of its final chunk (other rows' draws are ignored);
+        # presence rows carry the slot's full prompt already
         first, lp = sampling.sample_slots(logits, temp, topk, topp, minp,
                                           seed, start + valid,
-                                          max_top_k=self.max_top_k)
+                                          max_top_k=self.max_top_k,
+                                          rep_penalty=rep, bias_ids=bias_ids,
+                                          bias_vals=bias_vals,
+                                          presence=presence)
         return first, lp, pools
 
     def _copy_page_impl(self, pools, dst, src):
         """pools[dst] = pools[src] on every pool leaf (copy-on-write)."""
         new_pools = []
-        for si, seg in enumerate(self.model.plan):
+        for si, seg in enumerate(self._pool_model.plan):
             copy = ((lambda a: a.at[dst].set(a[src])) if seg.reps == 1
                     else (lambda a: a.at[:, dst].set(a[:, src])))
             new_pools.append(tuple(
@@ -357,7 +445,7 @@ class ContinuousServeEngine:
         """Apply a defrag page permutation to every pool leaf."""
         gather = jnp.asarray(gather)
         new_pools = []
-        for si, seg in enumerate(self.model.plan):
+        for si, seg in enumerate(self._pool_model.plan):
             axis = 0 if seg.reps == 1 else 1
             new_pools.append(tuple(
                 {k: jnp.take(v, gather, axis=axis) for k, v in pool.items()}
@@ -373,24 +461,43 @@ class ContinuousServeEngine:
                                   page_size=self.page_size,
                                   max_blocks=self.max_blocks,
                                   enable_prefix_cache=self.enable_prefix_cache)
-        self._sched = Scheduler(self.cache, on_release=self._on_release)
+        self._sched = Scheduler(self.cache, on_release=self._on_release,
+                                max_running=self.max_decode_slots)
         self._slots = sampling.SlotSampling(self.num_slots)
-        self._pools = self.model.init_paged_cache(self.num_pages,
-                                                  self.page_size,
-                                                  dtype=self.cache_dtype)
+        # token-presence rows (repetition penalty): host mirror + device
+        # copy threaded through the jitted step
+        self._presence_np = np.zeros((self.num_slots, self._vocab), np.bool_)
+        self._presence = self._presence_to_device(self._presence_np)
+        self._presence_dirty = False
+        self._pools = self._pool_model.init_paged_cache(self.num_pages,
+                                                        self.page_size,
+                                                        dtype=self.cache_dtype)
         if self.serve_plan is not None:
             # per-shard pools: each device holds its model-axis slice of
             # every physical page (shared logical page-id space)
             self._pools = jax.device_put(
-                self._pools, self.serve_plan.pool_shardings(self.model))
+                self._pools,
+                self.serve_plan.pool_shardings(self._pool_model))
         self._t0 = time.monotonic()
         self._steps, self._occ_sum = 0, 0.0
         self._n_chunks, self._prefill_tokens = 0, 0
         self._requests: list[Request] = []
         self.defrag_every = 0      # run-scoped; run() re-applies its arg
 
+    def _presence_to_device(self, arr):
+        """Host mirror -> device, placement-stable across steps: on a mesh
+        the threaded presence comes back replicated over every device, so
+        fresh uploads must match that sharding or the second step would
+        recompile (the jit cache keys on committed shardings)."""
+        if self.serve_plan is not None:
+            return jax.device_put(
+                arr, jax.sharding.NamedSharding(self.serve_plan.mesh, P()))
+        return jnp.asarray(arr)
+
     def _on_release(self, slot: int) -> None:
         self._slots.clear(slot)
+        self._presence_np[slot] = False
+        self._presence_dirty = True
 
     def _now(self) -> float:
         return time.monotonic() - self._t0
@@ -405,7 +512,8 @@ class ContinuousServeEngine:
         dtype = jnp.dtype(self.cache_dtype or jnp.bfloat16)
         return paged_kv_token_bytes(
             self.model, tp=self.serve_plan.tp if self.serve_plan else 1,
-            dtype_bytes=dtype.itemsize)
+            dtype_bytes=dtype.itemsize,
+            kv_repl=self.serve_plan.kv_repl if self.serve_plan else 1)
 
     def add_request(self, req: Request,
                     sampling_params: SamplingParams | None = None) -> None:
@@ -496,10 +604,15 @@ class ContinuousServeEngine:
             start[i] = r.pos
             valid[i] = n
         samp = sampling.stack_params([r.sampling for r in pre], bucket)
+        extras = sampling.stack_extras([r.sampling for r in pre], bucket)
+        pres = np.zeros((bucket, self._vocab), np.bool_)
+        for i, r in enumerate(pre):
+            pres[i] = self._presence_np[r.slot]
         first, lp, self._pools = self._chunk(
-            self.params, self._pools, jnp.asarray(tokens), jnp.asarray(tables),
-            jnp.asarray(start), jnp.asarray(valid),
-            *(jnp.asarray(a) for a in samp))
+            self.params, self._pools, jnp.asarray(pres), jnp.asarray(tokens),
+            jnp.asarray(tables), jnp.asarray(start), jnp.asarray(valid),
+            *(jnp.asarray(a) for a in samp),
+            *(jnp.asarray(a) for a in extras))
         first = np.asarray(first)                      # device sync
         lp = np.asarray(lp)
         for i, r in enumerate(pre):
@@ -510,6 +623,8 @@ class ContinuousServeEngine:
             if r.pos == r.prompt_len:                  # prefill complete
                 r.state = RUNNING
                 r.tokens.append(int(first[i]))
+                self._presence_np[r.slot, int(first[i])] = True
+                self._presence_dirty = True
                 if r.sampling.logprobs:
                     r.logprobs.append(float(lp[i]))
                 if r.first_token_time is None:
@@ -532,6 +647,9 @@ class ContinuousServeEngine:
         outs: list[RequestOutput] = []
         for r in sched.admit(self._now()):
             self._slots.set(r.slot, r.sampling)
+            self._presence_np[r.slot] = False
+            self._presence_np[r.slot][np.asarray(r.prompt)] = True
+            self._presence_dirty = True
         # -- chunked prefill, interleaved with the decode iterations --
         if sched.prefilling():
             self._run_prefill_chunks(outs)
@@ -563,9 +681,12 @@ class ContinuousServeEngine:
             tokens[req.slot] = req.tokens[-1]
             pos[req.slot] = req.pos
             step_table[req.slot] = self.cache.table()[req.slot]
-        nxt, lp, self._pools = self._step_fn(
-            self.params, self._pools, jnp.asarray(tokens), jnp.asarray(pos),
-            jnp.asarray(step_table), *self._slots.arrays())
+        if self._presence_dirty:       # admissions/releases since last step
+            self._presence = self._presence_to_device(self._presence_np)
+            self._presence_dirty = False
+        nxt, lp, self._pools, self._presence = self._step_fn(
+            self.params, self._pools, self._presence, jnp.asarray(tokens),
+            jnp.asarray(pos), jnp.asarray(step_table), *self._slots.arrays())
         nxt = np.asarray(nxt)                          # device sync
         lp = np.asarray(lp)
         self._occ_sum += len(decoding) / self.num_slots
@@ -574,6 +695,8 @@ class ContinuousServeEngine:
             if sched.running.get(req.slot) is not req:
                 continue
             req.tokens.append(int(nxt[req.slot]))
+            # mirror the in-step presence update (device already has it)
+            self._presence_np[req.slot, int(nxt[req.slot])] = True
             if req.sampling.logprobs:
                 req.logprobs.append(float(lp[req.slot]))
             req.pos += 1

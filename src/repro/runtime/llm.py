@@ -21,6 +21,17 @@ incremental deltas through ``on_output`` / the ``add_request()``/
 host loop (that is their point), so they emit one final output per
 request.
 
+Deployment sizing is hardware-aware: pass a ``DeploymentSpec``
+(``runtime.deployment``) and the paged-KV pool, decode-slot count, and
+admission hints derive from the named SKU / HBM-CO stack / weight format
+instead of hand-tuned kwargs::
+
+    llm = LLMEngine(model, params,
+                    spec=DeploymentSpec(sku="rpu-cu", hbmco="hbmco-768MB",
+                                        weight_format="mxfp4",
+                                        max_len=4096))
+    print(llm.deployment.describe())
+
 Future backends (SWA ring pages, SSM state admission, real-TPU serving)
 plug in behind this façade instead of growing new ad-hoc entrypoints.
 """
@@ -60,9 +71,11 @@ class LLMEngine:
     continuous, and speculative execution."""
 
     def __init__(self, model: Model, params: Any, *,
-                 backend: str = "continuous", max_len: int = 256,
-                 num_slots: int = 8, page_size: int = 16,
-                 num_pages: int | None = None, prefill_chunk: int = 64,
+                 backend: str = "continuous", spec=None,
+                 max_len: int | None = None,
+                 num_slots: int | None = None, page_size: int | None = None,
+                 num_pages: int | None = None,
+                 prefill_chunk: int | None = None,
                  enable_prefix_cache: bool = True, cache_dtype=None,
                  max_top_k: int = sampling.MAX_TOP_K,
                  draft_model: Model | None = None, draft_params: Any = None,
@@ -77,6 +90,22 @@ class LLMEngine:
                 "mesh= shards the continuous paged serve path; run the "
                 f"{backend!r} backend under an ambient mesh + sharding_rules "
                 "context instead")
+        if spec is not None and spec.mesh is not None \
+                and backend != "continuous":
+            raise ValueError("spec.mesh shards the continuous backend only")
+        if spec is not None and backend == "speculative":
+            raise ValueError(
+                "backend='speculative' does not consume a DeploymentSpec "
+                "yet (the budget sizes the static/continuous engines); "
+                "pass max_len= directly")
+        if spec is None:
+            # legacy knob defaults (the pre-DeploymentSpec hand-tuned path)
+            max_len = 256 if max_len is None else max_len
+            num_slots = 8 if num_slots is None else num_slots
+            page_size = 16 if page_size is None else page_size
+            prefill_chunk = 64 if prefill_chunk is None else prefill_chunk
+        elif max_len is None:
+            max_len = spec.max_len
         self.model = model
         self.params = params
         self.backend = backend
@@ -85,18 +114,18 @@ class LLMEngine:
         self.max_top_k = int(max_top_k)
         self.last_stats = None          # ContinuousStats of the last run
         if backend == "continuous":
-            if num_pages is None:
+            if spec is None and num_pages is None:
                 num_pages = 1 + 2 * num_slots * -(-max_len // page_size)
             self._eng = ContinuousServeEngine(
                 model, params, num_slots=num_slots, page_size=page_size,
-                num_pages=num_pages, max_len=max_len,
+                num_pages=num_pages, max_len=max_len, spec=spec,
                 sampling_params=self.default_sampling,
                 cache_dtype=cache_dtype, prefill_chunk=prefill_chunk,
                 enable_prefix_cache=enable_prefix_cache,
                 max_top_k=self.max_top_k, mesh=mesh, tp_reduce=tp_reduce)
         elif backend == "static":
             self._eng = ServeEngine(
-                model, params, max_len=max_len,
+                model, params, max_len=max_len, spec=spec,
                 sampling_params=self.default_sampling, donate_cache=False,
                 cache_dtype=cache_dtype, max_top_k=self.max_top_k)
         else:                            # speculative
@@ -120,6 +149,11 @@ class LLMEngine:
     def serve_plan(self):
         """The engine's ``PagedServePlan`` (None off-mesh / other backends)."""
         return getattr(self._eng, "serve_plan", None)
+
+    @property
+    def deployment(self):
+        """The resolved ``DeploymentSpec`` budget (None without spec=)."""
+        return getattr(self._eng, "deployment", None)
 
     def kv_token_bytes_per_device(self) -> int:
         """Per-device pool bytes one cached token costs (continuous only)."""
@@ -246,6 +280,12 @@ class LLMEngine:
         return outs
 
     def _generate_speculative(self, prompts, sps, budgets, on_output):
+        for sp in sps:
+            if sp.repetition_penalty != 1.0 or sp.logit_bias:
+                raise ValueError(
+                    "backend='speculative' does not support "
+                    "repetition_penalty/logit_bias yet (acceptance under "
+                    "history-dependent logits is a recorded follow-on)")
         outs = []
         for i, (p, sp, budget) in enumerate(zip(prompts, sps, budgets)):
             stats = self._spec.generate(

@@ -49,6 +49,12 @@ TOP_P_BUDGET = 512
 # 5% of decode-step latency (benchmarks/sampling_overhead.py).
 SLOT_CANDIDATES = 128
 
+# Static per-slot budget for token-level logit biases: each request's
+# ``logit_bias`` map is stacked into ``(num_slots, MAX_LOGIT_BIAS)``
+# token-id/value data arrays (rows padded with id -1), so any mix of
+# biased and unbiased requests shares the one compiled decode step.
+MAX_LOGIT_BIAS = 8
+
 
 @dataclasses.dataclass(frozen=True)
 class SamplingParams:
@@ -67,6 +73,14 @@ class SamplingParams:
                  None defers to the caller's ``max_new_tokens``.
     logprobs     return the chosen token's logprob under the final
                  (filtered, temperature-scaled) distribution.
+    repetition_penalty  CTRL-style: logits of tokens already present in
+                 the request's stream (prompt + generated) are divided by
+                 the penalty when positive, multiplied when negative
+                 (1.0 = off).  Applied before temperature.
+    logit_bias   additive per-token logit offsets, as a ``{token_id:
+                 bias}`` mapping or ``((token_id, bias), ...)`` pairs; at
+                 most ``MAX_LOGIT_BIAS`` entries per request (the static
+                 per-slot data-array width).  Applied before filtering.
     """
     temperature: float = 0.0
     top_k: int = 0
@@ -76,6 +90,8 @@ class SamplingParams:
     stop_token_ids: tuple[int, ...] = ()
     max_tokens: int | None = None
     logprobs: bool = False
+    repetition_penalty: float = 1.0
+    logit_bias: tuple[tuple[int, float], ...] = ()
 
     def __post_init__(self):
         if self.temperature < 0.0:
@@ -90,8 +106,21 @@ class SamplingParams:
             raise ValueError(f"seed must be in [0, 2^31), got {self.seed}")
         if self.max_tokens is not None and self.max_tokens < 1:
             raise ValueError(f"max_tokens must be >= 1, got {self.max_tokens}")
+        if self.repetition_penalty <= 0.0:
+            raise ValueError(f"repetition_penalty must be > 0, got "
+                             f"{self.repetition_penalty}")
         object.__setattr__(self, "stop_token_ids",
                            tuple(int(t) for t in self.stop_token_ids))
+        bias = self.logit_bias
+        if isinstance(bias, dict):
+            bias = tuple(bias.items())
+        bias = tuple((int(t), float(v)) for t, v in bias)
+        if len(bias) > MAX_LOGIT_BIAS:
+            raise ValueError(f"logit_bias holds {len(bias)} entries; the "
+                             f"static per-slot budget is {MAX_LOGIT_BIAS}")
+        if any(t < 0 for t, _ in bias):
+            raise ValueError("logit_bias token ids must be >= 0")
+        object.__setattr__(self, "logit_bias", bias)
 
     @property
     def is_greedy(self) -> bool:
@@ -195,7 +224,9 @@ def draw(key, dist: jnp.ndarray) -> jnp.ndarray:
 
 
 def sample_slots(logits: jnp.ndarray, temperature, top_k, top_p, min_p,
-                 seed, pos, *, max_top_k: int = MAX_TOP_K):
+                 seed, pos, *, max_top_k: int = MAX_TOP_K,
+                 rep_penalty=None, bias_ids=None, bias_vals=None,
+                 presence=None):
     """Batched per-slot sampler, fused into the jitted decode step.
 
     logits: (B, V).  temperature/top_p/min_p: (B,) f32; top_k/seed/pos:
@@ -216,10 +247,26 @@ def sample_slots(logits: jnp.ndarray, temperature, top_k, top_p, min_p,
     slot inverted through the filtered CDF (no per-token Gumbel noise).
     ``benchmarks/sampling_overhead.py`` holds the whole sampler under 5%
     of decode-step latency.
+
+    Optional per-slot processors (all data, defaults are exact no-ops):
+    ``bias_ids``/``bias_vals`` (B, MAX_LOGIT_BIAS) additive logit offsets
+    (ids < 0 are padding); ``rep_penalty`` (B,) f32 with ``presence``
+    (B, V) bool marking tokens already in each slot's stream — CTRL-style
+    penalty (positive logits divide, negative multiply), applied before
+    temperature, so greedy slots are penalized too.
     """
     lg = logits.astype(jnp.float32)
     b, v = lg.shape
     rows = jnp.arange(b)
+    if bias_ids is not None:
+        okb = bias_ids >= 0
+        bias = jnp.zeros_like(lg).at[
+            rows[:, None], jnp.where(okb, bias_ids, 0)].add(
+            jnp.where(okb, bias_vals, 0.0))
+        lg = lg + bias
+    if presence is not None:
+        pen = rep_penalty[:, None]
+        lg = jnp.where(presence, jnp.where(lg > 0, lg / pen, lg * pen), lg)
     pos = jnp.broadcast_to(pos, (b,))
     is_greedy = temperature <= 0.0
     kmax = min(int(max_top_k), v)
@@ -285,6 +332,23 @@ def stack_params(ps, n: int | None = None):
     return temp, topk, topp, minp, seed
 
 
+def stack_extras(ps, n: int | None = None):
+    """Stack the per-request logit processors into per-row data arrays:
+    (rep_penalty (n,) f32, bias_ids (n, MAX_LOGIT_BIAS) i32, bias_vals
+    (n, MAX_LOGIT_BIAS) f32).  Padding rows are exact no-ops (penalty
+    1.0, bias ids -1)."""
+    n = len(ps) if n is None else n
+    rep = np.ones((n,), np.float32)
+    bias_ids = np.full((n, MAX_LOGIT_BIAS), -1, np.int32)
+    bias_vals = np.zeros((n, MAX_LOGIT_BIAS), np.float32)
+    for i, sp in enumerate(ps):
+        rep[i] = sp.repetition_penalty
+        for j, (t, val) in enumerate(sp.logit_bias):
+            bias_ids[i, j] = t
+            bias_vals[i, j] = val
+    return rep, bias_ids, bias_vals
+
+
 class SlotSampling:
     """Per-slot sampling tensors living alongside the page table.
 
@@ -296,6 +360,8 @@ class SlotSampling:
     def __init__(self, num_slots: int):
         (self.temperature, self.top_k, self.top_p, self.min_p,
          self.seed) = stack_params([], num_slots)
+        (self.rep_penalty, self.bias_ids,
+         self.bias_vals) = stack_extras([], num_slots)
         self._device = None
 
     def set(self, slot: int, sp: SamplingParams) -> None:
@@ -304,6 +370,12 @@ class SlotSampling:
         self.top_p[slot] = sp.top_p
         self.min_p[slot] = sp.min_p
         self.seed[slot] = sp.seed
+        self.rep_penalty[slot] = sp.repetition_penalty
+        self.bias_ids[slot] = -1
+        self.bias_vals[slot] = 0.0
+        for j, (t, val) in enumerate(sp.logit_bias):
+            self.bias_ids[slot, j] = t
+            self.bias_vals[slot, j] = val
         self._device = None
 
     def clear(self, slot: int) -> None:
@@ -316,5 +388,6 @@ class SlotSampling:
             self._device = (
                 jnp.asarray(self.temperature), jnp.asarray(self.top_k),
                 jnp.asarray(self.top_p), jnp.asarray(self.min_p),
-                jnp.asarray(self.seed))
+                jnp.asarray(self.seed), jnp.asarray(self.rep_penalty),
+                jnp.asarray(self.bias_ids), jnp.asarray(self.bias_vals))
         return self._device

@@ -97,7 +97,8 @@ class Scheduler:
     """Slot-based admission over a paged KV cache."""
 
     def __init__(self, cache: PagedKVCache,
-                 on_release: Callable[[int], None] | None = None):
+                 on_release: Callable[[int], None] | None = None,
+                 max_running: int | None = None):
         self.cache = cache
         self.num_slots = cache.num_slots
         self.waiting: deque[Request] = deque()
@@ -106,6 +107,12 @@ class Scheduler:
         # engine hook: a slot's per-slot sampling tensors are cleared the
         # moment the slot frees (preempt/finish), alongside its page rows
         self.on_release = on_release
+        # bandwidth-model admission hint (``DeploymentSpec``): cap the
+        # concurrently-admitted requests below ``num_slots`` when the
+        # roofline says extra slots only stretch the decode step (the KV
+        # stream already dominates the weight stream)
+        self.max_running = min(self.num_slots,
+                               max_running or self.num_slots)
 
     # -- queries ------------------------------------------------------------
     def has_work(self) -> bool:
@@ -149,6 +156,7 @@ class Scheduler:
         prefix cache could not supply; the engine drives their chunks."""
         admitted: list[Request] = []
         while (self.waiting and self._free_slots
+               and len(self.running) < self.max_running
                and self.waiting[0].arrival_time <= now):
             req = self.waiting[0]
             slot = self._free_slots[-1]
@@ -167,14 +175,21 @@ class Scheduler:
 
     def ensure_capacity(self, req: Request) -> bool:
         """Back ``req``'s next write position with a page, evicting the
-        youngest other request if the pool is exhausted.  Returns False if
-        ``req`` itself had to be preempted."""
+        youngest running request — INCLUDING ``req`` itself — while the
+        pool is exhausted.  Returns False if ``req`` was preempted.
+
+        A request never evicts one admitted before it: letting a
+        freshly-admitted request evict an older one livelocks a pool too
+        small for two working sets (each admission grabs the last free
+        page, then its first growth evicts the other request, forever —
+        the oldest request must be allowed to run to completion so its
+        pages come back)."""
         while not self.cache.ensure(req.slot, req.pos):
-            victims = [r for r in self.running.values() if r is not req]
-            if not victims:
-                self.preempt(req)
+            victim = max(self.running.values(),
+                         key=lambda r: (r.admit_time, r.rid))
+            self.preempt(victim)
+            if victim is req:
                 return False
-            self.preempt(max(victims, key=lambda r: (r.admit_time, r.rid)))
         return True
 
     def preempt(self, req: Request) -> None:

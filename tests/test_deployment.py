@@ -1,0 +1,249 @@
+"""DeploymentSpec: budget resolution arithmetic, the spec-driven engine
+path, capacity-pressure behavior under a deliberately tiny pool, and the
+bandwidth-model admission hint."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.core.hbmco import CANDIDATE_CO, HBM3E_LIKE, HBMCOConfig, \
+    hbmco_by_name
+from repro.models.model import build_model
+from repro.quant import formats
+from repro.runtime.deployment import DeploymentError, DeploymentSpec
+from repro.runtime.engine import ContinuousServeEngine
+from repro.runtime.llm import LLMEngine
+from repro.runtime.sampling import SamplingParams
+from repro.runtime.scheduler import Request
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = reduced_config(get_config("qwen3-14b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def prompts(small):
+    cfg, _, _ = small
+    base = np.asarray(jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                                         cfg.vocab_size))
+    return base[np.array([0, 1, 0, 1, 0, 1])]      # 2 distinct -> prefix hits
+
+
+# ---------------------------------------------------------------------------
+# Resolution arithmetic
+# ---------------------------------------------------------------------------
+
+
+def test_hbmco_by_name_named_and_design_space():
+    assert hbmco_by_name("hbm3e-like") is HBM3E_LIKE
+    assert hbmco_by_name("hbmco-768MB") is CANDIDATE_CO
+    c = hbmco_by_name("co-r1c1b1m24")
+    assert (c.ranks, c.channels_per_layer, c.banks_per_group,
+            c.bank_mb) == (1, 1, 1, 24.0)
+    # the paper's candidate knobs reproduce the candidate device numbers
+    assert c.capacity_mb == CANDIDATE_CO.capacity_mb
+    assert c.bandwidth_gbs == CANDIDATE_CO.bandwidth_gbs
+    with pytest.raises(ValueError):
+        hbmco_by_name("hbm9-unobtainium")
+
+
+def test_resolve_budget_arithmetic(small):
+    _, model, params = small
+    spec = DeploymentSpec(sku="rpu-cu", hbmco="hbmco-768MB",
+                          weight_format="mxfp4", cache_dtype=jnp.float32,
+                          max_len=64, page_size=8, max_slots=4)
+    dep = spec.resolve(model, params=params)
+    # the budget split covers the device capacity
+    assert dep.weight_bytes_per_device + dep.workspace_bytes \
+        + dep.kv_budget_bytes == pytest.approx(dep.device.capacity_bytes)
+    # the pool fits inside the KV budget and backs >= one full request
+    assert dep.pool_bytes_per_device <= dep.kv_budget_bytes
+    assert dep.num_pages - 1 >= -(-dep.max_len // dep.page_size)
+    assert 1 <= dep.num_slots <= 4
+    assert dep.max_decode_slots >= dep.num_slots
+    assert dep.tokens_per_s_ceiling > 0
+    # mxfp4 weight budget matches the format's bits/element exactly
+    n_weights = sum(leaf.size for leaf in jax.tree.leaves(params))
+    assert dep.weight_bytes_per_device == pytest.approx(
+        n_weights * formats.bits_per_element("mxfp4") / 8.0)
+    d = dep.as_dict()
+    assert d["num_pages"] == dep.num_pages
+    assert "roofline" in dep.describe()
+
+
+def test_weight_format_shrinks_weight_budget(small):
+    _, model, params = small
+    base = dict(sku="rpu-cu", hbmco="hbmco-768MB", cache_dtype=jnp.float32,
+                max_len=64, page_size=8)
+    quant = DeploymentSpec(weight_format="mxfp4", **base).resolve(
+        model, params=params)
+    native = DeploymentSpec(**base).resolve(model, params=params)
+    assert quant.weight_bytes_per_device < native.weight_bytes_per_device
+    assert quant.kv_budget_bytes > native.kv_budget_bytes
+
+
+def test_too_small_sku_raises(small):
+    _, model, params = small
+    tiny = HBMCOConfig(name="co-tiny", ranks=1, channels_per_layer=1,
+                       banks_per_group=1, bank_mb=0.001)     # 32 KB stack
+    spec = DeploymentSpec(sku="rpu-cu", hbmco=tiny, stacks_per_device=1,
+                          cache_dtype=jnp.float32, max_len=64)
+    with pytest.raises(DeploymentError, match="cannot back one"):
+        spec.resolve(model, params=params)
+
+
+def test_gpu_sku_derates_decode_bandwidth(small):
+    _, model, params = small
+    dep = DeploymentSpec(sku="h100", max_len=64).resolve(model,
+                                                         params=params)
+    from repro.core import hardware
+    assert dep.device.decode_bw == pytest.approx(
+        hardware.H100.hbm_bw * hardware.H100.decode_bw_utilization)
+    assert dep.device.capacity_bytes == hardware.H100.hbm_capacity
+
+
+def test_unknown_sku_and_format_raise():
+    with pytest.raises(ValueError, match="weight_format"):
+        DeploymentSpec(weight_format="int3")
+    with pytest.raises(ValueError, match="unknown sku"):
+        DeploymentSpec(sku="b200").device_budget()
+
+
+# ---------------------------------------------------------------------------
+# Spec-driven engines
+# ---------------------------------------------------------------------------
+
+
+def _reqs(prompts, sps, n=6, budget=8):
+    return [Request(rid=i, prompt=prompts[i], max_new_tokens=budget,
+                    sampling=sps[i], arrival_time=0.01 * i)
+            for i in range(n)]
+
+
+MIX = [SamplingParams() if i % 2 == 0 else
+       SamplingParams(temperature=0.9, top_k=8, top_p=0.95, seed=100 + i)
+       for i in range(6)]
+
+SPEC = DeploymentSpec(sku="rpu-cu", hbmco="hbmco-768MB",
+                      weight_format="mxfp4", cache_dtype=jnp.float32,
+                      max_len=21, page_size=4, prefill_chunk=5,
+                      max_slots=3)
+
+
+@pytest.fixture(scope="module")
+def manual_run(small, prompts):
+    """Hand-tuned reference engine matching SPEC's derived geometry,
+    driven incrementally so peak concurrency is observable.  Shared by
+    the equality / storm / admission-hint tests (one compile)."""
+    _, model, params = small
+    dep = SPEC.resolve(model, params=params)
+    eng = ContinuousServeEngine(
+        model, params, num_slots=dep.num_slots, page_size=4,
+        num_pages=dep.num_pages, max_len=21, prefill_chunk=5,
+        cache_dtype=jnp.float32)
+    for r in _reqs(prompts, MIX):
+        eng.add_request(r)
+    peak = 0
+    while eng.has_unfinished():
+        eng.step()
+        peak = max(peak, len(eng._sched.running))
+    toks = [list(r.tokens[:8]) for r in eng._requests]
+    return dep, peak, toks
+
+
+def test_llm_engine_spec_path_matches_manual(small, prompts, manual_run):
+    """``LLMEngine(spec=...)`` serves with derived pool/slots — no manual
+    pool knob — and emits the same tokens as the hand-tuned engine."""
+    _, model, params = small
+    dep, _, ref_toks = manual_run
+    llm = LLMEngine(model, params, backend="continuous", spec=SPEC)
+    assert llm.deployment is not None
+    eng = llm._eng
+    assert eng.num_slots == dep.num_slots == llm.deployment.num_slots
+    assert eng.num_pages == dep.num_pages
+    outs = llm.generate(list(prompts), MIX, max_new_tokens=8)
+    assert [o.token_ids for o in outs] == ref_toks
+
+
+def test_static_backend_takes_spec(small):
+    """The static backend resolves max_len / cache_dtype from the spec
+    (no mesh; construction compiles nothing)."""
+    _, model, params = small
+    spec = DeploymentSpec(sku="tpu-v5e", max_len=21,
+                          cache_dtype=jnp.float32)
+    llm = LLMEngine(model, params, backend="static", spec=spec)
+    assert llm.max_len == 21 and llm.deployment is not None
+    assert llm._eng.cache_dtype == jnp.float32
+    assert llm._eng.deployment.device.name == "tpu_v5e"
+
+
+def test_engine_without_spec_requires_knobs(small):
+    _, model, params = small
+    with pytest.raises(ValueError, match="DeploymentSpec"):
+        ContinuousServeEngine(model, params, num_slots=2)
+
+
+def test_capacity_pressure_storm_byte_identical_with_invariants(
+        small, prompts, manual_run):
+    """Satellite: a deliberately tiny spec-derived pool must survive a
+    preemption storm with byte-identical outputs and clean allocator
+    ref-count invariants after every engine iteration."""
+    _, model, params = small
+    _, _, ref_toks = manual_run
+    from repro.parallel.plan import paged_kv_token_bytes
+    page_bytes = paged_kv_token_bytes(model, dtype_bytes=4) * 4
+    weight_bytes = sum(l.size for l in jax.tree.leaves(params)) \
+        * formats.bits_per_element("mxfp4") / 8.0
+    # capacity = weights + ~7 pages: far less than 3 slots x 6 blocks
+    cap = weight_bytes + 7.6 * page_bytes
+    hbm = HBMCOConfig(name="co-storm", ranks=1, channels_per_layer=1,
+                      banks_per_group=1, bank_mb=cap / (32 * 2 ** 20))
+    spec = DeploymentSpec(sku="rpu-cu", hbmco=hbm, stacks_per_device=1,
+                          weight_format="mxfp4", cache_dtype=jnp.float32,
+                          max_len=21, page_size=4, prefill_chunk=5,
+                          max_slots=3, overcommit=4.0, mean_context=1,
+                          workspace_fraction=0.0)
+    eng = ContinuousServeEngine(model, params, spec=spec)
+    assert eng.num_pages <= 9, "pool should be under pressure"
+    assert eng.num_slots == 3
+    for r in _reqs(prompts, MIX):
+        eng.add_request(r)
+    while eng.has_unfinished():
+        eng.step()
+        eng.cache.allocator.check()       # rc/conservation every iteration
+    assert sum(r.preemptions for r in eng._requests) > 0, \
+        "no preemption pressure exercised"
+    # all request-held pages are back; only the prefix index may hold refs
+    alloc = eng.cache.allocator
+    for p in list(alloc._rc):
+        assert alloc.refcount(p) == 1      # index refs only
+    # byte-identical to the roomy reference (restarts are invisible)
+    assert [list(r.tokens[:8]) for r in eng._requests] == ref_toks
+
+
+def test_admission_hint_caps_concurrent_decoding(small, prompts, manual_run):
+    """The bandwidth-model hint admits at most ``max_decode_slots``
+    concurrent requests even when more slots exist, without changing any
+    output stream."""
+    _, model, params = small
+    dep, ref_peak, ref_toks = manual_run
+    assert ref_peak > 2                   # the uncapped engine went wider
+    eng = ContinuousServeEngine(
+        model, params, num_slots=dep.num_slots, page_size=4,
+        num_pages=dep.num_pages, max_len=21, prefill_chunk=5,
+        cache_dtype=jnp.float32, max_decode_slots=2)
+    for r in _reqs(prompts, MIX):
+        eng.add_request(r)
+    peak = 0
+    while eng.has_unfinished():
+        eng.step()
+        peak = max(peak, len(eng._sched.running))
+    assert peak <= 2
+    assert [list(r.tokens[:8]) for r in eng._requests] == ref_toks

@@ -187,6 +187,60 @@ def test_sharded_paged_continuous_decode_matches_single_device():
     assert "ok" in out
 
 
+def test_kv_head_replicated_paged_decode_matches_single_device():
+    """KV-head replication (n_kv_heads < TP): a 2-KV-head model served on
+    a 4-way model axis — each shard holds 2 q heads and ONE replicated KV
+    head — stays byte-identical to the single-device engine, and the
+    per-device KV bytes/token bottom out at one head (full/kvh) instead
+    of shrinking 1/TP."""
+    out = _run("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import dataclasses
+        import jax, numpy as np
+        from repro.configs import get_config, reduced_config
+        from repro.models.model import build_model
+        from repro.runtime.engine import ContinuousServeEngine
+        from repro.runtime.sampling import SamplingParams
+        from repro.runtime.scheduler import Request
+
+        cfg = dataclasses.replace(reduced_config(get_config("qwen3-14b")),
+                                  n_heads=8, n_kv_heads=2)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        prompts = np.asarray(jax.random.randint(jax.random.PRNGKey(1),
+                                                (4, 12), 0, cfg.vocab_size))
+        SP = [SamplingParams() if i % 2 == 0 else
+              SamplingParams(temperature=0.9, top_k=8, top_p=0.95,
+                             seed=100 + i) for i in range(4)]
+        mk = lambda: [Request(rid=i, prompt=prompts[i], max_new_tokens=8,
+                              sampling=SP[i]) for i in range(4)]
+
+        def engine(mesh=None):
+            return ContinuousServeEngine(
+                model, params, num_slots=3, page_size=4, num_pages=64,
+                max_len=21, prefill_chunk=5, mesh=mesh)
+
+        ref = engine().run(mk())
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        seng = engine(mesh)
+        assert seng.serve_plan.kv_repl == 2, seng.serve_plan
+        got = seng.run(mk())
+        for i in range(4):
+            np.testing.assert_array_equal(ref.results[i], got.results[i])
+        assert seng._step_fn._cache_size() == 1
+        # pools widened to 4 KV heads, sharded 4-way -> 1 head per shard
+        leaf = jax.tree.leaves(seng._pools)[0]
+        assert leaf.shape[-2] == 4, leaf.shape
+        assert leaf.addressable_shards[0].data.shape[-2] == 1, leaf.sharding
+        # accounting: per-device bytes = full / kvh (one head), NOT full/tp
+        full = engine().kv_token_bytes_per_device()
+        assert seng.kv_token_bytes_per_device() == full // 2
+        print("ok", ref.results[1].tolist())
+    """)
+    assert "ok" in out
+
+
 def test_elastic_checkpoint_restore_across_meshes():
     """Checkpoint written from a (2,4) mesh restores onto a (4,2) mesh
     (elastic re-shard on restart) and training continues."""

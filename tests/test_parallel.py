@@ -206,6 +206,47 @@ def test_paged_serve_plan_specs_and_local_config():
     assert plan.psum_bytes_per_step(model, num_slots=8) > 0
 
 
+def test_paged_serve_plan_kv_head_replication():
+    """llama3-style kvh < TP: the plan replicates each KV head on tp/kvh
+    shards instead of raising — local model runs 1 KV head/shard, the
+    pools widen to tp heads, and capacity accounting counts replicas."""
+    from repro.parallel.plan import make_paged_serve_plan, \
+        paged_kv_token_bytes
+    import dataclasses
+    cfg = dataclasses.replace(reduced_config(get_config("qwen3-14b")),
+                              n_heads=8, n_kv_heads=2)
+    model = build_model(cfg)
+    mesh = _fake_mesh((1, 8), ("data", "model"))
+    plan = make_paged_serve_plan(cfg, mesh, reduce="gather")
+    assert plan.kv_repl == 4
+    lc = plan.local_config(cfg)
+    assert (lc.n_heads, lc.n_kv_heads) == (1, 1)
+    pc = plan.pool_config(cfg)
+    assert pc.n_kv_heads == 8                    # widened to tp heads
+    # wk/wv columns repeat per head group; wq untouched
+    params = model.init(jax.random.PRNGKey(0))
+    prep = plan.prepare_params(params, cfg)
+    wk = params["stacks"][0][0]["attn"]["wk"]
+    wkp = prep["stacks"][0][0]["attn"]["wk"]
+    assert wkp.shape[-1] == wk.shape[-1] * 4
+    hd = cfg.hd
+    w = np.asarray(wk).reshape(*wk.shape[:-1], 2, hd)
+    wp = np.asarray(wkp).reshape(*wk.shape[:-1], 8, hd)
+    for g in range(8):
+        np.testing.assert_array_equal(wp[..., g, :], w[..., g // 4, :])
+    np.testing.assert_array_equal(np.asarray(prep["stacks"][0][0]["attn"]
+                                             ["wq"]),
+                                  np.asarray(params["stacks"][0][0]["attn"]
+                                             ["wq"]))
+    # per-device KV bytes bottom out at ONE head (kvh/tp * kv_repl)
+    full = paged_kv_token_bytes(model, tp=1)
+    assert paged_kv_token_bytes(model, tp=8, kv_repl=4) == full // 2
+    # still an error when kvh neither divides nor is divided by tp
+    bad = dataclasses.replace(cfg, n_kv_heads=3)
+    with pytest.raises(ValueError, match="n_kv_heads"):
+        make_paged_serve_plan(bad, mesh)
+
+
 def test_paged_serve_plan_mla_pools_replicated():
     from repro.parallel.plan import make_paged_serve_plan
     cfg = reduced_config(get_config("deepseek-v2-lite-16b"))
@@ -226,10 +267,15 @@ def test_paged_serve_plan_mla_pools_replicated():
 
 def test_paged_serve_plan_validation():
     from repro.parallel.plan import make_paged_serve_plan
+    import dataclasses
     mesh = _fake_mesh((2, 4), ("data", "model"))
-    cfg = reduced_config(get_config("qwen3-14b"))   # kvh=2: 4-way TP fails
+    cfg = reduced_config(get_config("qwen3-14b"))
+    # kvh=2 on 4-way TP replicates KV heads (no longer an error)
+    assert make_paged_serve_plan(cfg, mesh).kv_repl == 2
+    # kvh that neither divides nor divides into TP still fails
+    bad = dataclasses.replace(cfg, n_heads=12, n_kv_heads=3)
     with pytest.raises(ValueError, match="n_kv_heads"):
-        make_paged_serve_plan(cfg, mesh)
+        make_paged_serve_plan(bad, mesh)
     with pytest.raises(NotImplementedError, match="SSM"):
         make_paged_serve_plan(reduced_config(get_config("mamba2-370m")), mesh)
     with pytest.raises(ValueError, match="axis"):
