@@ -256,11 +256,16 @@ def run_shared_prefix(model, params, batch: int, n_req: int,
 # interface (1 rank x 4 layers x 1 ch x 1 bank) at sub-array counts chosen
 # so the derived KV budget crosses from cannot-fit-one-request, through
 # preemption-storm, to knee-limited roomy (capacity = 32 x bank_mb MB).
-SWEEP_BANK_MBS = (0.15, 0.22, 0.25, 0.3, 0.5, 1.0)
+# 0.37 (11.8MB) is the quantized-KV crossover: after the ~10.9MB exact
+# mxfp4 weight bytes + workspace, the remainder backs one request's pages
+# at fp8/int8 KV but not at f32 — the point the quant sweep serves and
+# the f32 sweep reports "does not fit".
+SWEEP_BANK_MBS = (0.15, 0.22, 0.25, 0.3, 0.37, 0.5, 1.0)
 
 
 def run_capacity_sweep(model, params, n_req: int, seed: int,
-                       bank_mbs=SWEEP_BANK_MBS) -> list[Row]:
+                       bank_mbs=SWEEP_BANK_MBS,
+                       cache_dtype=jnp.float32) -> list[Row]:
     """Serve the SAME greedy trace under DeploymentSpecs of growing HBM-CO
     capacity; report measured tokens/s and preemption rate against the
     spec's modeled roofline ceiling.
@@ -270,6 +275,11 @@ def run_capacity_sweep(model, params, n_req: int, seed: int,
     derived pool grows monotonically with capacity.  Measured-vs-modeled
     is reported, not asserted — the model is the target hardware's memory
     roofline, the measurement is XLA:CPU.
+
+    ``cache_dtype="fp8"`` / ``"int8"`` reruns the sweep with quantized KV
+    page pools (weights execute mxfp4 either way): the derived pool gets
+    ~4x the pages per MB, so stacks that "do not fit" under f32 KV serve
+    the trace — the capacity knee of the sweep moves left.
     """
     from repro.core.hbmco import HBMCOConfig
     from repro.runtime.deployment import DeploymentError, DeploymentSpec
@@ -277,6 +287,10 @@ def run_capacity_sweep(model, params, n_req: int, seed: int,
     max_len = PROMPT_LEN + MAX_NEW
     _, new_tokens, prompts = make_trace(n_req, seed, 0.0)  # all arrive at t0
     sps = [SamplingParams(max_tokens=int(t)) for t in new_tokens]
+    tag = cache_dtype if isinstance(cache_dtype, str) \
+        else jnp.dtype(cache_dtype).name
+    group = f"ours:capacity[{tag}]" if isinstance(cache_dtype, str) \
+        else "ours:capacity"
 
     rows: list[Row] = []
     ref_results = None
@@ -287,14 +301,14 @@ def run_capacity_sweep(model, params, n_req: int, seed: int,
                           bank_mb=mb)
         spec = DeploymentSpec(
             sku="rpu-cu", hbmco=hbm, stacks_per_device=1,
-            weight_format="mxfp4", cache_dtype=jnp.float32,
+            weight_format="mxfp4", cache_dtype=cache_dtype,
             max_len=max_len, page_size=PAGE, prefill_chunk=PROMPT_LEN,
             max_slots=8, overcommit=2.0,
             mean_context=PROMPT_LEN + MAX_NEW // 2)
         try:
             llm = LLMEngine(model, params, backend="continuous", spec=spec)
         except DeploymentError as e:
-            rows.append(Row("ours:capacity",
+            rows.append(Row(group,
                             f"{hbm.capacity_mb:.1f}MB stack measured tok/s",
                             0.0, None, "", f"does not fit: {e}"))
             continue
@@ -323,19 +337,20 @@ def run_capacity_sweep(model, params, n_req: int, seed: int,
         preempt_rate = stats.preemptions / n_req
         cap = f"{hbm.capacity_mb:.1f}MB stack"
         rows.append(Row(
-            "ours:capacity", f"{cap} measured tok/s", measured, None, "",
+            group, f"{cap} measured tok/s", measured, None, "",
             f"{dep.num_pages} pages / {dep.num_slots} slots, "
-            f"occupancy {stats.occupancy:.2f}"))
+            f"occupancy {stats.occupancy:.2f}, "
+            f"{dep.kv_token_bytes}B KV/token ({tag})"))
         rows.append(Row(
-            "ours:capacity", f"{cap} modeled ceiling",
+            group, f"{cap} modeled ceiling",
             dep.tokens_per_s_ceiling, None, "tok/s",
             f"memory roofline at {dep.device.decode_bw / 1e9:.0f}GB/s "
             f"(target hardware, not the CPU host)"))
         rows.append(Row(
-            "ours:capacity", f"{cap} preemptions/request", preempt_rate,
+            group, f"{cap} preemptions/request", preempt_rate,
             None, "", f"{stats.preemptions} total over {n_req} requests"))
         rows.append(Row(
-            "ours:capacity", f"{cap} KV budget",
+            group, f"{cap} KV budget",
             dep.kv_budget_bytes / 2**20, None, "MB",
             f"of {hbm.capacity_mb:.0f}MB after "
             f"{dep.weight_bytes_per_device / 2**20:.1f}MB mxfp4 weights + "
@@ -505,6 +520,11 @@ def main(argv=None) -> int:
                          "of growing capacity (paper Fig 9/10 axis); "
                          "measured tokens/s + preemption rate vs the "
                          "modeled roofline ceiling, JSON artifact")
+    ap.add_argument("--cache-dtype", default="f32",
+                    choices=["f32", "fp8", "int8"],
+                    help="KV pool dtype for --capacity-sweep; fp8/int8 "
+                         "serve quantized page pools (mxfp4 weights either "
+                         "way) and dump to capacity_sweep_quant")
     args = ap.parse_args(argv)
     if args.mesh:
         rows = run_mesh_sweep(args.requests, args.batch, args.seed)
@@ -517,10 +537,14 @@ def main(argv=None) -> int:
         params = jax.tree.map(
             lambda a: a.astype(jnp.float32) if a.dtype == jnp.bfloat16 else a,
             model.init(jax.random.PRNGKey(args.seed)))
-        rows = run_capacity_sweep(model, params, args.requests, args.seed)
+        cache_dtype = jnp.float32 if args.cache_dtype == "f32" \
+            else args.cache_dtype
+        rows = run_capacity_sweep(model, params, args.requests, args.seed,
+                                  cache_dtype=cache_dtype)
         for r in rows:
             print(r.render())
-        dump(rows, "capacity_sweep")
+        dump(rows, "capacity_sweep" if args.cache_dtype == "f32"
+             else "capacity_sweep_quant")
         return 0
     model = build_model(BENCH_CONFIG)
     params = model.init(jax.random.PRNGKey(args.seed))

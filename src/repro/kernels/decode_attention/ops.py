@@ -23,6 +23,7 @@ def gqa_decode_attention(q, k_cache, v_cache, cur_len, *, block_s: int = 512):
 
 
 def paged_gqa_decode_attention(q, k_pages, v_pages, page_table, pos, *,
+                               k_scales=None, v_scales=None,
                                window=None, impl: str = "auto"):
     """Paged single-token decode attention behind one of two impls:
 
@@ -42,9 +43,11 @@ def paged_gqa_decode_attention(q, k_pages, v_pages, page_table, pos, *,
         impl = "reference" if on_cpu() else "fused"
     if impl == "reference":
         return paged_decode_attention_ref(q, k_pages, v_pages, page_table,
-                                          pos, window=window)
+                                          pos, k_scales=k_scales,
+                                          v_scales=v_scales, window=window)
     if impl != "fused":
         raise ValueError(f"impl={impl!r} (want 'auto', 'fused' or 'reference')")
     return paged_decode_attention(q, k_pages, v_pages, page_table,
-                                  pos.astype(jnp.int32), window=window,
+                                  pos.astype(jnp.int32), k_scales=k_scales,
+                                  v_scales=v_scales, window=window,
                                   interpret=on_cpu())

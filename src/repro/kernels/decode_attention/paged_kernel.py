@@ -70,9 +70,13 @@ def _page_live(j, pos, page: int, window):
     return live
 
 
-def _online_kernel(pt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
-                   m_ref, l_ref, acc_ref, *,
-                   page: int, n_blocks: int, scale: float, window):
+def _online_kernel(pt_ref, pos_ref, q_ref, k_ref, v_ref, *rest,
+                   page: int, n_blocks: int, scale: float, window,
+                   quantized: bool = False):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
     b, j = pl.program_id(0), pl.program_id(2)
     pos = pos_ref[b]
 
@@ -87,6 +91,11 @@ def _online_kernel(pt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
         q = q_ref[0, 0].astype(jnp.float32)              # (rep, D)
         k = k_ref[0, :, 0].astype(jnp.float32)           # (page, D)
         v = v_ref[0, :, 0].astype(jnp.float32)           # (page, Dv)
+        if quantized:
+            # dequant fused into the page-streaming loop: one per-token
+            # f32 scale per KV head (same elementwise op as the oracle)
+            k = k * ks_ref[0, :, 0][:, None]
+            v = v * vs_ref[0, :, 0][:, None]
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
         s = jnp.where(_page_mask(j, pos, page, window), s, NEG_INF)
         m_prev = m_ref[...]
@@ -104,21 +113,30 @@ def _online_kernel(pt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
                        ).astype(o_ref.dtype)
 
 
-def _exact_kernel(pt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
-                  s_ref, vs_ref, *,
-                  page: int, n_blocks: int, scale: float, window):
+def _exact_kernel(pt_ref, pos_ref, q_ref, k_ref, v_ref, *rest,
+                  page: int, n_blocks: int, scale: float, window,
+                  quantized: bool = False):
     """Stage scores and V position-ordered; softmax + contraction once at the
     end — the same op sequence as the gather-then-dense oracle, so the
-    output is bit-identical to ``paged_decode_attention_ref``."""
+    output is bit-identical to ``paged_decode_attention_ref`` (including
+    the quantized path: dequant is the same f32 cast + multiply)."""
+    if quantized:
+        ksc_ref, vsc_ref, o_ref, s_ref, vs_ref = rest
+    else:
+        o_ref, s_ref, vs_ref = rest
     b, j = pl.program_id(0), pl.program_id(2)
     pos = pos_ref[b]
 
     q = q_ref[0, 0].astype(jnp.float32)                  # (rep, D)
     k = k_ref[0, :, 0].astype(jnp.float32)               # (page, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)               # (page, Dv)
+    if quantized:
+        k = k * ksc_ref[0, :, 0][:, None]
+        v = v * vsc_ref[0, :, 0][:, None]
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
     s = jnp.where(_page_mask(j, pos, page, window), s, NEG_INF)
     s_ref[:, pl.ds(j * page, page)] = s
-    vs_ref[pl.ds(j * page, page), :] = v_ref[0, :, 0].astype(jnp.float32)
+    vs_ref[pl.ds(j * page, page), :] = v
 
     @pl.when(j == n_blocks - 1)
     def _finalize():
@@ -136,15 +154,24 @@ def paged_decode_attention(
     page_table: jnp.ndarray,   # (B, n_blocks) int32 logical block -> page
     pos: jnp.ndarray,          # (B,) int32 per-slot position of the new token
     *,
+    k_scales: jnp.ndarray | None = None,   # (P, page, KVH) f32 (fp8/int8 pools)
+    v_scales: jnp.ndarray | None = None,
     window: int | None = None,
     accum: str = "online",
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """Single-token paged GQA decode attention; returns (B, H, D) in q.dtype."""
+    """Single-token paged GQA decode attention; returns (B, H, D) in q.dtype.
+
+    With ``k_scales``/``v_scales`` the pools hold quantized codes (fp8
+    e4m3 or int8) and dequantization fuses into the page-streaming loop:
+    each page's codes are cast to f32 and multiplied by its per-token
+    scales right after the DMA, before the flash-decode fold."""
     b, h, d = q.shape
     _, page, kvh, dv = v_pages.shape
     n_blocks = page_table.shape[1]
     assert h % kvh == 0, (h, kvh)
+    quantized = k_scales is not None
+    assert (v_scales is not None) == quantized, "pass both scales or neither"
     rep = h // kvh
     scale = 1.0 / math.sqrt(d)
 
@@ -165,26 +192,33 @@ def paged_decode_attention(
     else:
         raise ValueError(f"accum={accum!r} (want 'online' or 'exact')")
 
+    page_spec = lambda bb, g, j, pt, ps: (pt[bb, j], 0, g, 0)
+    in_specs = [
+        pl.BlockSpec((1, 1, rep, d), lambda bb, g, j, pt, ps: (bb, g, 0, 0)),
+        pl.BlockSpec((1, page, 1, d), page_spec),
+        pl.BlockSpec((1, page, 1, dv), page_spec),
+    ]
+    inputs = [qg, k_pages, v_pages]
+    if quantized:
+        # scale pages ride the same page-table-driven index map
+        scale_spec = lambda bb, g, j, pt, ps: (pt[bb, j], 0, g)
+        in_specs += [pl.BlockSpec((1, page, 1), scale_spec),
+                     pl.BlockSpec((1, page, 1), scale_spec)]
+        inputs += [k_scales, v_scales]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                           # page_table, pos
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, rep, d), lambda bb, g, j, pt, ps: (bb, g, 0, 0)),
-            pl.BlockSpec((1, page, 1, d),
-                         lambda bb, g, j, pt, ps: (pt[bb, j], 0, g, 0)),
-            pl.BlockSpec((1, page, 1, dv),
-                         lambda bb, g, j, pt, ps: (pt[bb, j], 0, g, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, rep, dv),
                                lambda bb, g, j, pt, ps: (bb, g, 0, 0)),
         scratch_shapes=scratch,
     )
     out = pl.pallas_call(
         functools.partial(kernel, page=page, n_blocks=n_blocks, scale=scale,
-                          window=window),
+                          window=window, quantized=quantized),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, kvh, rep, dv), q.dtype),
         interpret=interpret,
-    )(page_table.astype(jnp.int32), pos.astype(jnp.int32),
-      qg, k_pages, v_pages)
+    )(page_table.astype(jnp.int32), pos.astype(jnp.int32), *inputs)
     return out.reshape(b, h, dv)

@@ -29,6 +29,7 @@ def paged_valid_mask(page_table: jnp.ndarray, page_size: int,
 
 
 def paged_decode_attention_ref(q, k_pages, v_pages, page_table, pos, *,
+                               k_scales=None, v_scales=None,
                                window=None, scale=None):
     """Paged single-token decode attention oracle.
 
@@ -37,11 +38,18 @@ def paged_decode_attention_ref(q, k_pages, v_pages, page_table, pos, *,
     v_pages:    (P, page, KVH, Dv)
     page_table: (B, n_blocks) int32 — logical block -> physical page
     pos:        (B,) int32 — per-slot position of the new token
+    k_scales/v_scales: (P, page, KVH) f32 per-token dequant scales for
+                fp8/int8 code pools (None = dense pools)
 
     Gathers pages into a position-ordered dense view and reuses the dense
-    oracle, so paged-vs-dense equivalence is exact by construction.
+    oracle, so paged-vs-dense equivalence is exact by construction.  The
+    dequant (f32 cast then one multiply per element) mirrors the fused
+    kernel's in-loop dequant op-for-op, keeping the bit-exact contract.
     """
     k = gather_pages(k_pages, page_table)
     v = gather_pages(v_pages, page_table)
+    if k_scales is not None:
+        k = k.astype(jnp.float32) * gather_pages(k_scales, page_table)[..., None]
+        v = v.astype(jnp.float32) * gather_pages(v_scales, page_table)[..., None]
     valid = paged_valid_mask(page_table, k_pages.shape[1], pos, window=window)
     return decode_attention_ref(q, k, v, None, valid=valid, scale=scale)

@@ -47,7 +47,10 @@ from repro.runtime.deployment import DeploymentSpec
 from repro.runtime.llm import LLMEngine
 from repro.runtime.sampling import SamplingParams
 
-CACHE_DTYPES = {"bf16": jnp.bfloat16, "f16": jnp.float16, "f32": jnp.float32}
+# "fp8" / "int8" are the quantized page pools from repro.quant.kv: codes in
+# the narrow dtype + per-token-per-KV-head f32 scales riding in the pool.
+CACHE_DTYPES = {"bf16": jnp.bfloat16, "f16": jnp.float16, "f32": jnp.float32,
+                "fp8": "fp8", "int8": "int8"}
 
 
 def parse_mix(spec: str, base: SamplingParams) -> list[SamplingParams]:
@@ -138,7 +141,9 @@ def main(argv=None) -> int:
                          "budget (the RPU streams compressed weights, §V)")
     ap.add_argument("--cache-dtype", default=None,
                     choices=sorted(CACHE_DTYPES),
-                    help="KV page-pool dtype (default: engine default)")
+                    help="KV page-pool dtype (default: engine default); "
+                         "fp8/int8 store quantized codes + per-token scales "
+                         "in the pool (continuous backend only)")
     ap.add_argument("--max-slots", type=int, default=32,
                     help="cap on the spec-derived decode slot count")
     ap.add_argument("--seed", type=int, default=0,

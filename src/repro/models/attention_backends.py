@@ -35,6 +35,7 @@ from repro.models import layers
 from repro.models.common import NEG_INF, ModelConfig, blocked_attention
 from repro.kernels.decode_attention.ref import gather_pages, paged_valid_mask
 from repro.parallel.hints import tp_row_dot
+from repro.quant import kv as kvq
 
 
 # ---------------------------------------------------------------------------
@@ -150,9 +151,48 @@ def init_attn_page_pool(cfg: ModelConfig, num_pages: int, page_size: int,
     """Physical K/V page pool for one layer: ``(P, page, KVH, HD)``.
 
     ``dtype``: bf16 on TPU; CPU serving wants f32 (XLA:CPU re-converts
-    bf16 pools to f32 around every gather, doubling the step time)."""
+    bf16 pools to f32 around every gather, doubling the step time).  The
+    string dtypes ``"fp8"`` / ``"int8"`` build quantized pools: narrow
+    code leaves plus per-token f32 ``k_scale``/``v_scale`` metadata leaves
+    of shape ``(P, page, KVH)`` (see ``quant.kv``)."""
     shape = (num_pages, page_size, cfg.n_kv_heads, cfg.hd)
+    if kvq.is_quantized_cache_dtype(dtype):
+        store = kvq.cache_storage_dtype(dtype)
+        return {"k": jnp.zeros(shape, store), "v": jnp.zeros(shape, store),
+                "k_scale": jnp.ones(shape[:3], kvq.SCALE_DTYPE),
+                "v_scale": jnp.ones(shape[:3], kvq.SCALE_DTYPE)}
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _scatter_kv_token(pool: dict, k, v, page_table, pos) -> dict:
+    """Scatter one token's k/v per slot, quantizing on write for fp8/int8
+    pools (scale = amax of the token's head vector, fixed at write time)."""
+    fmt = kvq.pool_cache_format(pool)
+    if fmt is None:
+        return {"k": scatter_token(pool["k"], k, page_table, pos),
+                "v": scatter_token(pool["v"], v, page_table, pos)}
+    kc, ks = kvq.kv_quantize(k, fmt)
+    vc, vs = kvq.kv_quantize(v, fmt)
+    return {"k": scatter_token(pool["k"], kc, page_table, pos),
+            "v": scatter_token(pool["v"], vc, page_table, pos),
+            "k_scale": scatter_token(pool["k_scale"], ks, page_table, pos),
+            "v_scale": scatter_token(pool["v_scale"], vs, page_table, pos)}
+
+
+def _scatter_kv_chunk(pool: dict, k, v, page_table, positions, ok) -> dict:
+    """Chunk analogue of ``_scatter_kv_token`` (k/v: (B, C, KVH, HD))."""
+    fmt = kvq.pool_cache_format(pool)
+    if fmt is None:
+        return {"k": scatter_chunk(pool["k"], k, page_table, positions, ok),
+                "v": scatter_chunk(pool["v"], v, page_table, positions, ok)}
+    kc, ks = kvq.kv_quantize(k, fmt)
+    vc, vs = kvq.kv_quantize(v, fmt)
+    return {"k": scatter_chunk(pool["k"], kc, page_table, positions, ok),
+            "v": scatter_chunk(pool["v"], vc, page_table, positions, ok),
+            "k_scale": scatter_chunk(pool["k_scale"], ks, page_table,
+                                     positions, ok),
+            "v_scale": scatter_chunk(pool["v_scale"], vs, page_table,
+                                     positions, ok)}
 
 
 def attn_decode_paged(p: dict, x: jnp.ndarray, cfg: ModelConfig, pool: dict,
@@ -165,18 +205,21 @@ def attn_decode_paged(p: dict, x: jnp.ndarray, cfg: ModelConfig, pool: dict,
     page before the attention, mirroring the dense write-then-attend order;
     the attention itself streams pages through the gather-fused kernel
     (``impl="auto"``: oracle on CPU, fused Pallas kernel on accelerators).
+    Quantized (fp8/int8) pools scatter codes + per-token scales and pass
+    the scale pages into the kernel's fused in-loop dequant.
     """
     b, _ = x.shape
     h, hd = cfg.n_heads, cfg.hd
     positions = pos[:, None]                              # (B, 1) ragged RoPE
     q, k, v = layers._qkv(p, x[:, None, :], cfg, positions)
-    new_k = scatter_token(pool["k"], k[:, 0], page_table, pos)
-    new_v = scatter_token(pool["v"], v[:, 0], page_table, pos)
+    new_pool = _scatter_kv_token(pool, k[:, 0], v[:, 0], page_table, pos)
     from repro.kernels.decode_attention.ops import paged_gqa_decode_attention
-    out = paged_gqa_decode_attention(q[:, 0], new_k, new_v, page_table, pos,
-                                     window=window)
+    out = paged_gqa_decode_attention(
+        q[:, 0], new_pool["k"], new_pool["v"], page_table, pos,
+        k_scales=new_pool.get("k_scale"), v_scales=new_pool.get("v_scale"),
+        window=window)
     out = tp_row_dot(out.reshape(b, h * hd), p["wo"])
-    return out, {"k": new_k, "v": new_v}
+    return out, new_pool
 
 
 def attn_prefill_chunk_paged(p: dict, x: jnp.ndarray, cfg: ModelConfig,
@@ -196,14 +239,18 @@ def attn_prefill_chunk_paged(p: dict, x: jnp.ndarray, cfg: ModelConfig,
     positions = start[:, None] + jnp.arange(c)[None, :]
     q, k, v = layers._qkv(p, x, cfg, positions)
     ok = jnp.arange(c)[None, :] < valid[:, None]
-    new_k = scatter_chunk(pool["k"], k, page_table, positions, ok)
-    new_v = scatter_chunk(pool["v"], v, page_table, positions, ok)
-    k_d = gather_pages(new_k, page_table)
-    v_d = gather_pages(new_v, page_table)
+    new_pool = _scatter_kv_chunk(pool, k, v, page_table, positions, ok)
+    k_d = gather_pages(new_pool["k"], page_table)
+    v_d = gather_pages(new_pool["v"], page_table)
+    if "k_scale" in new_pool:   # dequantize the gathered view for the chunk
+        k_d = kvq.kv_dequantize(
+            k_d, gather_pages(new_pool["k_scale"], page_table), q.dtype)
+        v_d = kvq.kv_dequantize(
+            v_d, gather_pages(new_pool["v_scale"], page_table), q.dtype)
     out = blocked_attention(q, k_d, v_d, causal=cfg.causal, window=window,
                             q_offset=start)
     out = tp_row_dot(out.reshape(b, c, h * hd), p["wo"])
-    return out, {"k": new_k, "v": new_v}
+    return out, new_pool
 
 
 # ---------------------------------------------------------------------------
@@ -214,6 +261,10 @@ def attn_prefill_chunk_paged(p: dict, x: jnp.ndarray, cfg: ModelConfig,
 def init_mla_page_pool(cfg: ModelConfig, num_pages: int, page_size: int,
                        dtype=jnp.bfloat16) -> dict:
     """Latent page pool for one MLA layer (pages hold c_kv + shared k_rope)."""
+    if kvq.is_quantized_cache_dtype(dtype):
+        raise NotImplementedError(
+            "quantized cache_dtype (fp8/int8) is only implemented for the "
+            "GQA page pools; MLA latent pages stay dense")
     return {
         "c_kv": jnp.zeros((num_pages, page_size, cfg.kv_lora_rank), dtype),
         "k_rope": jnp.zeros((num_pages, page_size, cfg.rope_head_dim), dtype),
@@ -307,7 +358,8 @@ GQA = register_backend(AttentionBackend(
     init_page_pool=init_attn_page_pool,
     decode_paged=attn_decode_paged,
     prefill_chunk_paged=attn_prefill_chunk_paged,
-    paged_partition_spec={"k": 2, "v": 2},     # (P, page, KVH, HD): KV heads
+    # (P, page, KVH, HD) codes + (P, page, KVH) scale metadata: KV heads
+    paged_partition_spec={"k": 2, "v": 2, "k_scale": 2, "v_scale": 2},
 ))
 
 MLA = register_backend(AttentionBackend(

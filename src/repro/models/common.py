@@ -172,8 +172,9 @@ def gated_rmsnorm(x: jnp.ndarray, z: jnp.ndarray, w: jnp.ndarray,
 
 def swiglu(x: jnp.ndarray, w_gate, w_up, w_down) -> jnp.ndarray:
     from repro.parallel.hints import tp_row_dot
-    g = x @ w_gate
-    u = x @ w_up
+    from repro.quant.linear import qdot
+    g = qdot(x, w_gate)
+    u = qdot(x, w_up)
     return tp_row_dot(jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u,
                       w_down)
 

@@ -25,6 +25,7 @@ from repro.models.common import (
     dense_init, rmsnorm, split_keys, swiglu,
 )
 from repro.parallel.hints import shard_hint
+from repro.quant.linear import qdot
 
 # ---------------------------------------------------------------------------
 # GQA attention
@@ -53,9 +54,9 @@ def init_attn(key, cfg: ModelConfig) -> dict:
 def _qkv(p: dict, x: jnp.ndarray, cfg: ModelConfig, positions):
     b, s, _ = x.shape
     h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
-    q = x @ p["wq"]
-    k = x @ p["wk"]
-    v = x @ p["wv"]
+    q = qdot(x, p["wq"])
+    k = qdot(x, p["wk"])
+    v = qdot(x, p["wv"])
     if cfg.qkv_bias:
         q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
     q = q.reshape(b, s, h, hd)
@@ -80,7 +81,7 @@ def attn_forward(p: dict, x: jnp.ndarray, cfg: ModelConfig, *,
     q, k, v = _qkv(p, x, cfg, positions)
     out = blocked_attention(q, k, v, causal=cfg.causal, window=window)
     out = out.reshape(b, s, cfg.n_heads * cfg.hd)
-    return out @ p["wo"]
+    return qdot(out, p["wo"])
 
 
 def attn_prefill(p: dict, x: jnp.ndarray, cfg: ModelConfig, cache: dict, *,
@@ -90,7 +91,7 @@ def attn_prefill(p: dict, x: jnp.ndarray, cfg: ModelConfig, cache: dict, *,
     positions = jnp.arange(s)[None, :]
     q, k, v = _qkv(p, x, cfg, positions)
     out = blocked_attention(q, k, v, causal=cfg.causal, window=window)
-    out = out.reshape(b, s, cfg.n_heads * cfg.hd) @ p["wo"]
+    out = qdot(out.reshape(b, s, cfg.n_heads * cfg.hd), p["wo"])
     w = cache["k"].shape[1]
     if w >= s:
         new_k = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
@@ -129,7 +130,7 @@ def attn_decode(p: dict, x: jnp.ndarray, cfg: ModelConfig, cache: dict,
         valid = valid & (slot_pos > cur_pos - window)
     out = decode_attention_ref(
         q[:, 0], new_k, new_v, None, valid=valid[None, :].repeat(b, 0))
-    out = out.reshape(b, h * hd) @ p["wo"]
+    out = qdot(out.reshape(b, h * hd), p["wo"])
     return out, {"k": new_k, "v": new_v, "slot_pos": slot_pos}
 
 
@@ -167,7 +168,7 @@ def _mla_qc(p, x, cfg: ModelConfig, positions):
     """Shared q / latent computation.  Returns q_nope, q_rope, c_kv, k_rope."""
     b, s, _ = x.shape
     h, hd, rhd, r = cfg.n_heads, cfg.hd, cfg.rope_head_dim, cfg.kv_lora_rank
-    q = (x @ p["wq"]).reshape(b, s, h, hd + rhd)
+    q = qdot(x, p["wq"]).reshape(b, s, h, hd + rhd)
     q_nope, q_rope = q[..., :hd], q[..., hd:]
     q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
     ckr = x @ p["w_dkv"]
@@ -191,7 +192,7 @@ def mla_forward(p: dict, x: jnp.ndarray, cfg: ModelConfig, *,
                                                   (b, s, h, rhd))], axis=-1)
     scale = 1.0 / math.sqrt(hd + rhd)
     out = blocked_attention(q, k, v, causal=cfg.causal, scale=scale)
-    return out.reshape(b, s, h * vhd) @ p["wo"]
+    return qdot(out.reshape(b, s, h * vhd), p["wo"])
 
 
 def mla_prefill(p, x, cfg: ModelConfig, cache: dict):
@@ -239,7 +240,7 @@ def mla_decode(p, x, cfg: ModelConfig, cache: dict, cur_pos):
     ctx = jnp.einsum("bhs,bsr->bhr", pattn, new_c.astype(jnp.float32))  # latent ctx
     w_uv = p["w_uv"].reshape(r, h, vhd)
     out = jnp.einsum("bhr,rhv->bhv", ctx, w_uv.astype(jnp.float32))
-    out = out.reshape(b, h * vhd).astype(x.dtype) @ p["wo"]
+    out = qdot(out.reshape(b, h * vhd).astype(x.dtype), p["wo"])
     return out, {"c_kv": new_c, "k_rope": new_kr, "slot_pos": slot_pos}
 
 

@@ -215,12 +215,20 @@ def tp_row_dot(x, w):
     PARTIAL sum stays unrounded until ``tp_psum``: XLA accumulates a bf16
     dot in f32 and rounds once at the end, so rounding partials to bf16
     before the reduction would land a bf16 quantum off — the caller casts
-    back to the activation dtype AFTER the psum instead."""
+    back to the activation dtype AFTER the psum instead.
+
+    Packed (quantized) row weights route through ``quant.linear.qdot`` in
+    the unsharded / gather paths; the psum path dequantizes to f32 first
+    so the partial-sum contract above is unchanged."""
+    from repro.quant.linear import is_packed, qdot
     axis = _TP_AXIS.get()
     if axis is None:
-        return x @ w
+        return qdot(x, w)
     if _TP_MODE.get() == "gather":
         full = jax.lax.all_gather(x, axis, axis=x.ndim - 1, tiled=True)
-        return full @ w
+        return qdot(full, w)
     import jax.numpy as jnp
+    if is_packed(w):
+        from repro.quant import formats
+        w = formats.dequantize_any(w, jnp.float32)
     return x.astype(jnp.float32) @ w.astype(jnp.float32)

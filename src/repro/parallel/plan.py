@@ -358,10 +358,16 @@ class PagedServePlan:
                             is_leaf=lambda s: isinstance(s, P))
 
     # ---------------- page pools ----------------
-    def pool_specs(self, model) -> list:
+    def pool_specs(self, model, cache_dtype=None) -> list:
         """PartitionSpec pytree matching ``Model.init_paged_cache``'s
         structure (list over segments, tuple over kinds, dict leaves —
-        stacked along a leading reps axis for scanned segments)."""
+        stacked along a leading reps axis for scanned segments).
+
+        ``cache_dtype`` must match the engine's pool dtype: quantized
+        ("fp8"/"int8") pools carry extra ``k_scale``/``v_scale`` metadata
+        leaves (one fewer dim than the code leaves) that shard the same
+        KV-head axis, so the spec tree is probed from an actual tiny pool
+        rather than the declared token-leaf keys."""
         from repro.models.attention_backends import backend_for_kind
 
         specs = []
@@ -370,23 +376,26 @@ class PagedServePlan:
             for kind in seg.kinds:
                 be = backend_for_kind(kind)
                 part = (be.paged_partition_spec or {}) if be else {}
+                probe = (be.init_page_pool(model.cfg, 2, 1,
+                                           dtype=cache_dtype or jnp.bfloat16)
+                         if be and be.supports_paged else {})
                 leaf_specs = {}
-                for key in (be.paged_leaf_keys if be else ()):
+                for key, leaf in probe.items():
                     dim = part.get(key)
                     lead = 0 if seg.reps == 1 else 1
                     if dim is None or self.tp == 1:
                         leaf_specs[key] = P()
                     else:
-                        spec = [None] * (lead + 4)
+                        spec = [None] * (lead + leaf.ndim)
                         spec[lead + dim] = self.axis
                         leaf_specs[key] = P(*spec)
                 kinds_specs.append(leaf_specs)
             specs.append(tuple(kinds_specs))
         return specs
 
-    def pool_shardings(self, model) -> list:
+    def pool_shardings(self, model, cache_dtype=None) -> list:
         return jax.tree.map(lambda spec: NamedSharding(self.mesh, spec),
-                            self.pool_specs(model),
+                            self.pool_specs(model, cache_dtype=cache_dtype),
                             is_leaf=lambda s: isinstance(s, P))
 
     # ---------------- accounting ----------------
@@ -418,13 +427,19 @@ class PagedServePlan:
 
 
 def paged_kv_token_bytes(model, *, tp: int = 1, dtype_bytes: int = 4,
-                         kv_repl: int = 1) -> int:
+                         kv_repl: int = 1, cache_dtype=None) -> int:
     """Per-device pool bytes one cached token costs — the strong-scaling
     observable: leaves sharded by their backend's ``paged_partition_spec``
     divide by ``tp``, replicated leaves don't.  Under KV-head replication
     the sharded leaves are first widened by ``kv_repl`` (each KV head is
     materialized on ``kv_repl`` shards), so per-device bytes bottom out at
-    one head instead of continuing to shrink 1/TP."""
+    one head instead of continuing to shrink 1/TP.
+
+    With ``cache_dtype`` set the bytes are measured from an actual tiny
+    pool built at that dtype (``dtype_bytes`` is ignored): quantized
+    fp8/int8 pools then report the *packed* bytes — 1-byte codes plus the
+    f32 per-token scale leaves — so the deployment budget equals what the
+    engine allocates."""
     from repro.models.attention_backends import backend_for_kind
 
     total = 0
@@ -433,10 +448,16 @@ def paged_kv_token_bytes(model, *, tp: int = 1, dtype_bytes: int = 4,
             be = backend_for_kind(kind)
             if be is None or not be.supports_paged:
                 continue
-            pool = be.init_page_pool(model.cfg, 2, 1)
             part = be.paged_partition_spec or {}
-            for key, leaf in pool.items():
-                per_tok = int(np.prod(leaf.shape[2:])) * dtype_bytes
+            if cache_dtype is not None:
+                pool = be.init_page_pool(model.cfg, 2, 1, dtype=cache_dtype)
+                leaf_bytes = {k: int(np.prod(v.shape[2:])) * v.dtype.itemsize
+                              for k, v in pool.items()}
+            else:
+                pool = be.init_page_pool(model.cfg, 2, 1)
+                leaf_bytes = {k: int(np.prod(v.shape[2:])) * dtype_bytes
+                              for k, v in pool.items()}
+            for key, per_tok in leaf_bytes.items():
                 if tp > 1 and part.get(key) is not None:
                     per_tok = per_tok * kv_repl // tp
                 total += per_tok * seg.reps

@@ -49,13 +49,19 @@ def _e8m0_scale_exp(amax: jnp.ndarray, elem_emax: float) -> jnp.ndarray:
 
 
 def _quantize_fp4_codes(x_scaled: jnp.ndarray) -> jnp.ndarray:
-    """Round scaled values to nearest E2M1; returns uint8 codes 0..15."""
-    sign = (x_scaled < 0).astype(jnp.uint8)
+    """Round scaled values to nearest E2M1 (OCP-MX round-to-nearest-even);
+    non-finite inputs saturate to +/-6.0.  Returns uint8 codes 0..15."""
+    sign = jnp.signbit(x_scaled).astype(jnp.uint8)
     mag = jnp.abs(x_scaled)
-    # nearest-even over the 8 magnitudes via midpoint thresholds
     grid = jnp.asarray(FP4_VALUES)
     mids = (grid[1:] + grid[:-1]) / 2.0  # 7 midpoints
-    idx = jnp.sum(mag[..., None] > mids, axis=-1).astype(jnp.uint8)
+    # idx counts crossed midpoints; a tie at mids[j] sits between codes j
+    # and j+1 and must pick the even mantissa, i.e. cross (>=) exactly when
+    # j+1 is even: 0.25->0.0, 0.75->1.0, 1.25->1.0, 2.5->2.0, 3.5->4.0
+    ties_up = jnp.asarray(np.arange(1, len(FP4_VALUES)) % 2 == 0)
+    above = jnp.where(ties_up, mag[..., None] >= mids, mag[..., None] > mids)
+    idx = jnp.sum(above, axis=-1).astype(jnp.uint8)
+    idx = jnp.where(jnp.isfinite(mag), idx, jnp.uint8(len(FP4_VALUES) - 1))
     return (sign << 3) | idx
 
 
@@ -212,12 +218,33 @@ def dequantize_bfp(p: PackedBFP, dtype=jnp.bfloat16) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 
+def _pack_bits(bits: jnp.ndarray) -> jnp.ndarray:
+    """Pack {0,1} uint8 [..., M, N] into uint8 [..., ceil(M/8), N]
+    (bit b of byte i holds entry 8*i + b; zero-padded tail)."""
+    *lead, m, n = bits.shape
+    pad = (-m) % 8
+    if pad:
+        bits = jnp.concatenate(
+            [bits, jnp.zeros((*lead, pad, n), bits.dtype)], axis=-2)
+    b = bits.reshape(*lead, -1, 8, n).astype(jnp.uint32)
+    weights = (1 << jnp.arange(8, dtype=jnp.uint32))[:, None]
+    return jnp.sum(b * weights, axis=-2).astype(jnp.uint8)
+
+
+def _unpack_bits(packed: jnp.ndarray, m: int) -> jnp.ndarray:
+    """Inverse of ``_pack_bits``: uint8 [..., ceil(M/8), N] -> [..., M, N]."""
+    *lead, _, n = packed.shape
+    shifts = jnp.arange(8, dtype=jnp.uint8)[:, None]
+    bits = (packed[..., :, None, :] >> shifts) & 1
+    return bits.reshape(*lead, -1, n)[..., :m, :]
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class PackedNXFP4:
     codes: jnp.ndarray     # uint8 [..., K/2, N]
     scales: jnp.ndarray    # uint8 [..., K/32, N]
-    micro: jnp.ndarray     # uint8 [..., K/8, N] in {0,1}: extra 2^-micro
+    micro: jnp.ndarray     # uint8 [..., ceil(K/8/8), N] bit-packed micro-exps
     shape: tuple
 
     def tree_flatten(self):
@@ -250,7 +277,7 @@ def quantize_nxfp4(w: jnp.ndarray) -> PackedNXFP4:
     packed = (lo | (hi << 4)).astype(jnp.uint8)
     scales = (e[..., 0, :] + _E8M0_BIAS).astype(jnp.uint8)
     micro_u8 = micro[..., 0, :].reshape(*lead, K // NX_SUB, N).astype(jnp.uint8)
-    return PackedNXFP4(packed, scales, micro_u8, tuple(w.shape))
+    return PackedNXFP4(packed, scales, _pack_bits(micro_u8), tuple(w.shape))
 
 
 def dequantize_nxfp4(p: PackedNXFP4, dtype=jnp.bfloat16) -> jnp.ndarray:
@@ -261,7 +288,8 @@ def dequantize_nxfp4(p: PackedNXFP4, dtype=jnp.bfloat16) -> jnp.ndarray:
     vals = jnp.stack([lut[lo], lut[hi]], axis=-2).reshape(*lead, K, N)
     e = p.scales.astype(jnp.float32) - _E8M0_BIAS
     scale = jnp.repeat(jnp.exp2(e), MX_BLOCK, axis=-2)
-    micro = jnp.repeat(jnp.exp2(-p.micro.astype(jnp.float32)), NX_SUB, axis=-2)
+    micro_bits = _unpack_bits(p.micro, K // NX_SUB).astype(jnp.float32)
+    micro = jnp.repeat(jnp.exp2(-micro_bits), NX_SUB, axis=-2)
     return (vals * scale * micro).astype(dtype)
 
 
@@ -269,28 +297,83 @@ def dequantize_nxfp4(p: PackedNXFP4, dtype=jnp.bfloat16) -> jnp.ndarray:
 # Registry — the software stream decoder
 # ---------------------------------------------------------------------------
 
-FORMATS = {
-    "mxfp4": (quantize_mxfp4, dequantize_mxfp4),
-    "mxfp8": (quantize_mxfp8, dequantize_mxfp8),
-    "bfp": (quantize_bfp, dequantize_bfp),
-    "bfp16": (quantize_bfp, dequantize_bfp),    # alias: 16-elem BFP blocks
-    "nxfp4": (quantize_nxfp4, dequantize_nxfp4),
+@dataclasses.dataclass(frozen=True)
+class FormatSpec:
+    """One quantized format: the single source of truth every derived
+    table (``FORMATS``, ``bits_per_element``, byte accounting) reads."""
+
+    quantize: callable
+    dequantize: callable
+    packed_cls: type
+    block: int            # elements sharing one scale along K
+    bits: float           # average storage bits/element incl. scales
+
+
+_CANONICAL = {
+    "mxfp4": FormatSpec(quantize_mxfp4, dequantize_mxfp4, PackedMXFP4,
+                        MX_BLOCK, 4 + 8.0 / MX_BLOCK),
+    "mxfp8": FormatSpec(quantize_mxfp8, dequantize_mxfp8, PackedMXFP8,
+                        MX_BLOCK, 8 + 8.0 / MX_BLOCK),
+    "bfp": FormatSpec(quantize_bfp, dequantize_bfp, PackedBFP,
+                      BFP_BLOCK, 8 + 8.0 / BFP_BLOCK),
+    "nxfp4": FormatSpec(quantize_nxfp4, dequantize_nxfp4, PackedNXFP4,
+                        MX_BLOCK, 4 + 8.0 / MX_BLOCK + 8.0 / NX_SUB / 8),
 }
+_ALIASES = {"bfp16": "bfp"}      # alias: 16-elem BFP blocks
+
+# name -> (quantize, dequantize), aliases included (the legacy surface
+# DeploymentSpec validates against)
+FORMATS = {name: (_CANONICAL[canon].quantize, _CANONICAL[canon].dequantize)
+           for name, canon in [(n, n) for n in _CANONICAL]
+           + list(_ALIASES.items())}
+
+PACKED_TYPES = tuple(s.packed_cls for s in _CANONICAL.values())
+_FORMAT_BY_TYPE = {s.packed_cls: name for name, s in _CANONICAL.items()}
+
+
+def canonical_format(fmt: str) -> str:
+    """Resolve aliases (``bfp16`` -> ``bfp``); KeyError on unknown names."""
+    fmt = _ALIASES.get(fmt, fmt)
+    if fmt not in _CANONICAL:
+        raise KeyError(f"unknown quantized format {fmt!r}; "
+                       f"know {sorted(FORMATS)}")
+    return fmt
+
+
+def format_spec(fmt: str) -> FormatSpec:
+    return _CANONICAL[canonical_format(fmt)]
 
 
 def quantize(w: jnp.ndarray, fmt: str):
-    return FORMATS[fmt][0](w)
+    return format_spec(fmt).quantize(w)
 
 
 def dequantize(p, fmt: str, dtype=jnp.bfloat16) -> jnp.ndarray:
-    return FORMATS[fmt][1](p, dtype)
+    return format_spec(fmt).dequantize(p, dtype)
+
+
+def dequantize_any(p, dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Dequantize any packed tensor, dispatching on its type."""
+    return _CANONICAL[_FORMAT_BY_TYPE[type(p)]].dequantize(p, dtype)
 
 
 def bits_per_element(fmt: str) -> float:
     """Average storage bits/element including scale overheads."""
-    return {
-        "mxfp4": 4 + 8.0 / MX_BLOCK,
-        "mxfp8": 8 + 8.0 / MX_BLOCK,
-        "bfp": 8 + 8.0 / BFP_BLOCK,
-        "nxfp4": 4 + 8.0 / MX_BLOCK + 8.0 / NX_SUB / 8,
-    }[fmt]
+    return format_spec(fmt).bits
+
+
+def packed_nbytes(shape, fmt: str) -> int:
+    """Exact bytes ``quantize(w, fmt)`` allocates for a ``shape`` weight
+    (scale/micro metadata included) — the budget==execution invariant."""
+    *lead, k, n = shape
+    spec = format_spec(fmt)
+    lead_n = int(np.prod(lead)) if lead else 1
+    cols = lead_n * n
+    per_col = {
+        "mxfp4": k // 2 + k // MX_BLOCK,
+        "mxfp8": k + k // MX_BLOCK,
+        "bfp": k + k // BFP_BLOCK,
+        "nxfp4": k // 2 + k // MX_BLOCK + -(-(k // NX_SUB) // 8),
+    }[canonical_format(fmt)]
+    assert k % spec.block == 0, f"K={k} not a multiple of {spec.block}"
+    return per_col * cols

@@ -1,0 +1,84 @@
+"""Quantized paged-KV cache formats: fp8 (E4M3) and int8 page pools.
+
+``cache_dtype`` grows two string values — ``"fp8"`` and ``"int8"`` — on
+top of the usual jnp dtypes.  A quantized pool stores K/V *codes* in the
+narrow storage dtype plus per-token-per-KV-head ``float32`` scales in
+sibling ``k_scale`` / ``v_scale`` pool leaves of shape ``(P, page, KVH)``
+(page-major scale metadata riding in the pool itself, so page copy /
+permute / sharding machinery treats them like any other leaf).
+
+Scales are computed at *write* time (amax of the token's head vector),
+which is the only scheme compatible with incremental scatter writes: a
+mutable per-page running amax would re-quantize history.  Dequant is a
+single elementwise multiply — fused into the paged decode kernel's
+page-streaming loop on the read side, and performed identically (f32
+codes x f32 scale) in the jnp oracle so ``accum="exact"`` interpret mode
+stays bit-exact.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# name -> (storage dtype, max representable magnitude)
+KV_FORMATS = {
+    "fp8": (jnp.float8_e4m3fn, 448.0),
+    "int8": (jnp.int8, 127.0),
+}
+SCALE_DTYPE = jnp.float32
+
+
+def validate_cache_dtype(dtype) -> None:
+    if isinstance(dtype, str) and dtype not in KV_FORMATS:
+        raise ValueError(f"unknown quantized cache_dtype {dtype!r}; "
+                         f"know {sorted(KV_FORMATS)} (or pass a jnp dtype)")
+
+
+def is_quantized_cache_dtype(dtype) -> bool:
+    """True for the string cache dtypes ("fp8" / "int8")."""
+    validate_cache_dtype(dtype)
+    return isinstance(dtype, str)
+
+
+def cache_storage_dtype(dtype):
+    """The dtype K/V codes are stored in (identity for plain dtypes)."""
+    if is_quantized_cache_dtype(dtype):
+        return KV_FORMATS[dtype][0]
+    return dtype
+
+
+def pool_cache_format(pool: dict) -> str | None:
+    """Which quantized format a pool was built with (None = dense)."""
+    if "k_scale" not in pool:
+        return None
+    for name, (store, _) in KV_FORMATS.items():
+        if pool["k"].dtype == store:
+            return name
+    raise ValueError(f"pool has scale leaves but unrecognized code dtype "
+                     f"{pool['k'].dtype}")
+
+
+def kv_quantize(vals: jnp.ndarray, cache_dtype: str):
+    """Quantize K or V vectors (..., KVH, HD) -> (codes, scales (..., KVH)).
+
+    One f32 scale per stored token per KV head: ``amax / qmax`` (1.0 for
+    all-zero vectors so dequant stays finite)."""
+    store, qmax = KV_FORMATS[cache_dtype]
+    v = vals.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(v), axis=-1)
+    scale = jnp.where(amax > 0, amax / qmax, 1.0)
+    scaled = v / scale[..., None]
+    if store == jnp.int8:
+        codes = jnp.clip(jnp.round(scaled), -qmax, qmax).astype(store)
+    else:
+        codes = jnp.clip(scaled, -qmax, qmax).astype(store)
+    return codes, scale.astype(SCALE_DTYPE)
+
+
+def kv_dequantize(codes: jnp.ndarray, scales: jnp.ndarray,
+                  dtype=jnp.float32) -> jnp.ndarray:
+    """codes (..., KVH, HD) x scales (..., KVH) -> values in ``dtype``.
+
+    The same op sequence (f32 cast, then one multiply) the fused paged
+    decode kernel applies per page, so oracle and kernel stay bit-exact.
+    """
+    return (codes.astype(jnp.float32) * scales[..., None]).astype(dtype)

@@ -1,0 +1,100 @@
+"""Quantized serve execution: param-tree quantization + matmul dispatch.
+
+``DeploymentSpec.weight_format`` stops being a pricing fiction here: the
+serve engines call ``quantize_params`` at construction, replacing every
+eligible projection weight (attn/MLP, dense blocks only) with its packed
+block-quantized form from ``quant/formats.py``, and the model code routes
+the affected matmuls through ``qdot`` — the Pallas MXFP4 VMM kernel for
+``mxfp4`` (jnp oracle on CPU), dequantize-then-matmul for every other
+format.  Packed leaves carry their per-layer logical ``(K, N)`` shape as
+pytree aux data, so ``lax.scan`` over stacked layer weights slices the
+code/scale children and each sliced element stays self-consistent.
+
+``serve_weight_bytes`` is the budget side of the same coin: it prices a
+param tree with the *exact* packed bytes ``quantize_params`` would
+allocate (quantizable leaves) plus native bytes for everything else, so
+``DeploymentSpec.resolve`` reports the bytes actually resident.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mxfp4_vmm.ops import mxfp4_matmul
+from repro.quant import formats
+
+# projection leaves the serve path streams through the software stream
+# decoder; everything else (norms, biases, embeddings, router/expert and
+# SSM weights) keeps its native dtype
+QUANT_KEYS = frozenset({"wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"})
+# replicated / non-dense subtrees never quantize (MoE experts contract
+# via einsum; SSM state kernels are not K-major streams)
+SKIP_SUBTREES = frozenset({"moe", "ssm"})
+
+
+def _path_dict_keys(path) -> list:
+    return [e.key for e in path if isinstance(e, jax.tree_util.DictKey)]
+
+
+def quantizable_leaf(path, leaf, fmt: str) -> bool:
+    """True when ``quantize_params`` packs this leaf under ``fmt``."""
+    names = _path_dict_keys(path)
+    if not names or names[-1] not in QUANT_KEYS:
+        return False
+    if any(n in SKIP_SUBTREES for n in names):
+        return False
+    if getattr(leaf, "ndim", 0) < 2:
+        return False
+    return leaf.shape[-2] % formats.format_spec(fmt).block == 0
+
+
+def _quantize_leaf(w: jnp.ndarray, fmt: str):
+    """Pack one (possibly layer-stacked) weight; aux shape is the
+    per-layer (K, N) so scanned slices stay self-consistent."""
+    p = formats.quantize(w, fmt)
+    children, _ = p.tree_flatten()
+    return type(p).tree_unflatten(tuple(w.shape[-2:]), children)
+
+
+def quantize_params(params, fmt: str):
+    """Quantize every eligible projection leaf of a model param tree to
+    ``fmt``; all other leaves pass through unchanged."""
+    fmt = formats.canonical_format(fmt)
+
+    def fn(path, leaf):
+        if quantizable_leaf(path, leaf, fmt):
+            return _quantize_leaf(leaf, fmt)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(fn, params)
+
+
+def serve_weight_bytes(params, fmt: str | None) -> int:
+    """Total bytes the serve params occupy under ``fmt`` (None = native):
+    exact packed bytes for quantizable leaves, native ``nbytes`` for the
+    rest — the number ``quantize_params`` actually allocates."""
+    total = 0
+    for path, leaf in jax.tree_util.tree_leaves_with_path(params):
+        if fmt is not None and quantizable_leaf(path, leaf, fmt):
+            total += formats.packed_nbytes(leaf.shape, fmt)
+        else:
+            total += leaf.size * leaf.dtype.itemsize
+    return total
+
+
+def is_packed(w) -> bool:
+    return isinstance(w, formats.PACKED_TYPES)
+
+
+def qdot(x: jnp.ndarray, w) -> jnp.ndarray:
+    """``x @ w`` where ``w`` may be a packed quantized tensor.
+
+    MXFP4 routes through the ``kernels/mxfp4_vmm`` op (Pallas kernel on
+    accelerators, jnp dequant oracle on CPU); other packed formats take
+    the dequantize-then-matmul oracle; plain arrays are a native matmul.
+    """
+    if isinstance(w, formats.PackedMXFP4):
+        return mxfp4_matmul(x, w, out_dtype=x.dtype)
+    if isinstance(w, formats.PACKED_TYPES):
+        return x @ formats.dequantize_any(w, x.dtype)
+    return x @ w

@@ -56,6 +56,7 @@ from repro.core import hardware
 from repro.core.hbmco import CANDIDATE_CO, HBMCOConfig, hbmco_by_name
 from repro.models.footprint import compute_footprint
 from repro.quant import formats
+from repro.quant import kv as kvq
 
 
 class DeploymentError(ValueError):
@@ -140,6 +141,7 @@ class DeploymentSpec:
                 and self.weight_format not in formats.FORMATS:
             raise ValueError(f"unknown weight_format {self.weight_format!r}; "
                              f"known: {sorted(formats.FORMATS)}")
+        kvq.validate_cache_dtype(self.cache_dtype)   # "fp8"/"int8" strings
 
     # ---------------- hardware point ----------------
     def device_budget(self) -> DeviceBudget:
@@ -214,7 +216,7 @@ class DeploymentSpec:
         # -- weights, per device --
         if params is not None:
             weight_bytes = self._weight_bytes_exact(params, plan, tp,
-                                                    kv_repl, wbits)
+                                                    kv_repl)
         else:
             # no params: a conservative estimate — treat every weight as
             # replicated.  Dividing by tp here would need the per-leaf
@@ -230,9 +232,11 @@ class DeploymentSpec:
         kv_budget = dev.capacity_bytes - weight_bytes - workspace
         cache_dtype = self.cache_dtype if self.cache_dtype is not None \
             else jnp.bfloat16
-        kv_token = paged_kv_token_bytes(
-            model, tp=tp, dtype_bytes=jnp.dtype(cache_dtype).itemsize,
-            kv_repl=kv_repl)
+        # measured from an actual tiny pool at this dtype, so quantized
+        # fp8/int8 pools price codes + scale metadata — the bytes the
+        # engine allocates, not a nominal itemsize
+        kv_token = paged_kv_token_bytes(model, tp=tp, kv_repl=kv_repl,
+                                        cache_dtype=cache_dtype)
         max_blocks = -(-self.max_len // self.page_size)
         page_bytes = kv_token * self.page_size
         if kv_budget < page_bytes * max_blocks:
@@ -290,12 +294,24 @@ class DeploymentSpec:
             tokens_per_s_ceiling=ceiling,
             modeled_j_per_token=j_per_tok)
 
-    def _weight_bytes_exact(self, params, plan, tp: int, kv_repl: int,
-                            wbits: float | None) -> float:
+    def _weight_bytes_exact(self, params, plan, tp: int,
+                            kv_repl: int) -> float:
+        """Per-device weight bytes as the engine will actually allocate
+        them: quantizable projection leaves price at their exact packed
+        (codes + scales) bytes for ``weight_format``; every other leaf —
+        norms, biases, embeddings, MoE/SSM subtrees — keeps its native
+        dtype, exactly mirroring ``quant.linear.quantize_params`` /
+        ``serve_weight_bytes``, so budget == execution."""
         from repro.parallel.plan import _path_names
+        from repro.quant.linear import quantizable_leaf
+
+        fmt = self.weight_format
 
         def leaf_bytes(path, leaf):
-            b = leaf.size * (wbits / 8.0 if wbits else leaf.dtype.itemsize)
+            if fmt is not None and quantizable_leaf(path, leaf, fmt):
+                b = float(formats.packed_nbytes(leaf.shape, fmt))
+            else:
+                b = leaf.size * leaf.dtype.itemsize
             if plan is not None and tp > 1:
                 names = _path_names(path)
                 spec = plan._serve_param_spec(names, leaf.ndim)

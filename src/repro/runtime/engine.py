@@ -48,6 +48,8 @@ from jax.sharding import PartitionSpec as P
 from repro.models.model import Model
 from repro.parallel import hints
 from repro.parallel.compat import shard_map
+from repro.quant import kv as kvq
+from repro.quant.linear import quantize_params
 from repro.runtime import sampling
 from repro.runtime.sampling import SamplingParams
 from repro.runtime.kv_cache import PagedKVCache
@@ -98,6 +100,7 @@ class ServeEngine:
     def __init__(self, model: Model, params: Any, *, max_len: int | None = None,
                  spec=None, sampling_params: SamplingParams | None = None,
                  donate_cache: bool = True, cache_dtype=None,
+                 weight_format: str | None = None,
                  max_top_k: int = sampling.MAX_TOP_K):
         self.model = model
         self.params = params
@@ -108,8 +111,18 @@ class ServeEngine:
             max_len = dep.max_len if max_len is None else max_len
             cache_dtype = dep.cache_dtype if cache_dtype is None \
                 else cache_dtype
+            weight_format = spec.weight_format if weight_format is None \
+                else weight_format
         if max_len is None:
             raise ValueError("pass max_len= or a DeploymentSpec via spec=")
+        if kvq.is_quantized_cache_dtype(cache_dtype):
+            raise NotImplementedError(
+                "quantized cache_dtype (fp8/int8) needs the paged pools of "
+                "the continuous engine; the static engine's dense cache "
+                "stays a plain dtype")
+        self.weight_format = weight_format
+        if weight_format is not None:
+            self.params = quantize_params(self.params, weight_format)
         self.max_len = max_len
         self.default_sampling = sampling_params or sampling.GREEDY
         self.max_top_k = int(max_top_k)
@@ -281,7 +294,8 @@ class ContinuousServeEngine:
                  num_pages: int | None = None, max_len: int | None = None,
                  spec=None,
                  sampling_params: SamplingParams | None = None,
-                 cache_dtype=None, prefill_chunk: int | None = None,
+                 cache_dtype=None, weight_format: str | None = None,
+                 prefill_chunk: int | None = None,
                  enable_prefix_cache: bool = True,
                  max_top_k: int = sampling.MAX_TOP_K,
                  mesh=None, tp_reduce: str = "auto",
@@ -306,6 +320,8 @@ class ContinuousServeEngine:
                 else prefill_chunk
             cache_dtype = dep.cache_dtype if cache_dtype is None \
                 else cache_dtype
+            weight_format = spec.weight_format if weight_format is None \
+                else weight_format
             max_decode_slots = dep.max_decode_slots \
                 if max_decode_slots is None else max_decode_slots
             if tp_reduce == "auto":
@@ -331,7 +347,9 @@ class ContinuousServeEngine:
                 f"request ({self.max_blocks} blocks + scratch)")
         self.default_sampling = sampling_params or sampling.GREEDY
         self.max_top_k = int(max_top_k)
+        kvq.validate_cache_dtype(cache_dtype)
         self.cache_dtype = cache_dtype
+        self.weight_format = weight_format
         if int(prefill_chunk) < 1:
             raise ValueError(f"prefill_chunk={prefill_chunk} must be >= 1")
         self.prefill_chunk = int(prefill_chunk)
@@ -356,15 +374,24 @@ class ContinuousServeEngine:
                 self._pool_model = Model(
                     self.serve_plan.pool_config(model.cfg),
                     moe_impl=model.moe_impl)
+            if weight_format is not None:
+                # pack AFTER the kv_repl expansion (packing operates on the
+                # physical column layout each shard slices) and BEFORE
+                # device_put, so codes/scales shard through the same
+                # partition specs as the weights they replace
+                params = quantize_params(params, weight_format)
             self.params = jax.device_put(
                 params, self.serve_plan.param_shardings(params))
             self._param_specs = self.serve_plan.param_specs(params)
-            self._pool_specs = self.serve_plan.pool_specs(self._pool_model)
+            self._pool_specs = self.serve_plan.pool_specs(
+                self._pool_model, cache_dtype=self.cache_dtype)
             self._paged_decode = self._shard_paged(
                 self._local_model.decode_step_paged, n_extra=1)   # pos
             self._paged_chunk = self._shard_paged(
                 self._local_model.prefill_chunk_paged, n_extra=2)  # start, valid
         else:
+            if weight_format is not None:
+                self.params = quantize_params(params, weight_format)
             self._paged_decode = model.decode_step_paged
             self._paged_chunk = model.prefill_chunk_paged
         self._step_fn = jax.jit(self._step_impl, donate_argnums=(1, 2))
@@ -477,7 +504,8 @@ class ContinuousServeEngine:
             # every physical page (shared logical page-id space)
             self._pools = jax.device_put(
                 self._pools,
-                self.serve_plan.pool_shardings(self._pool_model))
+                self.serve_plan.pool_shardings(self._pool_model,
+                                               cache_dtype=self.cache_dtype))
         self._t0 = time.monotonic()
         self._steps, self._occ_sum = 0, 0.0
         self._n_chunks, self._prefill_tokens = 0, 0
@@ -507,13 +535,14 @@ class ContinuousServeEngine:
 
     def kv_token_bytes_per_device(self) -> int:
         """Physical pool bytes one cached token costs per device (the
-        strong-scaling observable: sharded leaves divide by TP)."""
+        strong-scaling observable: sharded leaves divide by TP).  Measured
+        from the actual pool dtype, so quantized fp8/int8 pools report
+        packed codes + scale-metadata bytes."""
         from repro.parallel.plan import paged_kv_token_bytes
-        dtype = jnp.dtype(self.cache_dtype or jnp.bfloat16)
         return paged_kv_token_bytes(
             self.model, tp=self.serve_plan.tp if self.serve_plan else 1,
-            dtype_bytes=dtype.itemsize,
-            kv_repl=self.serve_plan.kv_repl if self.serve_plan else 1)
+            kv_repl=self.serve_plan.kv_repl if self.serve_plan else 1,
+            cache_dtype=self.cache_dtype or jnp.bfloat16)
 
     def add_request(self, req: Request,
                     sampling_params: SamplingParams | None = None) -> None:

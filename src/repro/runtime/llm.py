@@ -77,6 +77,7 @@ class LLMEngine:
                  num_pages: int | None = None,
                  prefill_chunk: int | None = None,
                  enable_prefix_cache: bool = True, cache_dtype=None,
+                 weight_format: str | None = None,
                  max_top_k: int = sampling.MAX_TOP_K,
                  draft_model: Model | None = None, draft_params: Any = None,
                  gamma: int = 8,
@@ -120,14 +121,16 @@ class LLMEngine:
                 model, params, num_slots=num_slots, page_size=page_size,
                 num_pages=num_pages, max_len=max_len, spec=spec,
                 sampling_params=self.default_sampling,
-                cache_dtype=cache_dtype, prefill_chunk=prefill_chunk,
+                cache_dtype=cache_dtype, weight_format=weight_format,
+                prefill_chunk=prefill_chunk,
                 enable_prefix_cache=enable_prefix_cache,
                 max_top_k=self.max_top_k, mesh=mesh, tp_reduce=tp_reduce)
         elif backend == "static":
             self._eng = ServeEngine(
                 model, params, max_len=max_len, spec=spec,
                 sampling_params=self.default_sampling, donate_cache=False,
-                cache_dtype=cache_dtype, max_top_k=self.max_top_k)
+                cache_dtype=cache_dtype, weight_format=weight_format,
+                max_top_k=self.max_top_k)
         else:                            # speculative
             # with no draft the target drafts for itself ("ideal draft"):
             # every window accepts, output equals the target-only stream.

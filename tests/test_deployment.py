@@ -69,10 +69,17 @@ def test_resolve_budget_arithmetic(small):
     assert 1 <= dep.num_slots <= 4
     assert dep.max_decode_slots >= dep.num_slots
     assert dep.tokens_per_s_ceiling > 0
-    # mxfp4 weight budget matches the format's bits/element exactly
-    n_weights = sum(leaf.size for leaf in jax.tree.leaves(params))
+    # mxfp4 weight budget is the EXACT packed accounting the engine will
+    # allocate: quantizable projections at packed_nbytes, everything else
+    # (embeddings, norms, biases) at its native width
+    from repro.quant.linear import serve_weight_bytes
     assert dep.weight_bytes_per_device == pytest.approx(
-        n_weights * formats.bits_per_element("mxfp4") / 8.0)
+        serve_weight_bytes(params, "mxfp4"))
+    # ... which is strictly more than the naive all-weights-at-4.25-bits
+    # estimate (the non-quantizable leaves stay wide)
+    n_weights = sum(leaf.size for leaf in jax.tree.leaves(params))
+    assert dep.weight_bytes_per_device > \
+        n_weights * formats.bits_per_element("mxfp4") / 8.0
     d = dep.as_dict()
     assert d["num_pages"] == dep.num_pages
     assert "roofline" in dep.describe()
@@ -147,7 +154,7 @@ def manual_run(small, prompts):
     eng = ContinuousServeEngine(
         model, params, num_slots=dep.num_slots, page_size=4,
         num_pages=dep.num_pages, max_len=21, prefill_chunk=5,
-        cache_dtype=jnp.float32)
+        cache_dtype=jnp.float32, weight_format="mxfp4")
     for r in _reqs(prompts, MIX):
         eng.add_request(r)
     peak = 0
@@ -198,9 +205,9 @@ def test_capacity_pressure_storm_byte_identical_with_invariants(
     _, model, params = small
     _, _, ref_toks = manual_run
     from repro.parallel.plan import paged_kv_token_bytes
+    from repro.quant.linear import serve_weight_bytes
     page_bytes = paged_kv_token_bytes(model, dtype_bytes=4) * 4
-    weight_bytes = sum(l.size for l in jax.tree.leaves(params)) \
-        * formats.bits_per_element("mxfp4") / 8.0
+    weight_bytes = serve_weight_bytes(params, "mxfp4")
     # capacity = weights + ~7 pages: far less than 3 slots x 6 blocks
     cap = weight_bytes + 7.6 * page_bytes
     hbm = HBMCOConfig(name="co-storm", ranks=1, channels_per_layer=1,
@@ -238,7 +245,8 @@ def test_admission_hint_caps_concurrent_decoding(small, prompts, manual_run):
     eng = ContinuousServeEngine(
         model, params, num_slots=dep.num_slots, page_size=4,
         num_pages=dep.num_pages, max_len=21, prefill_chunk=5,
-        cache_dtype=jnp.float32, max_decode_slots=2)
+        cache_dtype=jnp.float32, max_decode_slots=2,
+        weight_format="mxfp4")
     for r in _reqs(prompts, MIX):
         eng.add_request(r)
     peak = 0

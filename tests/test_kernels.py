@@ -112,13 +112,18 @@ def test_decode_attention_ignores_invalid_tail():
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("fmt,tol", [
-    # worst-case relative step near block amax: E2M1 ~ 1/4; E4M3 with a
-    # floor()ed shared E8M0 scale ~ 2^-3 (x2 scale slack); BFP16 8-bit
-    # mantissa ~ 2^-7 (x2 slack).
-    ("mxfp4", 0.3), ("nxfp4", 0.3), ("mxfp8", 0.15), ("bfp16", 0.02),
-])
-def test_format_roundtrip_error(fmt, tol):
+# worst-case relative step near block amax: E2M1 ~ 1/4; E4M3 with a
+# floor()ed shared E8M0 scale ~ 2^-3 (x2 scale slack); BFP 8-bit
+# mantissa ~ 2^-7 (x2 slack).
+_ROUNDTRIP_TOL = {"mxfp4": 0.3, "nxfp4": 0.3, "mxfp8": 0.15,
+                  "bfp": 0.02, "bfp16": 0.02}
+
+
+@pytest.mark.parametrize("fmt", sorted(formats.FORMATS))
+def test_format_roundtrip_error_and_byte_accounting(fmt):
+    """Every FORMATS entry (aliases included): round-trip error inside the
+    format's quantile step, and measured packed bytes == ``packed_nbytes``
+    == the advertised bits/element — the budget==storage invariant."""
     key = jax.random.PRNGKey(11)
     w = jax.random.normal(key, (256, 128), jnp.float32)
     p = formats.quantize(w, fmt)
@@ -126,7 +131,18 @@ def test_format_roundtrip_error(fmt, tol):
     err = np.abs(np.asarray(wd) - np.asarray(w))
     # per-block relative error bounded by the format's quantile step
     rel = np.max(err) / np.max(np.abs(np.asarray(w)))
-    assert rel < tol, rel
+    assert rel < _ROUNDTRIP_TOL[fmt], rel
+    # aliases resolve through the one FormatSpec table (bfp16 KeyError
+    # regression: bits_per_element must accept every FORMATS name)
+    assert formats.canonical_format(fmt) in ("mxfp4", "mxfp8", "bfp",
+                                             "nxfp4")
+    measured = sum(np.asarray(c).nbytes for c in p.tree_flatten()[0])
+    assert measured == p.nbytes == formats.packed_nbytes(w.shape, fmt)
+    # K=256 is a multiple of every block size, so the average is exact
+    assert measured == w.size * formats.bits_per_element(fmt) / 8
+    # dequantize_any dispatches on the packed type to the same decoder
+    np.testing.assert_array_equal(
+        np.asarray(formats.dequantize_any(p, jnp.float32)), np.asarray(wd))
 
 
 def test_mxfp4_packing_layout():

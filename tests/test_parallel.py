@@ -206,6 +206,46 @@ def test_paged_serve_plan_specs_and_local_config():
     assert plan.psum_bytes_per_step(model, num_slots=8) > 0
 
 
+def test_paged_serve_plan_quantized_pool_and_packed_param_specs():
+    """fp8 pools add k_scale/v_scale leaves — every leaf (codes AND
+    scales) shards the KV-head axis — and mxfp4-packed params get the
+    parent weight's partition spec on both pytree children, so the TP
+    serve path shards the packed codes/scales like the dense weight."""
+    from repro.parallel.plan import make_paged_serve_plan, \
+        paged_kv_token_bytes
+    from repro.quant.formats import PackedMXFP4
+    from repro.quant.linear import quantize_params
+    import dataclasses
+    cfg = dataclasses.replace(reduced_config(get_config("qwen3-14b")),
+                              n_heads=8, n_kv_heads=4)
+    model = build_model(cfg)
+    mesh = _fake_mesh((2, 4), ("data", "model"))
+    plan = make_paged_serve_plan(cfg, mesh, reduce="gather")
+    specs = plan.pool_specs(model, cache_dtype="fp8")
+    leaves = jax.tree.leaves(specs, is_leaf=lambda s: isinstance(s, P))
+    dense = jax.tree.leaves(plan.pool_specs(model),
+                            is_leaf=lambda s: isinstance(s, P))
+    assert len(leaves) == 2 * len(dense)      # + k_scale/v_scale per pool
+    assert set(leaves) == {P(None, None, None, "model", None),   # codes
+                           P(None, None, None, "model")}         # scales
+    # packed param children inherit the parent leaf's spec
+    params = model.init(jax.random.PRNGKey(0))
+    qp = quantize_params(params, "mxfp4")
+    pspecs = plan.param_specs(qp)
+    wq = pspecs["stacks"][0][0]["attn"]["wq"]
+    assert isinstance(qp["stacks"][0][0]["attn"]["wq"], PackedMXFP4)
+    assert wq.codes == wq.scales == P(None, None, "model")
+    assert pspecs["stacks"][0][0]["attn"]["wo"].codes == P()  # gather mode
+    # sharded packed bytes divide evenly: N is the sharded axis for both
+    # children and the mesh TP degree divides it
+    for leaf in (qp["stacks"][0][0]["attn"]["wq"].codes,
+                 qp["stacks"][0][0]["attn"]["wq"].scales):
+        assert leaf.shape[-1] % 4 == 0
+    # quantized per-token pool bytes still scale 1/TP on the code leaves
+    assert paged_kv_token_bytes(model, tp=4, cache_dtype="fp8") \
+        == paged_kv_token_bytes(model, tp=1, cache_dtype="fp8") // 4
+
+
 def test_paged_serve_plan_kv_head_replication():
     """llama3-style kvh < TP: the plan replicates each KV head on tp/kvh
     shards instead of raising — local model runs 1 KV head/shard, the
