@@ -7,7 +7,8 @@ from repro.kernels import on_cpu
 from repro.kernels.decode_attention.kernel import decode_attention
 from repro.kernels.decode_attention.paged_kernel import paged_decode_attention
 from repro.kernels.decode_attention.ref import (
-    decode_attention_ref, paged_decode_attention_ref,
+    decode_attention_ref, gather_pages, paged_decode_attention_ref,
+    paged_decode_multi_attention_ref,
 )
 
 
@@ -20,6 +21,59 @@ def gqa_decode_attention(q, k_cache, v_cache, cur_len, *, block_s: int = 512):
         return decode_attention_ref(q, k_cache, v_cache, cur_len)
     return decode_attention(q, k_cache, v_cache, cur_len, block_s=bs,
                             interpret=on_cpu())
+
+
+def paged_gqa_multi_attention(q, k_pages, v_pages, page_table, start, *,
+                              k_scales=None, v_scales=None, causal=True,
+                              window=None, impl: str = "auto"):
+    """Multi-token paged attention: the q_len > 1 counterpart of
+    ``paged_gqa_decode_attention``, used by chunked prefill and the
+    speculative verify step (q_len = gamma + 1).
+
+    q:          (B, C, H, D) — C queries per slot at per-row absolute
+                offsets ``start`` (query j of row b sits at position
+                start[b] + j and attends causally up to itself)
+    k_pages / v_pages / page_table / k_scales / v_scales: as in
+                ``paged_gqa_decode_attention``
+
+    Impls (no separate kernel either way — the gather-fused Pallas path
+    only covers q_len == 1 today; multi-token flash-decode over
+    scalar-prefetched pages is a recorded follow-on):
+
+      * ``"blocked"``   — gather pages, dequantize, hand to
+        ``blocked_attention``'s ragged ``q_offset`` online-softmax path.
+        What chunked prefill has always used.
+      * ``"reference"`` — ``paged_decode_multi_attention_ref``, op-for-op
+        the single-token decode oracle per query.  The speculative verify
+        step needs THIS on CPU: its per-position logits are bit-identical
+        to the non-speculative decode step's, which is what makes greedy
+        speculation byte-identical end to end (the blocked online softmax
+        differs at ulp scale — enough to flip argmax on near-ties).
+      * ``"auto"``      — reference on CPU (the byte-exactness contract
+        lives there), blocked on accelerators (where single-token decode
+        takes the fused online-softmax kernel anyway).
+    """
+    if impl == "auto":
+        impl = "reference" if on_cpu() else "blocked"
+    if impl == "reference":
+        assert causal, "the multi-token decode oracle is causal-only"
+        return paged_decode_multi_attention_ref(
+            q, k_pages, v_pages, page_table, start, k_scales=k_scales,
+            v_scales=v_scales, window=window)
+    if impl != "blocked":
+        raise ValueError(f"impl={impl!r} (want 'auto', 'blocked' or "
+                         "'reference')")
+    from repro.quant import kv as kvq
+    k_d = gather_pages(k_pages, page_table)
+    v_d = gather_pages(v_pages, page_table)
+    if k_scales is not None:
+        k_d = kvq.kv_dequantize(k_d, gather_pages(k_scales, page_table),
+                                q.dtype)
+        v_d = kvq.kv_dequantize(v_d, gather_pages(v_scales, page_table),
+                                q.dtype)
+    from repro.models.common import blocked_attention
+    return blocked_attention(q, k_d, v_d, causal=causal, window=window,
+                             q_offset=start)
 
 
 def paged_gqa_decode_attention(q, k_pages, v_pages, page_table, pos, *,

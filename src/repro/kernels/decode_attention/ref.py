@@ -1,9 +1,12 @@
 """Pure-jnp oracles for flash-decode GQA attention (dense and paged)."""
 from __future__ import annotations
 
+import math
+
+import jax
 import jax.numpy as jnp
 
-from repro.models.common import decode_attention_ref  # noqa: F401
+from repro.models.common import NEG_INF, decode_attention_ref  # noqa: F401
 
 
 def gather_pages(pages: jnp.ndarray, page_table: jnp.ndarray) -> jnp.ndarray:
@@ -26,6 +29,47 @@ def paged_valid_mask(page_table: jnp.ndarray, page_size: int,
     if window is not None:
         valid = valid & (idx > pos[:, None] - window)
     return valid
+
+
+def paged_decode_multi_attention_ref(q, k_pages, v_pages, page_table, start,
+                                     *, k_scales=None, v_scales=None,
+                                     window=None, scale=None):
+    """Multi-token paged decode oracle: C queries per slot at per-row
+    offsets (speculative verify, q_len = gamma + 1).
+
+    q: (B, C, H, D); start: (B,) absolute position of q[:, 0]; query j of
+    row b sits at position start[b] + j and sees keys <= its own position.
+
+    Op-for-op the same computation as ``paged_decode_attention_ref`` per
+    query (gather -> dequant -> matmul -> mask -> softmax -> matmul, f32
+    softmax), so each position's logits are bit-identical to what the
+    single-token decode path produces for the same pool state — the
+    greedy byte-identity contract between the speculative and
+    non-speculative continuous engines rests on this.
+    """
+    b, c, h, d = q.shape
+    kvh = k_pages.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    rep = h // kvh
+    k = gather_pages(k_pages, page_table)
+    v = gather_pages(v_pages, page_table)
+    if k_scales is not None:
+        k = k.astype(jnp.float32) * gather_pages(k_scales, page_table)[..., None]
+        v = v.astype(jnp.float32) * gather_pages(v_scales, page_table)[..., None]
+    s_len = k.shape[1]
+    pos = start[:, None] + jnp.arange(c)[None, :]          # (B, C)
+    idx = jnp.arange(s_len)
+    valid = idx[None, None, :] <= pos[:, :, None]          # (B, C, S)
+    if window is not None:
+        valid = valid & (idx[None, None, :] > pos[:, :, None] - window)
+    qf = q.astype(jnp.float32).reshape(b, c, kvh, rep, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bcgrd,bsgd->bcgrs", qf, kf) * scale
+    s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bcgrs,bsgd->bcgrd", p, vf)
+    return out.reshape(b, c, h, vf.shape[-1]).astype(q.dtype)
 
 
 def paged_decode_attention_ref(q, k_pages, v_pages, page_table, pos, *,

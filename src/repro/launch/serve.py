@@ -20,7 +20,12 @@ Continuous admission runs **chunked prefill** (``--prefill-chunk`` tokens
 per iteration per request) interleaved with decode, and shares prompt
 prefixes through the page pool's prefix index (``--num-prompts`` distinct
 prompts over ``--num-requests`` requests exercises the sharing;
-``--no-prefix-cache`` disables it).
+``--no-prefix-cache`` disables it).  ``--spec-draft reduced --gamma 4``
+turns on scheduler-integrated speculative decoding inside the continuous
+engine: each occupied slot drafts gamma tokens with a reduced model over
+its own paged KV pool, the target verifies them in one multi-token decode
+step, and the end-of-run summary reports windows / accepted-per-window /
+wasted draft tokens.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b --reduced \
       --batch 4 --prompt-len 64 --max-new 32 [--backend speculative]
@@ -111,6 +116,14 @@ def main(argv=None) -> int:
     ap.add_argument("--no-prefix-cache", dest="prefix_cache",
                     action="store_false", default=True,
                     help="disable prompt-prefix page sharing")
+    ap.add_argument("--spec-draft", default=None,
+                    choices=["self", "reduced"],
+                    help="scheduler-integrated speculative decoding for the "
+                         "continuous backend: 'reduced' drafts with an "
+                         "n_layers/4 copy of the target, 'self' with the "
+                         "target itself (acceptance ~1; a plumbing check)")
+    ap.add_argument("--gamma", type=int, default=4,
+                    help="draft lookahead per speculative window")
     ap.add_argument("--mesh", default=None, metavar="DxM",
                     help="shard the continuous serve path over a "
                          "(data=D, model=M) mesh: KV page pools split "
@@ -171,6 +184,10 @@ def main(argv=None) -> int:
     mesh = make_small_mesh()
     plan = make_plan(cfg, mesh, global_batch=args.batch, shape_kind="decode")
     max_len = args.prompt_len + args.max_new + 1
+    if args.spec_draft is not None and backend == "continuous":
+        # verify windows may overshoot by up to gamma draft positions
+        # before rollback, so slots need that much page headroom
+        max_len += args.gamma
 
     cache_dtype = CACHE_DTYPES.get(args.cache_dtype)
     spec = None
@@ -186,6 +203,27 @@ def main(argv=None) -> int:
         temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
         min_p=args.min_p, seed=args.seed,
         stop_token_ids=tuple(args.stop_token))
+
+    spec_cfg = None
+    if args.spec_draft is not None:
+        if backend != "continuous":
+            print(f"--spec-draft configures the continuous backend; "
+                  f"ignoring it for backend={backend}")
+        else:
+            import dataclasses
+
+            from repro.runtime.speculative import SpeculativeConfig
+            if args.spec_draft == "reduced":
+                draft_cfg = dataclasses.replace(
+                    cfg, name=cfg.name + "-draft",
+                    n_layers=max(2, cfg.n_layers // 4))
+                draft = build_model(draft_cfg)
+                spec_cfg = SpeculativeConfig(
+                    draft_model=draft,
+                    draft_params=draft.init(jax.random.fold_in(key, 3)),
+                    gamma=args.gamma)
+            else:                        # "self": target drafts for itself
+                spec_cfg = SpeculativeConfig(gamma=args.gamma)
 
     with mesh, sharding_rules(plan.rules()):
         if backend == "continuous":
@@ -206,7 +244,7 @@ def main(argv=None) -> int:
             if spec is not None:
                 # hardware-derived pool/slots — no manual num_pages knob
                 llm = LLMEngine(model, params, backend="continuous",
-                                spec=spec,
+                                spec=spec, speculative=spec_cfg,
                                 enable_prefix_cache=args.prefix_cache)
                 print(llm.deployment.describe())
                 slots = llm._eng.num_slots
@@ -219,7 +257,7 @@ def main(argv=None) -> int:
                     prefill_chunk=args.prefill_chunk,
                     cache_dtype=cache_dtype,
                     enable_prefix_cache=args.prefix_cache, mesh=serve_mesh,
-                    tp_reduce=args.tp_reduce)
+                    tp_reduce=args.tp_reduce, speculative=spec_cfg)
             t0 = time.time()
             outs = llm.generate([pool_prompts[picks[i]] for i in range(n_req)],
                                 sps, max_new_tokens=args.max_new,
@@ -249,15 +287,28 @@ def main(argv=None) -> int:
                   f"{stats.prefill_tokens}/{stats.prompt_tokens} prompt "
                   f"tokens computed, prefix hit rate "
                   f"{stats.prefix_hit_rate:.2f}, cow={stats.cow_events}")
+            if spec_cfg is not None:
+                print(f"speculative: gamma={args.gamma} "
+                      f"draft={args.spec_draft} "
+                      f"windows={stats.spec_windows} "
+                      f"accepted/window={stats.accepted_per_window:.2f} "
+                      f"drafted={stats.spec_drafted} "
+                      f"wasted={stats.spec_wasted}")
             q = stats.ttft_quantiles()
             if q is not None:
                 print(f"ttft p50={q[0] * 1e3:.1f}ms p99={q[1] * 1e3:.1f}ms")
             reasons = {}
             for o in outs:
                 reasons[o.finish_reason] = reasons.get(o.finish_reason, 0) + 1
-            per_req = " ".join(
-                f"r{rid}:p{st['preemptions']}/c{st['chunks']}"
-                for rid, st in sorted(stats.per_request.items()))
+            if spec_cfg is not None:
+                per_req = " ".join(
+                    f"r{rid}:p{st['preemptions']}/c{st['chunks']}"
+                    f"/w{st['spec_windows']}/a{st['spec_accepted']}"
+                    for rid, st in sorted(stats.per_request.items()))
+            else:
+                per_req = " ".join(
+                    f"r{rid}:p{st['preemptions']}/c{st['chunks']}"
+                    for rid, st in sorted(stats.per_request.items()))
             print(f"finish reasons: {reasons}")
             print(f"per-request preemptions/chunks: {per_req}")
             print("sample:", outs[0].token_ids[:16])

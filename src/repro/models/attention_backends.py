@@ -58,6 +58,15 @@ class AttentionBackend:
     init_page_pool: Callable[..., dict] | None = None
     decode_paged: Callable[..., Any] | None = None
     prefill_chunk_paged: Callable[..., Any] | None = None
+    # Multi-token decode (speculative verify): C queries per slot at
+    # per-row offsets, scatter-then-attend over the paged pools with
+    # ``blocked_attention``'s ragged q_offset machinery — the same
+    # contract as prefill_chunk_paged (start, valid), and for both
+    # built-in families literally the same body: a verify window IS a
+    # chunk of already-chosen tokens whose logits we keep at every
+    # position instead of just the last one (that difference lives in
+    # ``Model.decode_step_paged``, not here).
+    decode_multi_paged: Callable[..., Any] | None = None
     # Tensor-parallel partition of the page pools (sharded paged serving):
     # leaf key -> the UNSTACKED pool-leaf dim that shards over the mesh's
     # model axis, or None for a replicated leaf.  GQA pools shard their
@@ -240,15 +249,34 @@ def attn_prefill_chunk_paged(p: dict, x: jnp.ndarray, cfg: ModelConfig,
     q, k, v = layers._qkv(p, x, cfg, positions)
     ok = jnp.arange(c)[None, :] < valid[:, None]
     new_pool = _scatter_kv_chunk(pool, k, v, page_table, positions, ok)
-    k_d = gather_pages(new_pool["k"], page_table)
-    v_d = gather_pages(new_pool["v"], page_table)
-    if "k_scale" in new_pool:   # dequantize the gathered view for the chunk
-        k_d = kvq.kv_dequantize(
-            k_d, gather_pages(new_pool["k_scale"], page_table), q.dtype)
-        v_d = kvq.kv_dequantize(
-            v_d, gather_pages(new_pool["v_scale"], page_table), q.dtype)
-    out = blocked_attention(q, k_d, v_d, causal=cfg.causal, window=window,
-                            q_offset=start)
+    from repro.kernels.decode_attention.ops import paged_gqa_multi_attention
+    out = paged_gqa_multi_attention(
+        q, new_pool["k"], new_pool["v"], page_table, start,
+        k_scales=new_pool.get("k_scale"), v_scales=new_pool.get("v_scale"),
+        causal=cfg.causal, window=window, impl="blocked")
+    out = tp_row_dot(out.reshape(b, c, h * hd), p["wo"])
+    return out, new_pool
+
+
+def attn_decode_multi_paged(p: dict, x: jnp.ndarray, cfg: ModelConfig,
+                            pool: dict, page_table, start, valid, *,
+                            window=None) -> tuple[jnp.ndarray, dict]:
+    """C-token decode step (speculative verify): the tokens are already
+    chosen, so this is chunk-shaped scatter-then-attend, but through the
+    ``impl="auto"`` multi-query dispatch — bit-matched per position with
+    the single-token decode path on CPU (greedy byte-identity), blocked
+    online softmax on accelerators."""
+    b, c, _ = x.shape
+    h, hd = cfg.n_heads, cfg.hd
+    positions = start[:, None] + jnp.arange(c)[None, :]
+    q, k, v = layers._qkv(p, x, cfg, positions)
+    ok = jnp.arange(c)[None, :] < valid[:, None]
+    new_pool = _scatter_kv_chunk(pool, k, v, page_table, positions, ok)
+    from repro.kernels.decode_attention.ops import paged_gqa_multi_attention
+    out = paged_gqa_multi_attention(
+        q, new_pool["k"], new_pool["v"], page_table, start,
+        k_scales=new_pool.get("k_scale"), v_scales=new_pool.get("v_scale"),
+        window=window)
     out = tp_row_dot(out.reshape(b, c, h * hd), p["wo"])
     return out, new_pool
 
@@ -309,6 +337,47 @@ def mla_decode_paged(p, x, cfg: ModelConfig, pool: dict, page_table, pos, *,
     return out, {"c_kv": new_c, "k_rope": new_kr}
 
 
+def mla_decode_multi_paged(p, x, cfg: ModelConfig, pool: dict, page_table,
+                           start, valid, *, window=None):
+    """C-token absorbed-matmul MLA decode (speculative verify).
+
+    Deliberately mirrors ``mla_decode_paged``'s ABSORBED path — not the
+    per-head expansion ``mla_prefill_chunk_paged`` uses — because the
+    two associate the latent matmuls differently and diverge at ulp
+    scale; verify logits must match the single-token decode path
+    bit-for-bit so greedy speculation stays byte-identical."""
+    assert window is None, "MLA layers are full-attention"
+    b, c, _ = x.shape
+    h, hd, rhd, vhd, r = (cfg.n_heads, cfg.hd, cfg.rope_head_dim, cfg.v_hd,
+                          cfg.kv_lora_rank)
+    positions = start[:, None] + jnp.arange(c)[None, :]
+    q_nope, q_rope, c_kv, k_rope = layers._mla_qc(p, x, cfg, positions)
+    ok = jnp.arange(c)[None, :] < valid[:, None]
+    new_c = scatter_chunk(pool["c_kv"], c_kv, page_table, positions, ok)
+    new_kr = scatter_chunk(pool["k_rope"], k_rope, page_table, positions, ok)
+
+    c_d = gather_pages(new_c, page_table)                  # (B, S, r)
+    kr_d = gather_pages(new_kr, page_table)                # (B, S, rhd)
+    s_len = c_d.shape[1]
+    w_uk = p["w_uk"].reshape(r, h, hd)
+    q_lat = jnp.einsum("bchd,rhd->bchr", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    q_eff = jnp.concatenate([q_lat, q_rope.astype(jnp.float32)], axis=-1)
+    k_eff = jnp.concatenate([c_d.astype(jnp.float32),
+                             kr_d.astype(jnp.float32)], axis=-1)
+    scale = 1.0 / math.sqrt(hd + rhd)
+    s_ = jnp.einsum("bchr,bsr->bchs", q_eff, k_eff) * scale
+    idx = jnp.arange(s_len)
+    vmask = idx[None, None, :] <= positions[:, :, None]    # (B, C, S)
+    s_ = jnp.where(vmask[:, :, None, :], s_, NEG_INF)
+    pattn = jax.nn.softmax(s_, axis=-1)
+    ctx = jnp.einsum("bchs,bsr->bchr", pattn, c_d.astype(jnp.float32))
+    w_uv = p["w_uv"].reshape(r, h, vhd)
+    out = jnp.einsum("bchr,rhv->bchv", ctx, w_uv.astype(jnp.float32))
+    out = tp_row_dot(out.reshape(b, c, h * vhd).astype(x.dtype), p["wo"])
+    return out, {"c_kv": new_c, "k_rope": new_kr}
+
+
 def mla_prefill_chunk_paged(p, x, cfg: ModelConfig, pool: dict, page_table,
                             start, valid, *, window=None):
     """One MLA prefill chunk: scatter latents, attend via per-head expansion
@@ -358,6 +427,7 @@ GQA = register_backend(AttentionBackend(
     init_page_pool=init_attn_page_pool,
     decode_paged=attn_decode_paged,
     prefill_chunk_paged=attn_prefill_chunk_paged,
+    decode_multi_paged=attn_decode_multi_paged,
     # (P, page, KVH, HD) codes + (P, page, KVH) scale metadata: KV heads
     paged_partition_spec={"k": 2, "v": 2, "k_scale": 2, "v_scale": 2},
 ))
@@ -379,6 +449,7 @@ MLA = register_backend(AttentionBackend(
     init_page_pool=init_mla_page_pool,
     decode_paged=mla_decode_paged,
     prefill_chunk_paged=mla_prefill_chunk_paged,
+    decode_multi_paged=mla_decode_multi_paged,
     # the latent stream is shared by every head: heads shard (w_uk/w_uv
     # columns), the per-token latents replicate across the TP ring
     paged_partition_spec={"c_kv": None, "k_rope": None},

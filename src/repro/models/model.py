@@ -238,6 +238,27 @@ def _block_prefill_chunk_paged(kind: str, p: dict, x, cfg: ModelConfig,
     return x, c
 
 
+def _block_decode_multi_paged(kind: str, p: dict, x, cfg: ModelConfig,
+                              window, pool, page_table, start, valid,
+                              moe_impl: str):
+    """Multi-token paged decode (speculative verify): x: (B, C, D) chosen
+    tokens at per-slot offsets ``start`` with ``valid`` real rows.  Same
+    block shape as ``_block_prefill_chunk_paged`` but dispatched through
+    the backend's ``decode_multi_paged`` entry so new cache families can
+    split the two paths (e.g. SSM states need an explicit multi-step
+    scan here but a one-shot conv prefill there)."""
+    be = backend_for_kind(kind)
+    if be is None or be.decode_multi_paged is None or kind == "hybrid":
+        raise NotImplementedError(kind)
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    a, c = be.decode_multi_paged(p["attn"], h, cfg, pool, page_table, start,
+                                 valid, window=window)
+    x = x + tp_psum(a).astype(x.dtype)
+    f = _ffn(kind, p, rmsnorm(x, p["ln2"], cfg.norm_eps), cfg, moe_impl)
+    x = x + (f if kind.endswith("_moe") else tp_psum(f).astype(x.dtype))
+    return x, c
+
+
 def _block_decode(kind: str, p: dict, x, cfg: ModelConfig, window, cache,
                   cur_pos, moe_impl: str):
     """x: (B, D) single-token representations."""
@@ -460,6 +481,34 @@ class Model:
         Returns per-row logits at the row's last valid position (the
         first-token logits once a request's final chunk lands) and the
         updated pools."""
+        x, new_pools = self._prefill_chunk_body(params, tokens, pools,
+                                                page_table, start, valid)
+        b, c = tokens.shape
+        last = jnp.clip(valid - 1, 0, c - 1)
+        x_last = x[jnp.arange(b), last]
+        logits = self._head(params, x_last[:, None, :])[:, 0]
+        return logits, new_pools
+
+    def prefill_chunk_scored_paged(self, params: dict, tokens: jnp.ndarray,
+                                   pools: list, page_table: jnp.ndarray,
+                                   start: jnp.ndarray, valid: jnp.ndarray
+                                   ) -> tuple[jnp.ndarray, jnp.ndarray, list]:
+        """Chunked paged prefill that also SCORES the chunk (prompt
+        logprobs): returns (last_logits (B, V), full_logits (B, C, V),
+        pools).  ``last_logits`` comes through exactly the same
+        last-position head shape as ``prefill_chunk_paged``, so a scored
+        admission samples the identical first token; ``full_logits`` feed
+        raw prompt-token scoring, where rounding parity doesn't matter."""
+        x, new_pools = self._prefill_chunk_body(params, tokens, pools,
+                                                page_table, start, valid)
+        b, c = tokens.shape
+        last = jnp.clip(valid - 1, 0, c - 1)
+        x_last = x[jnp.arange(b), last]
+        last_logits = self._head(params, x_last[:, None, :])[:, 0]
+        return last_logits, self._head(params, x), new_pools
+
+    def _prefill_chunk_body(self, params, tokens, pools, page_table, start,
+                            valid):
         cfg = self.cfg
         assert cfg.frontend is None, "chunked paged prefill serves tokens only"
         x = params["embed"][tokens]                        # (B, C, D)
@@ -483,22 +532,29 @@ class Model:
             else:
                 x, nc = jax.lax.scan(seg_step, x, (stack, pools[si]))
             new_pools.append(nc)
-        b, c = tokens.shape
-        last = jnp.clip(valid - 1, 0, c - 1)
-        x_last = x[jnp.arange(b), last]
-        logits = self._head(params, x_last[:, None, :])[:, 0]
-        return logits, new_pools
+        return x, new_pools
 
     def decode_step_paged(self, params: dict, tokens: jnp.ndarray,
                           pools: list, page_table: jnp.ndarray,
-                          pos: jnp.ndarray) -> tuple[jnp.ndarray, list]:
+                          pos: jnp.ndarray, valid: jnp.ndarray | None = None
+                          ) -> tuple[jnp.ndarray, list]:
         """One continuous-batching decode step over the slot batch.
 
         tokens: (B,) int32 (one per slot); pos: (B,) int32 per-slot ragged
         positions; page_table: (B, n_blocks) int32.  Inactive slots point
-        at the scratch page and are masked out by the caller."""
+        at the scratch page and are masked out by the caller.
+
+        Multi-token form (speculative verify / prompt scoring): tokens
+        (B, C) int32 of C *already-chosen* tokens per slot starting at
+        per-slot position ``pos`` with ``valid`` (B,) real rows (the rest
+        scatter to the scratch page) — returns (B, C, V) logits, one
+        next-token distribution per fed position, through the backends'
+        ``decode_multi_paged`` ragged-q_offset path."""
         cfg = self.cfg
         assert cfg.frontend != "audio", "encoder-only models have no decode step"
+        if tokens.ndim == 2:
+            return self._decode_multi_paged(params, tokens, pools, page_table,
+                                            pos, valid)
         x = params["embed"][tokens]
         x = shard_hint(x, "act_bd")
         new_pools = []
@@ -521,6 +577,69 @@ class Model:
                 x, nc = jax.lax.scan(seg_step, x, (stack, pools[si]))
             new_pools.append(nc)
         logits = self._head(params, x[:, None, :])[:, 0]
+        return logits, new_pools
+
+    def _decode_multi_paged(self, params: dict, tokens: jnp.ndarray,
+                            pools: list, page_table: jnp.ndarray,
+                            pos: jnp.ndarray, valid: jnp.ndarray | None
+                            ) -> tuple[jnp.ndarray, list]:
+        """(B, C) tokens at per-slot offsets -> (B, C, V) logits; the head
+        keeps EVERY position (the verify step scores all gamma+1 of them),
+        unlike chunked prefill's last-valid-only head.
+
+        On CPU the window is flattened into B*C VIRTUAL SLOTS and run
+        through the single-token decode program itself: each window token
+        becomes its own decode row with its own position and a copy of its
+        slot's page-table row, so every position's logits — and every KV
+        write — come out of literally the same compiled computation as
+        the non-speculative decode step, bit for bit (the greedy
+        byte-identity contract; a chunk-shaped (B, C, D) trace diverges at
+        bf16 ulp inside the scanned segments because XLA fuses the 3-D
+        carry differently).  Later window positions ARE already scattered
+        when an earlier query reads the pool, but the causal ``idx <=
+        pos`` mask assigns them exp(NEG_INF) == exact zero weight, which
+        is indistinguishable from their never having been written.  On
+        accelerators the chunk-shaped ``decode_multi_paged`` dispatch
+        runs instead: pages stream once per slot (not once per window
+        token), and the byte-contract doesn't span kernels there anyway.
+        """
+        from repro.kernels import on_cpu
+
+        b, c = tokens.shape
+        if valid is None:
+            valid = jnp.full((b,), c, jnp.int32)
+        if on_cpu():
+            ok = (jnp.arange(c)[None, :] < valid[:, None]).reshape(b * c)
+            vpt = jnp.where(ok[:, None],
+                            jnp.repeat(page_table, c, axis=0), 0)
+            vpos = (jnp.repeat(pos, c)
+                    + jnp.tile(jnp.arange(c, dtype=pos.dtype), b))
+            vpos = jnp.where(ok, vpos, 0)
+            logits, new_pools = self.decode_step_paged(
+                params, tokens.reshape(b * c), pools, vpt, vpos)
+            return logits.reshape(b, c, -1), new_pools
+        x = params["embed"][tokens]                        # (B, C, D)
+        x = shard_hint(x, "act_bsd")
+        new_pools = []
+        for si, seg in enumerate(self.plan):
+            stack = params["stacks"][si]
+
+            def seg_step(xc, layer, seg=seg):
+                ps, cs = layer
+                new_cs = []
+                for kind, p, cch in zip(seg.kinds, ps, cs):
+                    xc, nc = _block_decode_multi_paged(
+                        kind, p, xc, self.cfg, seg.window, cch, page_table,
+                        pos, valid, self.moe_impl)
+                    new_cs.append(nc)
+                return xc, tuple(new_cs)
+
+            if seg.reps == 1:
+                x, nc = seg_step(x, (stack, pools[si]))
+            else:
+                x, nc = jax.lax.scan(seg_step, x, (stack, pools[si]))
+            new_pools.append(nc)
+        logits = self._head(params, x)                     # (B, C, V)
         return logits, new_pools
 
     # ----- prefill -----

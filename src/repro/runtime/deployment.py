@@ -191,13 +191,25 @@ class DeploymentSpec:
         return jax.make_mesh((int(d), int(m)), ("data", "model"))
 
     # ---------------- resolution ----------------
-    def resolve(self, model, params=None, mesh=None) -> "ResolvedDeployment":
+    def resolve(self, model, params=None, mesh=None, *, draft=None,
+                draft_params=None, gamma: int = 8,
+                spec_accept_rate: float = 0.7) -> "ResolvedDeployment":
         """Turn the spec into runtime numbers for ``model``.
 
         ``params`` makes the weight budget exact (per-leaf bytes through
         the serve plan's partition specs); without it the footprint
         estimate is used.  ``mesh`` overrides the spec's mesh.
-        """
+
+        ``draft`` prices a speculative deployment: the draft's weights
+        join the capacity budget, every logical KV page carries BOTH
+        models' pool bytes (the draft's pages come out of the same
+        allocator), and the bandwidth model becomes per-WINDOW — gamma
+        draft steps (draft weight + draft KV stream) plus one verify step
+        (the target's decode stream: a q_len = gamma+1 verify reads the
+        same weight/KV bytes as a single decode step, the extra FLOPs are
+        free in a bandwidth-bound regime).  ``spec_accept_rate`` is the
+        modeled per-token acceptance probability alpha; a window emits
+        ``alpha(1-alpha^gamma)/(1-alpha) + 1`` expected tokens."""
         from repro.parallel.plan import make_paged_serve_plan, \
             paged_kv_token_bytes
 
@@ -212,6 +224,7 @@ class DeploymentSpec:
         fp = compute_footprint(cfg)
         wbits = (formats.bits_per_element(self.weight_format)
                  if self.weight_format else None)
+        per = (wbits / 8.0) if wbits else 2.0              # bf16 default
 
         # -- weights, per device --
         if params is not None:
@@ -224,19 +237,41 @@ class DeploymentSpec:
             # replicated in the serve plan, and KV-replicated wk/wv keep
             # kv_repl copies); overstating weights only shrinks the KV
             # pool, never passes an infeasible deployment.
-            per = (wbits / 8.0) if wbits else 2.0          # bf16 default
             weight_bytes = fp.total_params * per
+
+        # -- speculative draft: weights + per-page pool bytes --
+        cache_dtype = self.cache_dtype if self.cache_dtype is not None \
+            else jnp.bfloat16
+        draft_weight_bytes = 0.0
+        draft_kv_token = 0
+        dfp = dplan = None
+        dtp = 1
+        if draft is not None:
+            dfp = compute_footprint(draft.cfg)
+            dkv_repl = 1
+            if mesh is not None:
+                dplan = make_paged_serve_plan(draft.cfg, mesh,
+                                              reduce=self.tp_reduce)
+                dtp, dkv_repl = dplan.tp, dplan.kv_repl
+            if draft_params is not None:
+                draft_weight_bytes = self._weight_bytes_exact(
+                    draft_params, dplan, dtp, dkv_repl)
+            else:
+                draft_weight_bytes = dfp.total_params * per
+            draft_kv_token = paged_kv_token_bytes(
+                draft, tp=dtp, kv_repl=dkv_repl, cache_dtype=cache_dtype)
+            weight_bytes += draft_weight_bytes
 
         # -- workspace + KV budget --
         workspace = self.workspace_fraction * dev.capacity_bytes
         kv_budget = dev.capacity_bytes - weight_bytes - workspace
-        cache_dtype = self.cache_dtype if self.cache_dtype is not None \
-            else jnp.bfloat16
         # measured from an actual tiny pool at this dtype, so quantized
         # fp8/int8 pools price codes + scale metadata — the bytes the
-        # engine allocates, not a nominal itemsize
+        # engine allocates, not a nominal itemsize.  With a draft, every
+        # logical page costs both pool sets.
         kv_token = paged_kv_token_bytes(model, tp=tp, kv_repl=kv_repl,
-                                        cache_dtype=cache_dtype)
+                                        cache_dtype=cache_dtype) \
+            + draft_kv_token
         max_blocks = -(-self.max_len // self.page_size)
         page_bytes = kv_token * self.page_size
         if kv_budget < page_bytes * max_blocks:
@@ -275,7 +310,29 @@ class DeploymentSpec:
             j_per_tok = stream * 8.0 * dev.energy_pj_per_bit * 1e-12 \
                 / num_slots
 
+        # -- speculative window model --
+        spec_kwargs = {}
+        if draft is not None:
+            g = int(gamma)
+            a = min(max(float(spec_accept_rate), 0.0), 1.0)
+            draft_active = dfp.active_params * per / dtp
+            draft_kv_ctx = max(draft_kv_token * ctx, 1.0)
+            draft_step_s = (draft_active + num_slots * draft_kv_ctx) \
+                / dev.decode_bw
+            window_s = g * draft_step_s + step_s
+            expected = float(g) if a >= 1.0 \
+                else a * (1.0 - a ** g) / (1.0 - a)
+            spec_kwargs = dict(
+                draft_weight_bytes_per_device=draft_weight_bytes,
+                draft_kv_token_bytes=draft_kv_token,
+                spec_gamma=g, spec_accept_rate=a,
+                spec_expected_accepted=expected,
+                spec_window_seconds=window_s,
+                spec_tokens_per_s_ceiling=(num_slots * (expected + 1.0)
+                                           / window_s))
+
         return ResolvedDeployment(
+            **spec_kwargs,
             spec=self, device=dev, mesh=mesh, tp=tp, kv_repl=kv_repl,
             tp_reduce=self.tp_reduce, cache_dtype=cache_dtype,
             weight_bytes_per_device=weight_bytes,
@@ -356,6 +413,14 @@ class ResolvedDeployment:
     step_seconds: float
     tokens_per_s_ceiling: float
     modeled_j_per_token: float | None = None
+    # speculative decoding (resolve(draft=...); None when not speculative)
+    draft_weight_bytes_per_device: float | None = None
+    draft_kv_token_bytes: int | None = None
+    spec_gamma: int | None = None
+    spec_accept_rate: float | None = None
+    spec_expected_accepted: float | None = None   # per window, modeled
+    spec_window_seconds: float | None = None      # gamma drafts + 1 verify
+    spec_tokens_per_s_ceiling: float | None = None
 
     @property
     def pool_bytes_per_device(self) -> int:
@@ -387,6 +452,15 @@ class ResolvedDeployment:
             lines.append(f"  energy    "
                          f"{self.modeled_j_per_token * 1e3:.3f} mJ/token "
                          f"({d.energy_pj_per_bit:.2f} pJ/bit memory)")
+        if self.spec_gamma is not None:
+            lines.append(
+                f"  spec      gamma={self.spec_gamma} "
+                f"(+{_fmt_bytes(self.draft_weight_bytes_per_device)} draft "
+                f"weights, +{_fmt_bytes(self.draft_kv_token_bytes)}/tok "
+                f"draft KV) -> {self.spec_expected_accepted:.2f} accepted "
+                f"per window at alpha={self.spec_accept_rate:.2f}, "
+                f"{self.spec_tokens_per_s_ceiling:.1f} tok/s ceiling "
+                f"({self.spec_window_seconds * 1e3:.2f} ms/window)")
         return "\n".join(lines)
 
     def as_dict(self) -> dict:
@@ -408,6 +482,11 @@ class ResolvedDeployment:
             "tokens_per_s_ceiling": self.tokens_per_s_ceiling,
             "step_seconds": self.step_seconds,
             "modeled_j_per_token": self.modeled_j_per_token,
+            "spec_gamma": self.spec_gamma,
+            "spec_accept_rate": self.spec_accept_rate,
+            "spec_expected_accepted": self.spec_expected_accepted,
+            "spec_window_seconds": self.spec_window_seconds,
+            "spec_tokens_per_s_ceiling": self.spec_tokens_per_s_ceiling,
         }
 
 

@@ -37,6 +37,7 @@ to run the same code distributed; CPU tests run them single-device.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Any, Callable, Iterable
 
@@ -54,6 +55,7 @@ from repro.runtime import sampling
 from repro.runtime.sampling import SamplingParams
 from repro.runtime.kv_cache import PagedKVCache
 from repro.runtime.scheduler import RUNNING, Request, Scheduler
+from repro.runtime.speculative import SpeculativeConfig, _check_rewindable
 
 
 @dataclasses.dataclass
@@ -79,6 +81,7 @@ class RequestOutput:
     finished: bool = False
     finish_reason: str | None = None
     logprobs: list[float] | None = None    # cumulative, iff requested
+    prompt_logprobs: list[float] | None = None   # finished records, iff asked
     metrics: dict = dataclasses.field(default_factory=dict)
 
 
@@ -237,8 +240,13 @@ class ContinuousStats:
     prompt_tokens: int = 0        # prompt tokens across all admissions
     prefix_hit_tokens: int = 0    # prompt tokens served from shared pages
     cow_events: int = 0
+    # -- speculative decoding (all zero when speculation is off) --
+    spec_windows: int = 0         # draft/verify windows across all requests
+    spec_drafted: int = 0         # draft proposals made (gamma per window)
+    spec_accepted: int = 0        # draft proposals accepted
     per_request: dict = dataclasses.field(default_factory=dict)
-    # per_request[rid] = {"preemptions", "chunks", "shared_tokens", "ttft"}
+    # per_request[rid] = {"preemptions", "chunks", "shared_tokens", "ttft",
+    #                     "spec_windows", "spec_accepted"}
     outputs: dict = dataclasses.field(default_factory=dict)
     # outputs[rid] = final RequestOutput (finish_reason, logprobs, timing)
 
@@ -249,6 +257,17 @@ class ContinuousStats:
     @property
     def prefix_hit_rate(self) -> float:
         return self.prefix_hit_tokens / max(self.prompt_tokens, 1)
+
+    @property
+    def accepted_per_window(self) -> float:
+        """Mean draft proposals accepted per window (0..gamma); each window
+        also emits one corrected/bonus token on top."""
+        return self.spec_accepted / max(self.spec_windows, 1)
+
+    @property
+    def spec_wasted(self) -> int:
+        """Draft tokens proposed but rejected — the speculation overhead."""
+        return self.spec_drafted - self.spec_accepted
 
     def ttft_quantiles(self) -> tuple[float, float, float] | None:
         """(p50, p99, mean) time-to-first-token in seconds, or None."""
@@ -299,7 +318,8 @@ class ContinuousServeEngine:
                  enable_prefix_cache: bool = True,
                  max_top_k: int = sampling.MAX_TOP_K,
                  mesh=None, tp_reduce: str = "auto",
-                 max_decode_slots: int | None = None):
+                 max_decode_slots: int | None = None,
+                 speculative: SpeculativeConfig | None = None):
         if model.cfg.frontend is not None:
             raise NotImplementedError(
                 "continuous batching serves token frontends only")
@@ -309,7 +329,17 @@ class ContinuousServeEngine:
         # hardware point; explicit kwargs override individual values --
         self.deployment = None
         if spec is not None:
-            dep = spec.resolve(model, params=params, mesh=mesh)
+            rkw = {}
+            if speculative is not None:
+                # price the draft into the budget: weights join the
+                # capacity split, and every logical KV page carries both
+                # pool sets' bytes (self-draft duplicates the target's)
+                rkw = dict(draft=speculative.draft_model or model,
+                           draft_params=(speculative.draft_params
+                                         if speculative.draft_model
+                                         is not None else params),
+                           gamma=speculative.gamma)
+            dep = spec.resolve(model, params=params, mesh=mesh, **rkw)
             self.deployment = dep
             mesh = dep.mesh
             num_slots = dep.num_slots if num_slots is None else num_slots
@@ -389,27 +419,119 @@ class ContinuousServeEngine:
                 self._local_model.decode_step_paged, n_extra=1)   # pos
             self._paged_chunk = self._shard_paged(
                 self._local_model.prefill_chunk_paged, n_extra=2)  # start, valid
+            self._paged_chunk_scored = self._shard_paged(
+                self._local_model.prefill_chunk_scored_paged, n_extra=2,
+                n_out=2)
         else:
             if weight_format is not None:
                 self.params = quantize_params(params, weight_format)
             self._paged_decode = model.decode_step_paged
             self._paged_chunk = model.prefill_chunk_paged
+            self._paged_chunk_scored = model.prefill_chunk_scored_paged
+        # -- speculative decoding: per-slot draft state is a SECOND set of
+        # pool leaves over the SAME logical page-id space (one allocator,
+        # one set of page tables), so prefix sharing, copy-on-write,
+        # preemption, and defrag act on target and draft in lockstep --
+        self.spec = speculative
+        self._gamma = int(speculative.gamma) if speculative is not None else 0
+        self._draft_plan = None
+        if speculative is not None:
+            _check_rewindable(model)
+            dm = speculative.draft_model
+            if dm is None:
+                # self-draft: same weights propose and verify (acceptance
+                # ~1; tests and smoke runs).  The draft still keeps its own
+                # pool leaves — its scan-ahead KV writes must not clobber
+                # the target's verified entries.
+                self._draft_params = self.params
+                self._draft_pool_model = self._pool_model
+                self._draft_plan = self.serve_plan
+                self._paged_draft_decode = self._paged_decode
+                self._paged_draft_chunk = self._paged_chunk
+            else:
+                if dm.cfg.padded_vocab != model.cfg.padded_vocab:
+                    raise ValueError(
+                        "draft and target must share a vocabulary: "
+                        f"{dm.cfg.padded_vocab} vs {model.cfg.padded_vocab}")
+                dparams = speculative.draft_params
+                if dparams is None:
+                    raise ValueError("SpeculativeConfig.draft_params is "
+                                     "required when draft_model is set")
+                self._draft_pool_model = dm
+                if mesh is not None:
+                    from repro.parallel.plan import make_paged_serve_plan
+                    self._draft_plan = make_paged_serve_plan(
+                        dm.cfg, mesh, reduce=tp_reduce)
+                    dlocal = Model(self._draft_plan.local_config(dm.cfg),
+                                   moe_impl=dm.moe_impl)
+                    if self._draft_plan.kv_repl > 1:
+                        dparams = self._draft_plan.prepare_params(dparams,
+                                                                  dm.cfg)
+                        self._draft_pool_model = Model(
+                            self._draft_plan.pool_config(dm.cfg),
+                            moe_impl=dm.moe_impl)
+                    if weight_format is not None:
+                        dparams = quantize_params(dparams, weight_format)
+                    self._draft_params = jax.device_put(
+                        dparams, self._draft_plan.param_shardings(dparams))
+                    dspecs = self._draft_plan.param_specs(dparams)
+                    dpool = self._draft_plan.pool_specs(
+                        self._draft_pool_model, cache_dtype=self.cache_dtype)
+                    self._paged_draft_decode = self._shard_paged(
+                        dlocal.decode_step_paged, n_extra=1,
+                        plan=self._draft_plan, param_specs=dspecs,
+                        pool_specs=dpool)
+                    self._paged_draft_chunk = self._shard_paged(
+                        dlocal.prefill_chunk_paged, n_extra=2,
+                        plan=self._draft_plan, param_specs=dspecs,
+                        pool_specs=dpool)
+                else:
+                    if weight_format is not None:
+                        dparams = quantize_params(dparams, weight_format)
+                    self._draft_params = dparams
+                    self._paged_draft_decode = dm.decode_step_paged
+                    self._paged_draft_chunk = dm.prefill_chunk_paged
+            # multi-token verify runs through the TARGET's paged decode
+            # path with q_len = gamma + 1 (same dispatch, not a new kernel)
+            self._paged_multi = (
+                self._shard_paged(self._local_model.decode_step_paged,
+                                  n_extra=2)                 # pos, valid
+                if mesh is not None else model.decode_step_paged)
+            self._spec_draft = jax.jit(self._spec_draft_impl,
+                                       donate_argnums=(1,))
+            self._spec_verify = jax.jit(self._spec_verify_impl,
+                                        donate_argnums=(1, 2))
+            self._draft_chunk = jax.jit(self._draft_chunk_impl,
+                                        donate_argnums=(1,))
+            self._copy_page_draft = jax.jit(
+                functools.partial(self._copy_page_impl,
+                                  self._draft_pool_model.plan),
+                donate_argnums=(0,))
         self._step_fn = jax.jit(self._step_impl, donate_argnums=(1, 2))
         self._chunk = jax.jit(self._chunk_impl, donate_argnums=(1,))
-        self._copy_page = jax.jit(self._copy_page_impl, donate_argnums=(0,))
+        self._chunk_scored = jax.jit(self._chunk_scored_impl,
+                                     donate_argnums=(1,))
+        self._copy_page = jax.jit(
+            functools.partial(self._copy_page_impl, self._pool_model.plan),
+            donate_argnums=(0,))
         self._sched: Scheduler | None = None
 
     # -- sharded execution --------------------------------------------------
-    def _shard_paged(self, fn, *, n_extra: int):
+    def _shard_paged(self, fn, *, n_extra: int, n_out: int = 1, plan=None,
+                     param_specs=None, pool_specs=None):
         """Wrap a paged model fn (params, tokens, pools, table, *extras) ->
-        (logits, pools) in one manual shard_map over the serve plan's TP
-        axis: params/pools enter pre-sliced per their specs, the body runs
-        the LOCAL-geometry model (its ``tp_psum`` marks close each
-        column/row pair), and logits come back replicated.  Page tables,
-        positions, and every sampling tensor stay replicated data, so the
-        jit signature is identical to the single-device path — no extra
-        compiles per mesh shape."""
-        sp = self.serve_plan
+        (*n_out replicated outputs, pools) in one manual shard_map over the
+        serve plan's TP axis: params/pools enter pre-sliced per their
+        specs, the body runs the LOCAL-geometry model (its ``tp_psum``
+        marks close each column/row pair), and logits come back
+        replicated.  Page tables, positions, and every sampling tensor
+        stay replicated data, so the jit signature is identical to the
+        single-device path — no extra compiles per mesh shape.  The
+        speculative draft model passes its own plan/specs; the target's
+        are the default."""
+        sp = plan if plan is not None else self.serve_plan
+        param_specs = self._param_specs if param_specs is None else param_specs
+        pool_specs = self._pool_specs if pool_specs is None else pool_specs
 
         def body(params, tokens, pools, table, *extras):
             with hints.suspend_hints(), hints.manual_tp_axis(sp.axis,
@@ -419,9 +541,9 @@ class ContinuousServeEngine:
         rep = P()
         return shard_map(
             body, mesh=sp.mesh,
-            in_specs=(self._param_specs, rep, self._pool_specs, rep)
+            in_specs=(param_specs, rep, pool_specs, rep)
             + (rep,) * n_extra,
-            out_specs=(rep, self._pool_specs),
+            out_specs=(rep,) * n_out + (pool_specs,),
             axis_names={sp.axis}, check_vma=False)
 
     # -- jitted pieces ------------------------------------------------------
@@ -458,21 +580,183 @@ class ContinuousServeEngine:
                                           presence=presence)
         return first, lp, pools
 
-    def _copy_page_impl(self, pools, dst, src):
-        """pools[dst] = pools[src] on every pool leaf (copy-on-write)."""
+    def _chunk_scored_impl(self, params, pools, presence, tokens, page_table,
+                           start, valid, tgt, temp, topk, topp, minp, seed,
+                           rep, bias_ids, bias_vals):
+        """The prompt-logprobs variant of ``_chunk_impl``: the chunk's full
+        (B, C, V) logits additionally score the NEXT prompt token at every
+        chunk position (``tgt[i, j] = prompt[start + j + 1]``, host-built).
+        The first-token draw still goes through the last-position head
+        logits, so scored admissions sample the identical first token."""
+        last_logits, full, pools = self._paged_chunk_scored(
+            params, tokens, pools, page_table, start, valid)
+        first, lp = sampling.sample_slots(last_logits, temp, topk, topp, minp,
+                                          seed, start + valid,
+                                          max_top_k=self.max_top_k,
+                                          rep_penalty=rep, bias_ids=bias_ids,
+                                          bias_vals=bias_vals,
+                                          presence=presence)
+        lf = full.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lf, axis=-1)
+        plp = jnp.take_along_axis(lf, tgt[..., None], axis=-1)[..., 0] - lse
+        return first, lp, plp, pools
+
+    def _draft_chunk_impl(self, dparams, dpools, tokens, page_table, start,
+                          valid):
+        """Mirror one prefill chunk into the draft pools (logits dropped):
+        after admission both pool sets hold the prompt's KV, so the first
+        draft window attends over the full history."""
+        _, dpools = self._paged_draft_chunk(dparams, tokens, dpools,
+                                            page_table, start, valid)
+        return dpools
+
+    def _spec_draft_impl(self, dparams, dpools, presence, tokens, pos,
+                         page_table, temp, topk, topp, minp, seed, rep,
+                         bias_ids, bias_vals):
+        """One draft pass: gamma chained single-token decode steps through
+        the draft pools, each drawing its proposal from the SAME
+        processed/filtered distribution the target verifies against
+        (recorded as q), from the request's tagged TAG_PROPOSE stream —
+        window randomness is keyed by absolute token index, so a
+        preemption restart replays identical windows.
+
+        The trailing KV-only step backfills the draft cache for the last
+        proposal (position pos + gamma): on a full accept the next
+        window's draft must see the whole history or it attends over a
+        hole and diverges from the target even when the models are
+        identical.  Presence mutations stay draft-local (the carry is
+        dropped): proposals are not emissions until the verify step
+        accepts them."""
+        g = self._gamma
+        rows = jnp.arange(tokens.shape[0])
+
+        def dstep(carry, j):
+            tok, pools, pres = carry
+            pres = pres.at[rows, tok].set(True)
+            logits, pools = self._paged_draft_decode(dparams, tok, pools,
+                                                     page_table, pos + j)
+            lg = sampling.apply_processors(logits, rep_penalty=rep,
+                                           bias_ids=bias_ids,
+                                           bias_vals=bias_vals, presence=pres)
+            q = sampling.slot_dist(lg, temp, topk, topp, minp,
+                                   max_top_k=self.max_top_k)
+            u = sampling.spec_uniform(seed, pos + j + 1, sampling.TAG_PROPOSE)
+            nxt = sampling.slot_draw(q, u)
+            return (nxt, pools, pres), (nxt, q)
+
+        (last, dpools, _), (prop, q_dists) = jax.lax.scan(
+            dstep, (tokens, dpools, presence), jnp.arange(g))
+        _, dpools = self._paged_draft_decode(dparams, last, dpools,
+                                             page_table, pos + g)
+        return jnp.moveaxis(prop, 0, 1), q_dists, dpools
+
+    def _spec_verify_impl(self, params, pools, presence, tokens, prop,
+                          q_dists, pos, page_table, temp, topk, topp, minp,
+                          seed, rep, bias_ids, bias_vals):
+        """One verify pass: the target scores [last_emitted, prop_1..g] as
+        a single multi-token paged decode (q_len = gamma + 1 through
+        ``decode_step_paged``'s 2-D form — bit-identical per-position
+        logits to sequential decode on CPU), then applies the stochastic
+        acceptance rule of Leviathan et al. per slot:
+
+          accept prop_j while u_j < min(1, p(prop_j) / q(prop_j)); at the
+          first rejection resample from max(p - q, 0) normalized; on a
+          full accept draw the bonus token from p at the extra position.
+
+        p and q are both ``apply_processors`` + ``slot_dist`` outputs with
+        the RUNNING presence threaded position by position, so acceptance
+        is correct under per-slot repetition penalty / logit bias /
+        filtering.  Greedy slots (temperature <= 0) get exact one-hots on
+        both sides: proposals accept iff they equal the target argmax and
+        the correction IS the target argmax — byte-identical to the
+        non-speculative engine.  Rejected positions need no KV rollback:
+        their pool writes sit at slot positions > the new ``pos`` and are
+        masked (then overwritten) by the next window.
+
+        Returns (tokens (B, gamma+1), n_emit (B,), logprobs (B, gamma+1),
+        pools, presence); entries past n_emit are padding."""
+        g = self._gamma
+        b = tokens.shape[0]
+        rows = jnp.arange(b)
+        t_in = jnp.concatenate([tokens[:, None], prop], axis=1)  # (B, g+1)
+        logits, pools = self._paged_multi(
+            params, t_in, pools, page_table, pos,
+            jnp.full((b,), g + 1, jnp.int32))
+
+        def pstep(pres, j):
+            # token j joins the stream before position j's draw — the
+            # penalty sees prompt + everything emitted through pos + j
+            pres = pres.at[rows, t_in[:, j]].set(True)
+            lg = sampling.apply_processors(logits[:, j], rep_penalty=rep,
+                                           bias_ids=bias_ids,
+                                           bias_vals=bias_vals, presence=pres)
+            p = sampling.slot_dist(lg, temp, topk, topp, minp,
+                                   max_top_k=self.max_top_k)
+            glp = jnp.max(lg, axis=-1) - jax.nn.logsumexp(lg, axis=-1)
+            return pres, (p, glp)
+
+        _, (p_dists, glps) = jax.lax.scan(pstep, presence, jnp.arange(g + 1))
+        jdx = jnp.arange(g)
+        p_prop = p_dists[jdx[:, None], rows[None, :], prop.T]    # (g, B)
+        q_prop = q_dists[jdx[:, None], rows[None, :], prop.T]
+        u = sampling.spec_uniform(seed[None, :],
+                                  pos[None, :] + jdx[:, None] + 1,
+                                  sampling.TAG_ACCEPT)
+        accept = u < jnp.minimum(1.0, p_prop / jnp.maximum(q_prop, 1e-20))
+        n_acc = jnp.where(jnp.any(~accept, axis=0),
+                          jnp.argmax(~accept, axis=0), g)        # (B,)
+        # correction (first rejection) / bonus (full accept) distribution
+        q_pad = jnp.concatenate([q_dists, jnp.zeros_like(q_dists[:1])],
+                                axis=0)
+        p_at = p_dists[n_acc, rows]                              # (B, V)
+        resid = jnp.maximum(p_at - q_pad[n_acc, rows], 0.0)
+        rs = jnp.sum(resid, axis=-1, keepdims=True)
+        corr = jnp.where((n_acc[:, None] == g) | (rs <= 1e-20), p_at,
+                         resid / jnp.maximum(rs, 1e-20))
+        uc = sampling.spec_uniform(seed, pos + n_acc + 1,
+                                   sampling.TAG_CORRECT)
+        corrected = sampling.slot_draw(corr, uc)
+        jcols = jnp.arange(g + 1)
+        out = jnp.where(jcols[None, :] < n_acc[:, None],
+                        jnp.concatenate([prop, prop[:, :1]], axis=1), 0)
+        out = jnp.where(jcols[None, :] == n_acc[:, None],
+                        corrected[:, None], out)
+        # logprobs under the target's filtered per-position distribution;
+        # greedy rows report the exact max-logit logprob ``sample_slots``
+        # would (same floats: max == top_k[0], same logsumexp)
+        pd = jnp.moveaxis(p_dists, 0, 1)                         # (B, g+1, V)
+        lp_dist = jnp.log(jnp.maximum(
+            jnp.take_along_axis(pd, out[..., None], axis=-1)[..., 0], 1e-38))
+        lp = jnp.where((temp <= 0.0)[:, None], jnp.moveaxis(glps, 0, 1),
+                       lp_dist)
+        # presence gains the EMITTED tokens only (rejected proposals were
+        # never part of the stream); masked columns re-scatter the first
+        # emitted token — a harmless duplicate
+        emit_ok = jcols[None, :] <= n_acc[:, None]
+        scat = jnp.where(emit_ok, out, out[:, :1])
+        presence = presence.at[rows[:, None], scat].set(True)
+        return out, n_acc + 1, lp, pools, presence
+
+    @staticmethod
+    def _copy_page_impl(plan, pools, dst, src):
+        """pools[dst] = pools[src] on every pool leaf (copy-on-write).
+        ``plan`` is bound per pool set (functools.partial): the target and
+        the speculative draft pools each get a copy jit over their own
+        segment layout."""
         new_pools = []
-        for si, seg in enumerate(self._pool_model.plan):
+        for si, seg in enumerate(plan):
             copy = ((lambda a: a.at[dst].set(a[src])) if seg.reps == 1
                     else (lambda a: a.at[:, dst].set(a[:, src])))
             new_pools.append(tuple(
                 {k: copy(v) for k, v in pool.items()} for pool in pools[si]))
         return new_pools
 
-    def _permute_pools(self, pools, gather):
+    @staticmethod
+    def _permute_pools(plan, pools, gather):
         """Apply a defrag page permutation to every pool leaf."""
         gather = jnp.asarray(gather)
         new_pools = []
-        for si, seg in enumerate(self._pool_model.plan):
+        for si, seg in enumerate(plan):
             axis = 0 if seg.reps == 1 else 1
             new_pools.append(tuple(
                 {k: jnp.take(v, gather, axis=axis) for k, v in pool.items()}
@@ -506,9 +790,19 @@ class ContinuousServeEngine:
                 self._pools,
                 self.serve_plan.pool_shardings(self._pool_model,
                                                cache_dtype=self.cache_dtype))
+        if self.spec is not None:
+            self._draft_pools = self._draft_pool_model.init_paged_cache(
+                self.num_pages, self.page_size, dtype=self.cache_dtype)
+            if self._draft_plan is not None:
+                self._draft_pools = jax.device_put(
+                    self._draft_pools,
+                    self._draft_plan.pool_shardings(
+                        self._draft_pool_model,
+                        cache_dtype=self.cache_dtype))
         self._t0 = time.monotonic()
         self._steps, self._occ_sum = 0, 0.0
         self._n_chunks, self._prefill_tokens = 0, 0
+        self._spec_windows, self._spec_drafted, self._spec_accepted = 0, 0, 0
         self._requests: list[Request] = []
         self.defrag_every = 0      # run-scoped; run() re-applies its arg
 
@@ -559,11 +853,16 @@ class ContinuousServeEngine:
             raise ValueError(f"request {req.rid}: top_k={req.sampling.top_k} "
                              f"exceeds the engine's static "
                              f"max_top_k={self.max_top_k}")
-        if req.prompt_len + req.max_new_tokens > self.max_blocks * self.page_size:
+        # speculative windows scatter KV up to gamma positions past the
+        # last emitted token, so a request needs that much page slack on
+        # top of its own length
+        if (req.prompt_len + req.max_new_tokens + self._gamma
+                > self.max_blocks * self.page_size):
             raise ValueError(
                 f"request {req.rid}: prompt {req.prompt_len} + "
-                f"{req.max_new_tokens} new tokens exceeds max_len "
-                f"{self.max_blocks * self.page_size}")
+                f"{req.max_new_tokens} new tokens"
+                + (f" + gamma {self._gamma}" if self._gamma else "")
+                + f" exceeds max_len {self.max_blocks * self.page_size}")
         self._requests.append(req)
         self._sched.submit([req])
 
@@ -581,6 +880,9 @@ class ContinuousServeEngine:
                    "chunks": req.chunks, "shared_tokens": req.shared_tokens}
         if finished:
             metrics["finish_time"] = req.finish_time
+        if self.spec is not None:
+            metrics["spec_windows"] = req.spec_windows
+            metrics["spec_accepted"] = req.spec_accepted
         return RequestOutput(
             rid=req.rid, new_token_ids=list(new),
             token_ids=list(req.tokens) if finished else [],
@@ -588,6 +890,9 @@ class ContinuousServeEngine:
             finish_reason=req.finish_reason if finished else None,
             logprobs=(list(req.logprobs)
                       if finished and req.sampling.logprobs else None),
+            prompt_logprobs=(list(req.prompt_logprobs)
+                             if finished and req.sampling.prompt_logprobs
+                             else None),
             metrics=metrics)
 
     def _progress(self, req: Request, outs: list[RequestOutput]) -> None:
@@ -637,17 +942,42 @@ class ContinuousServeEngine:
         pres = np.zeros((bucket, self._vocab), np.bool_)
         for i, r in enumerate(pre):
             pres[i] = self._presence_np[r.slot]
-        first, lp, self._pools = self._chunk(
-            self.params, self._pools, jnp.asarray(pres), jnp.asarray(tokens),
-            jnp.asarray(tables), jnp.asarray(start), jnp.asarray(valid),
-            *(jnp.asarray(a) for a in samp),
-            *(jnp.asarray(a) for a in extras))
+        sargs = (jnp.asarray(pres), jnp.asarray(tokens), jnp.asarray(tables),
+                 jnp.asarray(start), jnp.asarray(valid))
+        pargs = (*(jnp.asarray(a) for a in samp),
+                 *(jnp.asarray(a) for a in extras))
+        scored = any(r.sampling.prompt_logprobs for r in pre)
+        plp = None
+        if scored:
+            # tgt[i, j] = the prompt token position start+j predicts (0-pad
+            # past the prompt — those scores are dropped below)
+            tgt = np.zeros((bucket, c), np.int32)
+            for i, r in enumerate(pre):
+                nxt = r.prompt[int(start[i]) + 1:int(start[i]) + int(valid[i]) + 1]
+                tgt[i, :len(nxt)] = nxt
+            first, lp, plp, self._pools = self._chunk_scored(
+                self.params, self._pools, *sargs, jnp.asarray(tgt), *pargs)
+            plp = np.asarray(plp)
+        else:
+            first, lp, self._pools = self._chunk(
+                self.params, self._pools, *sargs, *pargs)
+        if self.spec is not None:
+            # the draft pools take the same chunk (same tables/offsets)
+            self._draft_pools = self._draft_chunk(
+                self._draft_params, self._draft_pools, *sargs[1:])
         first = np.asarray(first)                      # device sync
         lp = np.asarray(lp)
         for i, r in enumerate(pre):
             r.chunks += 1
             self._n_chunks += 1
             self._prefill_tokens += int(valid[i])
+            if plp is not None and r.sampling.prompt_logprobs:
+                # position start+j scores prompt[start+j+1]; the final
+                # chunk's last position predicts the FIRST GENERATED token,
+                # which is not a prompt logprob — drop it
+                n = int(valid[i])
+                keep = n - 1 if int(start[i]) + n == r.prompt_len else n
+                r.prompt_logprobs.extend(float(x) for x in plp[i, :keep])
             r.pos += int(valid[i])
             if r.pos == r.prompt_len:                  # prefill complete
                 r.state = RUNNING
@@ -684,22 +1014,36 @@ class ContinuousServeEngine:
             self._run_prefill_chunks(outs)
         if not sched.decoding():
             return outs
-        # -- capacity + copy-on-write barrier for the decode writes --
+        # -- capacity + copy-on-write barrier for the decode writes; a
+        # speculative window scatters KV at pos..pos+gamma, so the whole
+        # window's pages are backed (and un-shared) before it starts —
+        # windows never preempt or allocate midway --
         for req in sched.decoding():
             if sched.running.get(req.slot) is req:  # not yet preempted
-                if sched.ensure_capacity(req):
-                    moved = self.cache.cow(req.slot,
-                                           req.pos // self.page_size)
-                    if moved is not None:
-                        self._pools = self._copy_page(self._pools, moved[1],
-                                                      moved[0])
+                upto = req.pos + self._gamma if self.spec is not None else None
+                if sched.ensure_capacity(req, upto=upto):
+                    for blk in range(req.pos // self.page_size,
+                                     (req.pos + self._gamma)
+                                     // self.page_size + 1):
+                        moved = self.cache.cow(req.slot, blk)
+                        if moved is not None:
+                            self._pools = self._copy_page(
+                                self._pools, moved[1], moved[0])
+                            if self.spec is not None:
+                                self._draft_pools = self._copy_page_draft(
+                                    self._draft_pools, moved[1], moved[0])
         decoding = sched.decoding()
         if not decoding:
             return outs
         if self.defrag_every and (self._steps + 1) % self.defrag_every == 0:
             gather = self.cache.defrag()
             if gather is not None:
-                self._pools = self._permute_pools(self._pools, gather)
+                self._pools = self._permute_pools(self._pool_model.plan,
+                                                  self._pools, gather)
+                if self.spec is not None:
+                    self._draft_pools = self._permute_pools(
+                        self._draft_pool_model.plan, self._draft_pools,
+                        gather)
 
         tokens = np.zeros((self.num_slots,), np.int32)
         pos = np.zeros((self.num_slots,), np.int32)
@@ -713,6 +1057,8 @@ class ContinuousServeEngine:
         if self._presence_dirty:       # admissions/releases since last step
             self._presence = self._presence_to_device(self._presence_np)
             self._presence_dirty = False
+        if self.spec is not None:
+            return self._spec_window(decoding, tokens, pos, step_table, outs)
         nxt, lp, self._pools, self._presence = self._step_fn(
             self.params, self._pools, self._presence, jnp.asarray(tokens),
             jnp.asarray(pos), jnp.asarray(step_table), *self._slots.arrays())
@@ -729,6 +1075,54 @@ class ContinuousServeEngine:
             if req.sampling.logprobs:
                 req.logprobs.append(float(lp[req.slot]))
             req.pos += 1
+            self._progress(req, outs)
+        return outs
+
+    def _spec_window(self, decoding, tokens, pos, step_table,
+                     outs: list[RequestOutput]) -> list[RequestOutput]:
+        """One draft/verify window over the decoding slots: gamma jitted
+        draft steps (one scan) + one jitted multi-token verify, emitting
+        1..gamma+1 tokens per slot.  Two compiled programs total — slot
+        mix, gamma-window restarts after preemption, and admissions in
+        between never retrace."""
+        sched = self._sched
+        tok_j, pos_j = jnp.asarray(tokens), jnp.asarray(pos)
+        tab_j = jnp.asarray(step_table)
+        sargs = self._slots.arrays()
+        prop, q_dists, self._draft_pools = self._spec_draft(
+            self._draft_params, self._draft_pools, self._presence,
+            tok_j, pos_j, tab_j, *sargs)
+        out, n_emit, lp, self._pools, self._presence = self._spec_verify(
+            self.params, self._pools, self._presence, tok_j, prop, q_dists,
+            pos_j, tab_j, *sargs)
+        out = np.asarray(out)                          # device sync
+        n_emit = np.asarray(n_emit)
+        lp = np.asarray(lp)
+        self._occ_sum += len(decoding) / self.num_slots
+        self._steps += 1
+        for req in decoding:
+            if sched.running.get(req.slot) is not req:
+                continue
+            n = int(n_emit[req.slot])
+            req.spec_windows += 1
+            req.spec_accepted += n - 1
+            self._spec_windows += 1
+            self._spec_drafted += self._gamma
+            self._spec_accepted += n - 1
+            took = 0
+            for j in range(n):
+                t = int(out[req.slot, j])
+                req.tokens.append(t)
+                self._presence_np[req.slot, t] = True
+                if req.sampling.logprobs:
+                    req.logprobs.append(float(lp[req.slot, j]))
+                took += 1
+                # stop/length can land mid-window: the tail tokens are
+                # never emitted, and the finished slot's presence row
+                # resets on release, so the device copy stays consistent
+                if req.check_finish() is not None:
+                    break
+            req.pos += took
             self._progress(req, outs)
         return outs
 
@@ -773,7 +1167,9 @@ class ContinuousServeEngine:
         per_request = {r.rid: {"preemptions": r.preemptions,
                                "chunks": r.chunks,
                                "shared_tokens": r.shared_tokens,
-                               "ttft": r.ttft}
+                               "ttft": r.ttft,
+                               "spec_windows": r.spec_windows,
+                               "spec_accepted": r.spec_accepted}
                        for r in requests}
         outputs = {r.rid: self._make_output(r, [], finished=True)
                    for r in requests}
@@ -787,6 +1183,9 @@ class ContinuousServeEngine:
             prompt_tokens=self.cache.lookup_tokens,
             prefix_hit_tokens=self.cache.hit_tokens,
             cow_events=self.cache.cow_events,
+            spec_windows=self._spec_windows,
+            spec_drafted=self._spec_drafted,
+            spec_accepted=self._spec_accepted,
             per_request=per_request,
             outputs=outputs)
 

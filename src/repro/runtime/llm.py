@@ -80,7 +80,7 @@ class LLMEngine:
                  weight_format: str | None = None,
                  max_top_k: int = sampling.MAX_TOP_K,
                  draft_model: Model | None = None, draft_params: Any = None,
-                 gamma: int = 8,
+                 gamma: int = 8, speculative=None,
                  default_sampling: SamplingParams | None = None,
                  mesh=None, tp_reduce: str = "auto"):
         if backend not in BACKENDS:
@@ -94,11 +94,11 @@ class LLMEngine:
         if spec is not None and spec.mesh is not None \
                 and backend != "continuous":
             raise ValueError("spec.mesh shards the continuous backend only")
-        if spec is not None and backend == "speculative":
+        if speculative is not None and backend != "continuous":
             raise ValueError(
-                "backend='speculative' does not consume a DeploymentSpec "
-                "yet (the budget sizes the static/continuous engines); "
-                "pass max_len= directly")
+                "speculative= configures scheduler-integrated speculation "
+                "in the continuous engine; the legacy 'speculative' "
+                "backend takes draft_model=/draft_params=/gamma= directly")
         if spec is None:
             # legacy knob defaults (the pre-DeploymentSpec hand-tuned path)
             max_len = 256 if max_len is None else max_len
@@ -124,14 +124,15 @@ class LLMEngine:
                 cache_dtype=cache_dtype, weight_format=weight_format,
                 prefill_chunk=prefill_chunk,
                 enable_prefix_cache=enable_prefix_cache,
-                max_top_k=self.max_top_k, mesh=mesh, tp_reduce=tp_reduce)
+                max_top_k=self.max_top_k, mesh=mesh, tp_reduce=tp_reduce,
+                speculative=speculative)
         elif backend == "static":
             self._eng = ServeEngine(
                 model, params, max_len=max_len, spec=spec,
                 sampling_params=self.default_sampling, donate_cache=False,
                 cache_dtype=cache_dtype, weight_format=weight_format,
                 max_top_k=self.max_top_k)
-        else:                            # speculative
+        else:                            # speculative (legacy dense-cache)
             # with no draft the target drafts for itself ("ideal draft"):
             # every window accepts, output equals the target-only stream.
             # One SpeculativeEngine for the LLMEngine's lifetime: the
@@ -142,6 +143,13 @@ class LLMEngine:
             self.draft_params = draft_params if draft_model is not None \
                 else params
             self.gamma = gamma
+            # a DeploymentSpec sizes this backend too (max_len came from it
+            # above); the budget is priced with the draft's weights and
+            # pool bytes, and the resolved point is kept for inspection
+            self._speculative_deployment = (
+                spec.resolve(model, params=params, draft=self.draft_model,
+                             draft_params=self.draft_params, gamma=gamma)
+                if spec is not None else None)
             self._spec = SpeculativeEngine(
                 self.draft_model, self.draft_params, model, params,
                 gamma=gamma)
@@ -156,6 +164,8 @@ class LLMEngine:
     @property
     def deployment(self):
         """The resolved ``DeploymentSpec`` budget (None without spec=)."""
+        if self._eng is None:              # legacy speculative backend
+            return self._speculative_deployment
         return getattr(self._eng, "deployment", None)
 
     def kv_token_bytes_per_device(self) -> int:
@@ -264,9 +274,20 @@ class LLMEngine:
                 "backend='static' batches one prompt length per call "
                 f"(got {sorted(lens)}); use backend='continuous' for "
                 "ragged prompts")
-        res = self._eng.generate({"tokens": jnp.asarray(np.stack(prompts))},
+        batch = jnp.asarray(np.stack(prompts))
+        res = self._eng.generate({"tokens": batch},
                                  max_new_tokens=max(budgets),
                                  sampling_params=sps)
+        plps = None
+        if any(sp.prompt_logprobs for sp in sps):
+            # score the prompt with one jitted forward: position k's
+            # log-softmax row scores prompt token k+1 (raw model scores —
+            # the generation-side processors don't apply to the prompt)
+            logits = jax.jit(self.model.forward)(self._eng.params,
+                                                 {"tokens": batch})
+            ls = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+            plps = np.asarray(jnp.take_along_axis(
+                ls[:, :-1], batch[:, 1:, None], axis=-1)[..., 0])
         toks = np.asarray(res.tokens)
         outs = []
         for i, sp in enumerate(sps):
@@ -276,6 +297,9 @@ class LLMEngine:
             out = RequestOutput(rid=i, new_token_ids=list(ids),
                                 token_ids=list(ids), finished=True,
                                 finish_reason=reason, logprobs=lps,
+                                prompt_logprobs=(
+                                    [float(v) for v in plps[i]]
+                                    if sp.prompt_logprobs else None),
                                 metrics={})
             outs.append(out)
             if on_output is not None:
@@ -287,8 +311,13 @@ class LLMEngine:
             if sp.repetition_penalty != 1.0 or sp.logit_bias:
                 raise ValueError(
                     "backend='speculative' does not support "
-                    "repetition_penalty/logit_bias yet (acceptance under "
-                    "history-dependent logits is a recorded follow-on)")
+                    "repetition_penalty/logit_bias (the continuous "
+                    "engine's speculative= mode does — its verify step "
+                    "threads the running presence through p and q)")
+            if sp.prompt_logprobs:
+                raise ValueError(
+                    "backend='speculative' does not score prompts; use "
+                    "backend='static' or 'continuous' for prompt_logprobs")
         outs = []
         for i, (p, sp, budget) in enumerate(zip(prompts, sps, budgets)):
             stats = self._spec.generate(

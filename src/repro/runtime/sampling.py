@@ -55,6 +55,15 @@ SLOT_CANDIDATES = 128
 # biased and unbiased requests shares the one compiled decode step.
 MAX_LOGIT_BIAS = 8
 
+# Speculative-decoding PRNG stream tags: every draw inside a draft/verify
+# window folds one of these into ``token_key(seed, pos)`` where ``pos`` is
+# the sequence index of the token being decided — a pure function of
+# (seed, index), so preemption restarts reproduce the same proposals,
+# acceptance coin flips, and correction draws regardless of how windows
+# re-align after the restart (they re-align identically: window boundaries
+# are themselves deterministic in these streams).
+TAG_PROPOSE, TAG_ACCEPT, TAG_CORRECT = 1, 2, 3
+
 
 @dataclasses.dataclass(frozen=True)
 class SamplingParams:
@@ -81,6 +90,12 @@ class SamplingParams:
                  bias}`` mapping or ``((token_id, bias), ...)`` pairs; at
                  most ``MAX_LOGIT_BIAS`` entries per request (the static
                  per-slot data-array width).  Applied before filtering.
+    prompt_logprobs  also score the prompt: ``RequestOutput
+                 .prompt_logprobs[k]`` is the RAW model logprob (no
+                 temperature / filtering / penalties) of prompt token
+                 ``k + 1`` given tokens ``0..k`` — ``prompt_len - 1``
+                 entries.  Continuous-engine requests with this set skip
+                 prefix-cache sharing (shared pages are never re-scored).
     """
     temperature: float = 0.0
     top_k: int = 0
@@ -92,6 +107,7 @@ class SamplingParams:
     logprobs: bool = False
     repetition_penalty: float = 1.0
     logit_bias: tuple[tuple[int, float], ...] = ()
+    prompt_logprobs: bool = False
 
     def __post_init__(self):
         if self.temperature < 0.0:
@@ -223,6 +239,101 @@ def draw(key, dist: jnp.ndarray) -> jnp.ndarray:
         key, jnp.log(jnp.maximum(dist, 1e-20)), axis=-1).astype(jnp.int32)
 
 
+def apply_processors(logits: jnp.ndarray, rep_penalty=None, bias_ids=None,
+                     bias_vals=None, presence=None) -> jnp.ndarray:
+    """Per-slot logit processors shared by every sampler entry point.
+
+    logits: (B, V) -> f32 (B, V) with additive ``logit_bias`` offsets and
+    the CTRL-style repetition penalty applied (positive logits of tokens
+    marked in ``presence`` divide by the penalty, negative multiply).  The
+    speculative verify path calls this once per window position with the
+    RUNNING presence row, so the p/q acceptance ratio sees exactly the
+    penalized logits the sequential engine would have sampled from."""
+    lg = logits.astype(jnp.float32)
+    if bias_ids is not None:
+        rows = jnp.arange(lg.shape[0])
+        okb = bias_ids >= 0
+        bias = jnp.zeros_like(lg).at[
+            rows[:, None], jnp.where(okb, bias_ids, 0)].add(
+            jnp.where(okb, bias_vals, 0.0))
+        lg = lg + bias
+    if presence is not None:
+        pen = rep_penalty[:, None]
+        lg = jnp.where(presence, jnp.where(lg > 0, lg / pen, lg * pen), lg)
+    return lg
+
+
+def slot_dist(lg: jnp.ndarray, temperature, top_k, top_p, min_p, *,
+              max_top_k: int = MAX_TOP_K) -> jnp.ndarray:
+    """The full per-slot filtered distribution ``sample_slots`` draws from.
+
+    lg: (B, V) PROCESSED logits (``apply_processors`` already applied);
+    temperature/top_p/min_p (B,) f32, top_k (B,) i32 — all data.  Returns
+    (B, V) probabilities: greedy rows (temperature <= 0) are exact
+    one-hots at the argmax; sampled rows reproduce ``sample_slots``'s
+    candidate-subspace semantics exactly (per-slot top-k rank cut, top-p
+    nucleus, min-p, all within the ``SLOT_CANDIDATES`` subspace and
+    renormalized over it), scattered back to full-vocab token ids.
+
+    This is the batched analogue of ``dist`` for the speculative
+    continuous engine: draft proposals are drawn FROM this distribution
+    (``slot_draw``), and the target scores with the same filtering, so
+    the min(1, p/q) acceptance ratio is exact under any per-slot
+    ``SamplingParams`` mix — including repetition penalty and logit bias,
+    which enter through ``apply_processors`` on both sides."""
+    b, v = lg.shape
+    rows = jnp.arange(b)
+    is_greedy = temperature <= 0.0
+    kmax = min(int(max_top_k), v)
+    budget = min(max(kmax, SLOT_CANDIDATES), v)
+    # indices ARE needed here (the subspace dist scatters back to token
+    # ids); this path runs a handful of times per speculative window, not
+    # in the single-token hot loop, so the CPU variadic-sort penalty of
+    # touching top_k's indices output is acceptable
+    tops, idxs = jax.lax.top_k(lg, budget)      # (B, budget) descending
+    s = tops / jnp.where(is_greedy, 1.0, temperature)[:, None]
+    k = jnp.clip(top_k, 0, kmax)
+    ranks = jnp.arange(budget)[None, :]
+    keep = (k == 0)[:, None] | (ranks < k[:, None])
+    z = jax.nn.logsumexp(jnp.where(keep, s, -jnp.inf), axis=-1,
+                         keepdims=True)
+    p = jnp.where(keep, jnp.exp(s - z), 0.0)
+    cum = jnp.cumsum(p, axis=-1)
+    keep &= (cum - p) < top_p[:, None]
+    keep &= p >= min_p[:, None] * p[:, :1]
+    w = jnp.where(keep, p, 0.0)
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-38)
+    out = jnp.zeros((b, v), jnp.float32).at[rows[:, None], idxs].set(w)
+    one_hot = jax.nn.one_hot(jnp.argmax(lg, axis=-1), v, dtype=jnp.float32)
+    return jnp.where(is_greedy[:, None], one_hot, out)
+
+
+def slot_draw(dist: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """Invert per-slot uniforms through a distribution's CDF.
+
+    dist: (B, V) probabilities; u: (B,) uniforms in [0, 1) -> (B,) i32
+    token ids.  One-hot rows return their argmax for every ``u`` (greedy
+    slots never consume entropy)."""
+    cum = jnp.cumsum(dist, axis=-1)
+    total = cum[:, -1]
+    r = jnp.sum(cum <= (u * total)[:, None], axis=-1)
+    return jnp.minimum(r, dist.shape[-1] - 1).astype(jnp.int32)
+
+
+def spec_uniform(seed, pos, tag: int) -> jnp.ndarray:
+    """One uniform per (seed, pos) pair from the tagged speculative stream
+    ``fold_in(token_key(seed, pos), tag)`` — see TAG_PROPOSE/ACCEPT/
+    CORRECT.  ``seed`` and ``pos`` broadcast against each other; the
+    result has the broadcast shape."""
+    seed, pos = jnp.broadcast_arrays(jnp.asarray(seed), jnp.asarray(pos))
+
+    def one(s, p):
+        return jax.random.uniform(jax.random.fold_in(token_key(s, p), tag),
+                                  ())
+
+    return jax.vmap(one)(seed.ravel(), pos.ravel()).reshape(seed.shape)
+
+
 def sample_slots(logits: jnp.ndarray, temperature, top_k, top_p, min_p,
                  seed, pos, *, max_top_k: int = MAX_TOP_K,
                  rep_penalty=None, bias_ids=None, bias_vals=None,
@@ -255,18 +366,9 @@ def sample_slots(logits: jnp.ndarray, temperature, top_k, top_p, min_p,
     penalty (positive logits divide, negative multiply), applied before
     temperature, so greedy slots are penalized too.
     """
-    lg = logits.astype(jnp.float32)
+    lg = apply_processors(logits, rep_penalty, bias_ids, bias_vals, presence)
     b, v = lg.shape
     rows = jnp.arange(b)
-    if bias_ids is not None:
-        okb = bias_ids >= 0
-        bias = jnp.zeros_like(lg).at[
-            rows[:, None], jnp.where(okb, bias_ids, 0)].add(
-            jnp.where(okb, bias_vals, 0.0))
-        lg = lg + bias
-    if presence is not None:
-        pen = rep_penalty[:, None]
-        lg = jnp.where(presence, jnp.where(lg > 0, lg / pen, lg * pen), lg)
     pos = jnp.broadcast_to(pos, (b,))
     is_greedy = temperature <= 0.0
     kmax = min(int(max_top_k), v)

@@ -65,6 +65,13 @@ class Request:
     preemptions: int = 0
     chunks: int = 0                    # prefill chunks executed (all attempts)
     shared_tokens: int = 0             # prefix-cache tokens at last admission
+    # -- speculative decoding (cumulative across preemption restarts:
+    # re-run windows are real work, and their wasted draft tokens real
+    # waste, so the per-request acceptance stats keep counting) --
+    spec_windows: int = 0              # draft/verify windows run
+    spec_accepted: int = 0             # draft proposals accepted (<= gamma/win)
+    # -- prompt scoring (SamplingParams.prompt_logprobs) --
+    prompt_logprobs: list[float] = dataclasses.field(default_factory=list)
 
     @property
     def prompt_len(self) -> int:
@@ -160,7 +167,12 @@ class Scheduler:
                and self.waiting[0].arrival_time <= now):
             req = self.waiting[0]
             slot = self._free_slots[-1]
-            shared = self.cache.admit(slot, req.prompt_len, tokens=req.prompt)
+            # prompt-scoring requests skip prefix sharing: a shared prefix
+            # would skip exactly the chunk positions whose logprobs were
+            # asked for (their pages may still be shared FROM, once filled)
+            plp = bool(req.sampling and req.sampling.prompt_logprobs)
+            shared = self.cache.admit(slot, req.prompt_len,
+                                      tokens=None if plp else req.prompt)
             if shared is None:
                 break                      # pool exhausted: wait for frees
             self.waiting.popleft()
@@ -173,10 +185,14 @@ class Scheduler:
             admitted.append(req)
         return admitted
 
-    def ensure_capacity(self, req: Request) -> bool:
-        """Back ``req``'s next write position with a page, evicting the
-        youngest running request — INCLUDING ``req`` itself — while the
-        pool is exhausted.  Returns False if ``req`` was preempted.
+    def ensure_capacity(self, req: Request, upto: int | None = None) -> bool:
+        """Back ``req``'s write positions through ``upto`` (default: just
+        ``req.pos``) with pages, evicting the youngest running request —
+        INCLUDING ``req`` itself — while the pool is exhausted.  Returns
+        False if ``req`` was preempted.  The speculative engine passes
+        ``upto=req.pos + gamma`` so a whole draft/verify window's KV
+        writes are backed before the window starts (windows never
+        preempt midway — the capacity barrier is at window boundaries).
 
         A request never evicts one admitted before it: letting a
         freshly-admitted request evict an older one livelocks a pool too
@@ -184,7 +200,8 @@ class Scheduler:
         page, then its first growth evicts the other request, forever —
         the oldest request must be allowed to run to completion so its
         pages come back)."""
-        while not self.cache.ensure(req.slot, req.pos):
+        while not self.cache.ensure(req.slot,
+                                    req.pos if upto is None else upto):
             victim = max(self.running.values(),
                          key=lambda r: (r.admit_time, r.rid))
             self.preempt(victim)
@@ -203,6 +220,7 @@ class Scheduler:
         # streams); ``emitted`` survives so nothing is streamed twice
         req.tokens.clear()
         req.logprobs.clear()
+        req.prompt_logprobs.clear()
         self.waiting.appendleft(req)
         if self.on_release:
             self.on_release(slot)

@@ -38,6 +38,32 @@ from repro.runtime import sampling
 from repro.runtime.sampling import SamplingParams
 
 
+@dataclasses.dataclass(frozen=True)
+class SpeculativeConfig:
+    """Scheduler-integrated speculation settings for the continuous engine
+    (``LLMEngine(..., speculative=SpeculativeConfig(...))``).
+
+    draft_model / draft_params: the proposer.  The draft's KV pages come
+    out of the SAME ``PageAllocator`` page-id space as the target's —
+    its pool pytree is a second set of leaves over identical page
+    tables, so sharing, copy-on-write, preemption, and defrag act on
+    both in lockstep.  ``None`` self-drafts with the target (useful for
+    tests: acceptance is then ~1 and outputs are trivially identical).
+
+    gamma: draft lookahead per window; each window costs gamma draft
+    steps + 1 multi-token verify step and emits 1..gamma+1 tokens.
+    """
+    draft_model: Model | None = None
+    draft_params: object = None
+    gamma: int = 4
+
+    def __post_init__(self):
+        if self.gamma < 1:
+            raise ValueError(f"gamma must be >= 1, got {self.gamma}")
+        if self.draft_model is not None:
+            _check_rewindable(self.draft_model)
+
+
 @dataclasses.dataclass
 class SpecStats:
     tokens: jnp.ndarray            # (n,) generated tokens

@@ -241,6 +241,69 @@ def test_kv_head_replicated_paged_decode_matches_single_device():
     assert "ok" in out
 
 
+def test_sharded_speculative_continuous_matches_single_device():
+    """Scheduler-integrated speculation on a (2 data x 4 model) mesh with
+    a SEPARATE draft model: the draft gets its own plan and its page
+    pools shard per KV head over the model axis (same page-id space as
+    the target's), and both greedy and sampled streams stay byte-
+    identical to the single-device speculative engine — greedy also to
+    the non-speculative engine — with one compiled draft scan and one
+    compiled verify step."""
+    out = _run("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import dataclasses
+        import jax, numpy as np
+        from repro.configs import get_config, reduced_config
+        from repro.models.model import build_model
+        from repro.runtime.engine import ContinuousServeEngine
+        from repro.runtime.sampling import SamplingParams
+        from repro.runtime.scheduler import Request
+        from repro.runtime.speculative import SpeculativeConfig
+
+        cfg = dataclasses.replace(reduced_config(get_config("qwen3-14b")),
+                                  n_heads=8, n_kv_heads=4)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        dcfg = dataclasses.replace(cfg, name=cfg.name + "-draft",
+                                   n_layers=1)
+        dm = build_model(dcfg)
+        dp = dm.init(jax.random.PRNGKey(3))
+        toks = np.asarray(jax.random.randint(jax.random.PRNGKey(1),
+                                             (3, 12), 0, cfg.vocab_size))
+        SP = [SamplingParams(),
+              SamplingParams(temperature=0.9, top_k=8, seed=7),
+              SamplingParams()]
+        mk = lambda: [Request(rid=i, prompt=toks[i], max_new_tokens=8,
+                              sampling=SP[i]) for i in range(3)]
+        sc = SpeculativeConfig(draft_model=dm, draft_params=dp, gamma=3)
+
+        def engine(mesh=None, spec=None):
+            return ContinuousServeEngine(
+                model, params, num_slots=3, page_size=4, num_pages=32,
+                max_len=24, prefill_chunk=5, mesh=mesh, speculative=spec)
+
+        ref = engine().run(mk())            # non-spec single-device
+        sref = engine(spec=sc).run(mk())    # spec single-device
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        seng = engine(mesh, sc)
+        got = seng.run(mk())
+        for i in range(3):
+            np.testing.assert_array_equal(sref.results[i], got.results[i])
+            if SP[i].is_greedy:
+                np.testing.assert_array_equal(ref.results[i],
+                                              got.results[i])
+        assert seng._spec_draft._cache_size() == 1
+        assert seng._spec_verify._cache_size() == 1
+        # draft pools physically shard their KV-head axis over the mesh
+        leaf = jax.tree.leaves(seng._draft_pools)[0]
+        assert (leaf.addressable_shards[0].data.shape[-2]
+                == leaf.shape[-2] // 4), leaf.sharding
+        print("ok", got.spec_windows, round(got.accepted_per_window, 3))
+    """)
+    assert "ok" in out
+
+
 def test_elastic_checkpoint_restore_across_meshes():
     """Checkpoint written from a (2,4) mesh restores onto a (4,2) mesh
     (elastic re-shard on restart) and training continues."""
