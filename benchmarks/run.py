@@ -21,6 +21,7 @@ MODULES = [
     ("batch_sweep", "Fig 13/11b — batch sweeps (speedup, energy, BW util)"),
     ("energy_cost", "Fig 12 — energy & cost vs scale; EDP"),
     ("spec_decode", "Fig 14 — speculative decoding comparison"),
+    ("fleet", "ours — fleet router + autoscaler gates (simulated)"),
     ("roofline_table", "ours — 40-cell roofline table from the dry-run"),
 ]
 

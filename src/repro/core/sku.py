@@ -37,6 +37,28 @@ class WorkloadFootprint:
         each query's unique KV history (paper: 'KV$ entries are query-unique')."""
         return self.active_param_bytes + self.kv_bytes_per_token * batch * seq_len
 
+    @classmethod
+    def from_model(cls, model, *, weight_format: str | None = None,
+                   cache_dtype=None) -> "WorkloadFootprint":
+        """Footprint of a built model under a weight/KV quantization choice.
+
+        ``weight_format`` is a ``repro.quant.formats`` name (None = bf16
+        storage, 2 bytes/param); ``cache_dtype`` follows the paged-KV pool
+        convention ("fp8"/"int8" strings or a jnp dtype, None = pool default).
+        """
+        from repro.models.footprint import compute_footprint
+        from repro.parallel.plan import paged_kv_token_bytes
+        from repro.quant import formats
+
+        fp = compute_footprint(model.cfg)
+        per = (formats.bits_per_element(weight_format) / 8.0
+               if weight_format else 2.0)
+        kv_tok = paged_kv_token_bytes(model, cache_dtype=cache_dtype)
+        return cls(name=model.cfg.name,
+                   param_bytes=fp.total_params * per,
+                   kv_bytes_per_token=kv_tok,
+                   active_param_bytes=fp.active_params * per)
+
 
 @dataclasses.dataclass(frozen=True)
 class SKUCell:

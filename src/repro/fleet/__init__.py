@@ -1,0 +1,24 @@
+"""Fleet serving: traffic generation, routing, simulation, autoscaling.
+
+The system-level layer over ``DeploymentSpec`` replicas — seeded
+workload generators (`traffic`), a prefix-affinity SLO router
+(`router`), a calibrated discrete-event fleet simulator (`simulator`),
+and traffic-envelope SKU/replica planning (`autoscaler`).
+"""
+from repro.fleet.router import SLO, PrefixAffinityRouter, RoundRobinRouter
+from repro.fleet.simulator import (FleetSimulator, FleetStats, LatencyTable,
+                                   ReplicaSpec, calibrate, cross_check)
+from repro.fleet.autoscaler import (FleetPlan, ReactiveAutoscaler,
+                                    TrafficEnvelope, default_candidates,
+                                    plan_fleet)
+from repro.fleet.traffic import (FleetRequest, LengthMix, TenantMix, Trace,
+                                 make_trace)
+
+__all__ = [
+    "SLO", "PrefixAffinityRouter", "RoundRobinRouter",
+    "FleetSimulator", "FleetStats", "LatencyTable", "ReplicaSpec",
+    "calibrate", "cross_check",
+    "FleetPlan", "ReactiveAutoscaler", "TrafficEnvelope",
+    "default_candidates", "plan_fleet",
+    "FleetRequest", "LengthMix", "TenantMix", "Trace", "make_trace",
+]

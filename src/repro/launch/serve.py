@@ -75,6 +75,14 @@ def parse_mix(spec: str, base: SamplingParams) -> list[SamplingParams]:
 
 
 def main(argv=None) -> int:
+    import sys
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if "--fleet" in argv:
+        # fleet-level serving (router + simulator + autoscaler) has its
+        # own argument surface — delegate everything else to it
+        argv.remove("--fleet")
+        from repro.launch.fleet import main as fleet_main
+        return fleet_main(argv)
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-14b")
     ap.add_argument("--reduced", action="store_true", default=True)

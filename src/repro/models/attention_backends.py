@@ -291,8 +291,12 @@ def init_mla_page_pool(cfg: ModelConfig, num_pages: int, page_size: int,
     """Latent page pool for one MLA layer (pages hold c_kv + shared k_rope)."""
     if kvq.is_quantized_cache_dtype(dtype):
         raise NotImplementedError(
-            "quantized cache_dtype (fp8/int8) is only implemented for the "
-            "GQA page pools; MLA latent pages stay dense")
+            f"cache_dtype={dtype!r} is not implemented for MLA latent page "
+            f"pools: the absorbed-matmul decode consumes latent pages "
+            f"directly and has no dequant seam yet.  Quantized KV "
+            f"({'/'.join(sorted(kvq.KV_FORMATS))}) is only available for "
+            f"GQA-family page pools; for MLA models use a dense cache_dtype "
+            f"(None, jnp.bfloat16, jnp.float32) instead.")
     return {
         "c_kv": jnp.zeros((num_pages, page_size, cfg.kv_lora_rank), dtype),
         "k_rope": jnp.zeros((num_pages, page_size, cfg.rope_head_dim), dtype),

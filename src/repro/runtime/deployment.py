@@ -214,6 +214,20 @@ class DeploymentSpec:
             paged_kv_token_bytes
 
         cfg = model.cfg
+        # Reject MLA + quantized KV up front with a deployment-level error
+        # instead of letting pool construction explode layers deep inside
+        # paged_kv_token_bytes: latent pages have no dequant seam yet.
+        if kvq.is_quantized_cache_dtype(self.cache_dtype):
+            for role, c in [("model", cfg)] + \
+                    ([("draft", draft.cfg)] if draft is not None else []):
+                if getattr(c, "mla", False):
+                    raise DeploymentError(
+                        f"cache_dtype={self.cache_dtype!r} is unsupported "
+                        f"for the MLA {role} {c.name!r}: quantized KV "
+                        f"({'/'.join(sorted(kvq.KV_FORMATS))}) exists only "
+                        f"for GQA page pools — MLA latent pages stay dense. "
+                        f"Use cache_dtype=None (bf16) or jnp.float32 for "
+                        f"this architecture.")
         mesh = self._resolve_mesh(mesh)
         plan = None
         tp = kv_repl = 1

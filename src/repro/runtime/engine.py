@@ -246,7 +246,8 @@ class ContinuousStats:
     spec_accepted: int = 0        # draft proposals accepted
     per_request: dict = dataclasses.field(default_factory=dict)
     # per_request[rid] = {"preemptions", "chunks", "shared_tokens", "ttft",
-    #                     "spec_windows", "spec_accepted"}
+    #                     "tpot", "finish_time", "spec_windows",
+    #                     "spec_accepted"}
     outputs: dict = dataclasses.field(default_factory=dict)
     # outputs[rid] = final RequestOutput (finish_reason, logprobs, timing)
 
@@ -269,15 +270,29 @@ class ContinuousStats:
         """Draft tokens proposed but rejected — the speculation overhead."""
         return self.spec_drafted - self.spec_accepted
 
-    def ttft_quantiles(self) -> tuple[float, float, float] | None:
-        """(p50, p99, mean) time-to-first-token in seconds, or None."""
-        ts = sorted(r["ttft"] for r in self.per_request.values()
-                    if r["ttft"] is not None)
+    def latency_quantiles(self, metric: str = "ttft") -> dict | None:
+        """p50/p95/p99/mean of a per-request latency metric, or None.
+
+        metric is a key of the per_request records — "ttft" (arrival ->
+        first token) or "tpot" (mean inter-token seconds after the first).
+        Requests where the metric is unset (e.g. single-token outputs have
+        no TPOT) are skipped.
+        """
+        ts = sorted(r[metric] for r in self.per_request.values()
+                    if r.get(metric) is not None)
         if not ts:
             return None
-        p50 = ts[len(ts) // 2]
-        p99 = ts[min(len(ts) - 1, int(len(ts) * 0.99))]
-        return p50, p99, sum(ts) / len(ts)
+        def pct(q: float) -> float:
+            return ts[min(len(ts) - 1, int(len(ts) * q))]
+        return {"p50": pct(0.50), "p95": pct(0.95), "p99": pct(0.99),
+                "mean": sum(ts) / len(ts)}
+
+    def ttft_quantiles(self) -> tuple[float, float, float] | None:
+        """(p50, p99, mean) time-to-first-token in seconds, or None."""
+        q = self.latency_quantiles("ttft")
+        if q is None:
+            return None
+        return q["p50"], q["p99"], q["mean"]
 
 
 class ContinuousServeEngine:
@@ -880,6 +895,7 @@ class ContinuousServeEngine:
                    "chunks": req.chunks, "shared_tokens": req.shared_tokens}
         if finished:
             metrics["finish_time"] = req.finish_time
+            metrics["tpot"] = req.tpot
         if self.spec is not None:
             metrics["spec_windows"] = req.spec_windows
             metrics["spec_accepted"] = req.spec_accepted
@@ -1168,6 +1184,8 @@ class ContinuousServeEngine:
                                "chunks": r.chunks,
                                "shared_tokens": r.shared_tokens,
                                "ttft": r.ttft,
+                               "tpot": r.tpot,
+                               "finish_time": r.finish_time,
                                "spec_windows": r.spec_windows,
                                "spec_accepted": r.spec_accepted}
                        for r in requests}

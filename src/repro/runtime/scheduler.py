@@ -99,6 +99,20 @@ class Request:
             return None
         return self.first_token_time - self.arrival_time
 
+    @property
+    def tpot(self) -> float | None:
+        """Mean seconds per generated token after the first.
+
+        None until the request finishes, and None for single-token outputs
+        (there is no inter-token gap to measure).
+        """
+        if self.finish_time is None or self.first_token_time is None:
+            return None
+        n = len(self.tokens) - 1
+        if n <= 0:
+            return None
+        return (self.finish_time - self.first_token_time) / n
+
 
 class Scheduler:
     """Slot-based admission over a paged KV cache."""

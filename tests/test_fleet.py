@@ -1,0 +1,402 @@
+"""Fleet subsystem tests: traffic generators, prefix-affinity routing,
+the discrete-event simulator, autoscaler planning — plus the satellite
+gates (latency quantiles, MLA quantized-KV rejection up front, bursty
+MMPP scheduler invariants, sim-vs-real cross-check)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.fleet import traffic as tr
+from repro.fleet.autoscaler import (ReactiveAutoscaler, TrafficEnvelope,
+                                    default_candidates, plan_candidate,
+                                    plan_fleet)
+from repro.fleet.router import (SLO, PrefixAffinityRouter, RoundRobinRouter)
+from repro.fleet.simulator import (FleetSimulator, LatencyTable, ReplicaSpec,
+                                   cross_check)
+from repro.launch.fleet import gate_table, gate_workload
+from repro.models.model import build_model
+from repro.runtime.deployment import DeploymentError, DeploymentSpec
+from repro.runtime.engine import ContinuousServeEngine, ContinuousStats
+from repro.runtime.scheduler import Request
+
+
+# ---------------------------------------------------------------------------
+# traffic
+# ---------------------------------------------------------------------------
+
+
+def test_trace_deterministic_and_arrival_kinds():
+    for kind in tr.ARRIVAL_KINDS:
+        a = tr.make_trace(200, 5, kind=kind, rate=50.0)
+        b = tr.make_trace(200, 5, kind=kind, rate=50.0)
+        assert a.requests == b.requests            # frozen dataclass equality
+        arr = np.asarray([r.arrival for r in a.requests])
+        assert np.all(np.diff(arr) >= 0) and arr[0] > 0
+        # every prompt leaves at least one unique token past the prefix
+        assert all(r.prompt_len > r.prefix_len for r in a.requests)
+    with pytest.raises(ValueError, match="unknown arrival kind"):
+        tr.make_trace(4, 0, kind="lunar")
+
+
+def test_mmpp_is_burstier_than_poisson():
+    """The MMPP trace's windowed peak-to-mean ratio dominates Poisson's —
+    the property that makes it the adversarial admission workload."""
+    def peak_over_mean(kind, **kw):
+        t = tr.make_trace(2000, 9, kind=kind, rate=100.0, **kw)
+        env = TrafficEnvelope.from_trace(t, window_s=1.0)
+        return env.peak_rate / env.mean_rate
+    assert peak_over_mean("mmpp", burst_ratio=10.0, mean_dwell_s=1.0) \
+        > peak_over_mean("poisson") * 1.5
+
+
+def test_materialized_prompts_share_tenant_prefix():
+    trace = tr.make_trace(40, 11, kind="poisson", rate=20.0,
+                          tenants=tr.TenantMix(n_tenants=3, prefix_len=32))
+    by_tenant = {}
+    for r in trace.requests:
+        toks = tr.materialize_prompt(trace, r)
+        assert toks.shape == (r.prompt_len,)
+        by_tenant.setdefault(r.tenant, []).append(toks)
+    seen = {}
+    for t, prompts in by_tenant.items():
+        for p in prompts:
+            np.testing.assert_array_equal(p[:32], prompts[0][:32])
+        seen[t] = prompts[0][:32]
+    ts = list(seen)
+    if len(ts) >= 2:       # tenants own distinct prefixes
+        assert not np.array_equal(seen[ts[0]], seen[ts[1]])
+
+
+def test_prefix_chain_matches_tenant_chain():
+    """A request's leading full-block hashes equal its tenant's shared
+    chain (same ``_chain_key`` chaining the paged KV cache indexes by)."""
+    trace = tr.make_trace(8, 3, kind="poisson", rate=10.0,
+                          tenants=tr.TenantMix(n_tenants=2, prefix_len=32))
+    chains = tr.tenant_chains(trace, page_size=16)
+    assert all(len(c) == 2 for c in chains.values())
+    for r in trace.requests:
+        full = tr.prefix_chain(tr.materialize_prompt(trace, r), 16)
+        assert full[:2] == chains[r.tenant]
+
+
+# ---------------------------------------------------------------------------
+# router
+# ---------------------------------------------------------------------------
+
+
+class FakeReplica:
+    def __init__(self, *, hit=0, load_=0.0, sat=False, ttft=0.01,
+                 tpot=0.001):
+        self._hit, self._load, self._sat = hit, load_, sat
+        self._ttft, self._tpot = ttft, tpot
+
+    def queue_depth(self):
+        return int(self._load * 8)
+
+    def load(self):
+        return self._load
+
+    def saturated(self):
+        return self._sat
+
+    def match_tokens(self, chain):
+        return self._hit
+
+    def predicted_ttft(self, now, prompt_len, hit_tokens):
+        return self._ttft
+
+    def predicted_tpot(self):
+        return self._tpot
+
+
+def test_router_prefers_affinity_then_load():
+    r = PrefixAffinityRouter()
+    reps = [FakeReplica(hit=0, load_=0.1), FakeReplica(hit=96, load_=0.5)]
+    d = r.route(0.0, 128, (), reps)
+    assert d.action == "admit" and d.replica == 1 and d.hit_tokens == 96
+    # load dominates when the hit advantage is small
+    reps = [FakeReplica(hit=0, load_=0.0), FakeReplica(hit=16, load_=1.0)]
+    assert r.route(0.0, 128, (), reps).replica == 0
+
+
+def test_router_sheds_on_predicted_slo_violation():
+    r = PrefixAffinityRouter(slo=SLO(ttft_s=0.01, tpot_s=0.001))
+    d = r.route(0.0, 128, (), [FakeReplica(ttft=0.5), FakeReplica(ttft=0.9)])
+    assert d.action == "shed" and "SLO" in d.reason
+    assert r.shed == 1 and r.admitted == 0
+
+
+def test_router_retries_then_sheds_when_saturated():
+    r = PrefixAffinityRouter(max_retries=2, retry_backoff_s=0.05)
+    reps = [FakeReplica(sat=True)]
+    d0 = r.route(0.0, 64, (), reps, retries=0)
+    d1 = r.route(0.0, 64, (), reps, retries=1)
+    assert d0.action == d1.action == "retry"
+    assert d1.delay_s == pytest.approx(2 * d0.delay_s)     # exponential
+    assert r.route(0.0, 64, (), reps, retries=2).action == "shed"
+
+
+# ---------------------------------------------------------------------------
+# simulator
+# ---------------------------------------------------------------------------
+
+
+def _sim(router, n_replicas=4, seed=7, n=600):
+    trace = gate_workload(n, seed, "diurnal", 100.0)
+    spec = ReplicaSpec(latency=gate_table(), num_slots=8, max_queue=16,
+                       page_size=16, prefix_blocks=24)
+    return FleetSimulator(spec, n_replicas, router).run(trace), trace
+
+
+def test_simulator_conservation_and_determinism():
+    slo = SLO(ttft_s=0.025, tpot_s=0.012)
+    fs, trace = _sim(PrefixAffinityRouter(slo=slo))
+    assert len(fs.served) + len(fs.shed) == len(trace.requests)
+    # token conservation: every served request emitted its full output
+    assert all(sr.emitted == sr.req.output_len for sr in fs.served)
+    assert all(sr.first_tok_t is not None and sr.finish_t >= sr.first_tok_t
+               for sr in fs.served)
+    fs2, _ = _sim(PrefixAffinityRouter(slo=slo))
+    assert [(s.req.rid, s.first_tok_t, s.finish_t) for s in fs.served] \
+        == [(s.req.rid, s.first_tok_t, s.finish_t) for s in fs2.served]
+
+
+def test_affinity_beats_round_robin_on_shared_prefix_workload():
+    """The tentpole acceptance gate, small edition: affinity wins BOTH
+    goodput and p95 TTFT when replica prefix capacity is scarce."""
+    slo = SLO(ttft_s=0.025, tpot_s=0.012)
+    aff, _ = _sim(PrefixAffinityRouter(slo=slo))
+    rr, _ = _sim(RoundRobinRouter(slo=slo))
+    assert aff.goodput_tokens_per_s(slo) > rr.goodput_tokens_per_s(slo)
+    assert aff.ttft_quantiles()["p95"] < rr.ttft_quantiles()["p95"]
+    assert aff.slo_attainment(slo) > rr.slo_attainment(slo)
+
+
+def test_reactive_autoscaler_adds_replicas_under_load():
+    trace = gate_workload(600, 7, "mmpp", 150.0)
+    spec = ReplicaSpec(latency=gate_table(), num_slots=8, max_queue=8,
+                       page_size=16, prefix_blocks=24)
+    scaler = ReactiveAutoscaler(min_replicas=1, max_replicas=8,
+                                interval_s=0.2)
+    sim = FleetSimulator(spec, 1, PrefixAffinityRouter(), autoscaler=scaler)
+    fs = sim.run(trace)
+    assert scaler.decisions, "autoscaler never reacted to the burst"
+    assert max(n for _, n in scaler.decisions) > 1
+    assert len(fs.served) + len(fs.shed) == 600
+
+
+# ---------------------------------------------------------------------------
+# autoscaler planning
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def qwen_full():
+    return build_model(get_config("qwen3-14b"))
+
+
+def _envelope():
+    lengths = tr.LengthMix(prompt_mean=512.0, prompt_min=64, prompt_max=1024,
+                           output_mean=256.0, output_min=32, output_max=512)
+    t = tr.make_trace(400, 0, kind="diurnal", rate=200.0, lengths=lengths)
+    return TrafficEnvelope.from_trace(t)
+
+
+def test_envelope_peak_dominates_mean():
+    env = _envelope()
+    assert env.peak_rate >= env.mean_rate > 0
+    assert env.peak_decode_tokens_per_s == \
+        pytest.approx(env.peak_rate * env.mean_output)
+
+
+def test_plan_fleet_rpu_beats_fixed_gpu_baseline(qwen_full):
+    """The autoscaler acceptance gate: the chosen (SKU, replicas) meets
+    the SLO at lower modeled die cost AND J/token than a fixed h200
+    fleet sized for the same envelope."""
+    env = _envelope()
+    slo = SLO(ttft_s=2.0, tpot_s=0.05)
+    base = DeploymentSpec(max_len=2048, weight_format="mxfp4",
+                          cache_dtype="fp8", max_slots=32)
+    best, plans = plan_fleet(qwen_full, env, slo,
+                             default_candidates(qwen_full, base))
+    assert best.feasible and best.replicas >= 1
+    assert best.tpot_est_s <= slo.tpot_s and best.ttft_est_s <= slo.ttft_s
+    assert best.fleet_tokens_per_s >= env.peak_decode_tokens_per_s
+    baseline = plan_candidate(
+        qwen_full, dataclasses.replace(base, sku="h200", hbmco=None),
+        env, slo)
+    assert baseline.feasible
+    assert best.die_mm2 < baseline.die_mm2
+    assert best.energy_j_per_token < baseline.energy_j_per_token
+    # energy objective picks something no worse on J/token
+    e_best, _ = plan_fleet(qwen_full, env, slo,
+                           default_candidates(qwen_full, base),
+                           objective="energy")
+    assert e_best.energy_j_per_token <= best.energy_j_per_token
+
+
+def test_plan_fleet_raises_when_no_candidate_meets_slo(qwen_full):
+    env = _envelope()
+    impossible = SLO(ttft_s=1e-6, tpot_s=1e-9)
+    base = DeploymentSpec(max_len=2048, weight_format="mxfp4",
+                          cache_dtype="fp8", max_slots=32)
+    with pytest.raises(DeploymentError, match="no candidate meets the SLO"):
+        plan_fleet(qwen_full, env, impossible,
+                   default_candidates(qwen_full, base))
+
+
+# ---------------------------------------------------------------------------
+# satellite: TTFT/TPOT quantiles on ContinuousStats
+# ---------------------------------------------------------------------------
+
+
+def test_latency_quantiles_ttft_and_tpot():
+    per = {i: {"ttft": 0.01 * (i + 1), "tpot": 0.002} for i in range(10)}
+    per[10] = {"ttft": 0.5, "tpot": None}          # single-token: no TPOT
+    st = ContinuousStats(results={}, steps=0, occupancy=0.0, wall=1.0,
+                         preemptions=0, per_request=per)
+    q = st.latency_quantiles("ttft")
+    assert q["p50"] == pytest.approx(0.06)
+    assert q["p99"] == pytest.approx(0.5)
+    t = st.latency_quantiles("tpot")               # None entries skipped
+    assert t["p50"] == t["p99"] == pytest.approx(0.002)
+    empty = ContinuousStats(results={}, steps=0, occupancy=0.0, wall=1.0,
+                            preemptions=0)
+    assert empty.latency_quantiles("ttft") is None
+
+
+def test_request_tpot_property():
+    r = Request(rid=0, prompt=np.zeros(4, np.int32), max_new_tokens=8)
+    assert r.tpot is None
+    r.first_token_time, r.finish_time = 1.0, 2.0
+    r.tokens = [5, 6, 7, 8, 9]
+    assert r.tpot == pytest.approx(0.25)
+    r.tokens = [5]                                 # single token: undefined
+    assert r.tpot is None
+
+
+# ---------------------------------------------------------------------------
+# satellite: MLA + quantized KV rejected up front
+# ---------------------------------------------------------------------------
+
+
+def test_mla_page_pool_rejects_quantized_cache_dtype():
+    from repro.models.attention_backends import init_mla_page_pool
+    cfg = reduced_config(get_config("deepseek-v2-lite-16b"))
+    with pytest.raises(NotImplementedError) as ei:
+        init_mla_page_pool(cfg, num_pages=4, page_size=8, dtype="fp8")
+    msg = str(ei.value)
+    assert "fp8" in msg and "GQA" in msg and "bfloat16" in msg
+
+
+def test_deployment_resolve_rejects_mla_with_quantized_kv():
+    cfg = reduced_config(get_config("deepseek-v2-lite-16b"))
+    assert cfg.mla
+    model = build_model(cfg)
+    for fmt in ("fp8", "int8"):
+        spec = DeploymentSpec(max_len=128, max_slots=2, cache_dtype=fmt)
+        with pytest.raises(DeploymentError) as ei:
+            spec.resolve(model)
+        assert fmt in str(ei.value) and "MLA" in str(ei.value)
+    # dense cache dtypes still resolve for the same model
+    DeploymentSpec(max_len=128, max_slots=2,
+                   cache_dtype=jnp.float32).resolve(model)
+
+
+# ---------------------------------------------------------------------------
+# satellite: scheduler under bursty MMPP arrivals
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = reduced_config(get_config("qwen3-14b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _fleet_requests(trace, arrival=True):
+    return [Request(rid=r.rid, prompt=tr.materialize_prompt(trace, r),
+                    max_new_tokens=r.output_len,
+                    arrival_time=r.arrival if arrival else 0.0)
+            for r in trace.requests]
+
+
+def test_bursty_mmpp_arrivals_scheduler_invariants(small):
+    """Satellite 3: an MMPP arrival storm against a tight page pool with
+    a ``max_running`` admission hint — the engine must not livelock, the
+    allocator's ref-count invariants must hold across the preemption
+    churn, and greedy outputs must be byte-identical to a quiet run of
+    the same requests (arrivals and preemption are invisible in the
+    output stream)."""
+    cfg, model, params = small
+    lengths = tr.LengthMix(prompt_mean=10.0, prompt_sigma=0.3, prompt_min=6,
+                           prompt_max=14, output_mean=6.0, output_min=3,
+                           output_max=8)
+    # compressed-timescale storm: ~300 req/s bursts over ~60ms
+    trace = tr.make_trace(12, 3, kind="mmpp", rate=300.0,
+                          vocab=cfg.vocab_size, lengths=lengths,
+                          tenants=tr.TenantMix(n_tenants=2, prefix_len=4),
+                          burst_ratio=10.0, mean_dwell_s=0.02)
+    eng = ContinuousServeEngine(model, params, num_slots=3, page_size=4,
+                                num_pages=14, max_len=24,
+                                max_decode_slots=2)       # max_running hint
+    for r in _fleet_requests(trace):
+        eng.add_request(r)
+    assert eng._sched.max_running == 2
+    finished, steps = {}, 0
+    while eng.has_unfinished():
+        outs = eng.step()
+        eng.cache.allocator.check()           # ref-count invariants hold
+        # the admission hint is respected every iteration
+        assert len(eng._sched.running) <= 2
+        for o in outs:
+            if o.finished:
+                finished[o.rid] = np.asarray(o.token_ids, np.int32)
+        steps += 1
+        assert steps < 2000, "livelock: storm never drains"
+    assert sorted(finished) == [r.rid for r in trace.requests]
+
+    quiet = ContinuousServeEngine(model, params, num_slots=3, page_size=4,
+                                  num_pages=14, max_len=24,
+                                  max_decode_slots=2)
+    ref = quiet.run(_fleet_requests(trace, arrival=False))
+    for rid, toks in ref.results.items():
+        np.testing.assert_array_equal(finished[rid], toks)
+
+
+# ---------------------------------------------------------------------------
+# sim vs real cross-check
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_cross_check_sim_matches_real_engine_throughput():
+    """Calibrate the simulator from a real engine's measured step
+    latencies, replay one trace through both, and assert end-to-end
+    throughput agrees within the stated +-40% tolerance."""
+    from repro.models.common import ModelConfig
+    cfg = ModelConfig(name="fleet-xcheck", family="dense", n_layers=4,
+                      d_model=256, n_heads=8, n_kv_heads=4, head_dim=32,
+                      d_ff=512, vocab_size=1024)
+    model = build_model(cfg)
+    params = jax.device_put(model.init(jax.random.PRNGKey(0)))
+    max_len = 160
+    eng = ContinuousServeEngine(
+        model, params, num_slots=8, page_size=16,
+        num_pages=1 + 8 * 2 * (max_len // 16), max_len=max_len,
+        cache_dtype=jnp.float32, prefill_chunk=32,
+        enable_prefix_cache=False)
+    lengths = tr.LengthMix(prompt_mean=48.0, prompt_min=16, prompt_max=96,
+                           output_mean=16.0, output_min=4, output_max=32)
+    trace = tr.make_trace(30, 0, kind="poisson", rate=30.0,
+                          vocab=cfg.vocab_size, lengths=lengths,
+                          tenants=tr.TenantMix(n_tenants=1, prefix_len=0))
+    res = cross_check(eng, trace)
+    assert res["real_tokens"] == res["sim_tokens"]
+    assert 0.7 <= res["throughput_ratio"] <= 1.4, res
