@@ -22,6 +22,7 @@ MODULES = [
     ("energy_cost", "Fig 12 — energy & cost vs scale; EDP"),
     ("spec_decode", "Fig 14 — speculative decoding comparison"),
     ("fleet", "ours — fleet router + autoscaler gates (simulated)"),
+    ("disagg", "ours — disaggregated prefill/decode gates"),
     ("roofline_table", "ours — 40-cell roofline table from the dry-run"),
 ]
 

@@ -6,19 +6,22 @@ workload generators (`traffic`), a prefix-affinity SLO router
 and traffic-envelope SKU/replica planning (`autoscaler`).
 """
 from repro.fleet.router import SLO, PrefixAffinityRouter, RoundRobinRouter
-from repro.fleet.simulator import (FleetSimulator, FleetStats, LatencyTable,
-                                   ReplicaSpec, calibrate, cross_check)
-from repro.fleet.autoscaler import (FleetPlan, ReactiveAutoscaler,
-                                    TrafficEnvelope, default_candidates,
+from repro.fleet.simulator import (DisaggFleetSimulator, FleetSimulator,
+                                   FleetStats, LatencyTable, ReplicaSpec,
+                                   calibrate, cross_check,
+                                   disagg_replica_specs)
+from repro.fleet.autoscaler import (DisaggFleetPlan, FleetPlan,
+                                    ReactiveAutoscaler, TrafficEnvelope,
+                                    default_candidates, plan_disagg_fleet,
                                     plan_fleet)
 from repro.fleet.traffic import (FleetRequest, LengthMix, TenantMix, Trace,
                                  make_trace)
 
 __all__ = [
     "SLO", "PrefixAffinityRouter", "RoundRobinRouter",
-    "FleetSimulator", "FleetStats", "LatencyTable", "ReplicaSpec",
-    "calibrate", "cross_check",
-    "FleetPlan", "ReactiveAutoscaler", "TrafficEnvelope",
-    "default_candidates", "plan_fleet",
+    "DisaggFleetSimulator", "FleetSimulator", "FleetStats", "LatencyTable",
+    "ReplicaSpec", "calibrate", "cross_check", "disagg_replica_specs",
+    "DisaggFleetPlan", "FleetPlan", "ReactiveAutoscaler", "TrafficEnvelope",
+    "default_candidates", "plan_disagg_fleet", "plan_fleet",
     "FleetRequest", "LengthMix", "TenantMix", "Trace", "make_trace",
 ]

@@ -236,6 +236,159 @@ def plan_fleet(model, envelope: TrafficEnvelope, slo: SLO,
 
 
 # ---------------------------------------------------------------------------
+# disaggregated planning: phase-specialized SKUs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class DisaggFleetPlan:
+    """One (prefill SKU, decode SKU) pairing, priced per phase.
+
+    Prefill replicas are sized against peak **prompt** tokens/s on the
+    prefill-phase resolve (compute ceiling); decode replicas against
+    peak **decode** tokens/s on the decode-phase resolve (bandwidth
+    ceiling).  TTFT is chunk compute plus the KV handoff; TPOT is a pure
+    decode step — no chunk interleave, which is the modeled win over
+    ``plan_candidate``'s colocated ``2.0 * chunks`` interference term.
+    """
+    prefill: FleetPlan
+    decode: FleetPlan
+    feasible: bool
+    reason: str = ""
+    ttft_est_s: float = 0.0
+    tpot_est_s: float = 0.0
+    handoff_s: float = 0.0
+    prompt_demand_tokens_per_s: float = 0.0
+    decode_demand_tokens_per_s: float = 0.0
+
+    @property
+    def name(self) -> str:
+        return f"{self.prefill.name} + {self.decode.name}"
+
+    @property
+    def power_w(self) -> float:
+        return self.prefill.power_w + self.decode.power_w
+
+    @property
+    def die_mm2(self) -> float:
+        return self.prefill.die_mm2 + self.decode.die_mm2
+
+    @property
+    def energy_j_per_token(self) -> float:
+        """Joules per output token at the demand point: each tier burns
+        TDP times its utilization (its demand over its fleet ceiling),
+        charged to the decode-output stream.  For a colocated plan the
+        same convention collapses to ``plan_candidate``'s
+        ``power / per_replica_tokens_per_s``, so the numbers compare."""
+        util_p = min(self.prompt_demand_tokens_per_s
+                     / max(self.prefill.fleet_tokens_per_s, 1e-9), 1.0)
+        util_d = min(self.decode_demand_tokens_per_s
+                     / max(self.decode.fleet_tokens_per_s, 1e-9), 1.0)
+        burn = self.prefill.power_w * util_p + self.decode.power_w * util_d
+        return burn / max(self.decode_demand_tokens_per_s, 1e-9)
+
+    def as_dict(self) -> dict:
+        return {"prefill_sku": self.prefill.name,
+                "decode_sku": self.decode.name,
+                "prefill_replicas": self.prefill.replicas,
+                "decode_replicas": self.decode.replicas,
+                "feasible": self.feasible, "reason": self.reason,
+                "ttft_est_s": round(self.ttft_est_s, 4),
+                "tpot_est_s": round(self.tpot_est_s, 5),
+                "handoff_s": round(self.handoff_s, 5),
+                "power_w": round(self.power_w, 1),
+                "die_mm2": round(self.die_mm2, 1),
+                "energy_j_per_token": round(self.energy_j_per_token, 6)}
+
+
+def plan_disagg_candidate(model, prefill_spec: DeploymentSpec,
+                          decode_spec: DeploymentSpec,
+                          envelope: TrafficEnvelope, slo: SLO, *,
+                          headroom: float = 1.25,
+                          handoff_gbs: float = 64.0) -> DisaggFleetPlan:
+    def infeasible(reason, rp=None, rd=None):
+        empty = lambda s, r: FleetPlan(spec=s, resolved=r, replicas=0,
+                                       feasible=False, reason=reason)
+        return DisaggFleetPlan(prefill=empty(prefill_spec, rp),
+                               decode=empty(decode_spec, rd),
+                               feasible=False, reason=reason)
+
+    try:
+        rp = prefill_spec.resolve(model, phase="prefill")
+    except (DeploymentError, NotImplementedError) as e:
+        return infeasible(f"prefill: {e}")
+    try:
+        rd = decode_spec.resolve(model, phase="decode")
+    except (DeploymentError, NotImplementedError) as e:
+        return infeasible(f"decode: {e}", rp)
+    chunks = math.ceil(envelope.mean_prompt / rp.prefill_chunk)
+    handoff_s = envelope.mean_prompt * rd.kv_token_bytes / (handoff_gbs * 1e9)
+    ttft_est = chunks * rp.step_seconds + handoff_s
+    tpot_est = rd.step_seconds
+    feasible, reason = True, ""
+    if tpot_est > slo.tpot_s:
+        feasible, reason = False, (f"modeled TPOT {tpot_est:.4f}s exceeds "
+                                   f"SLO {slo.tpot_s}s")
+    elif ttft_est > slo.ttft_s:
+        feasible, reason = False, (f"modeled TTFT {ttft_est:.3f}s exceeds "
+                                   f"SLO {slo.ttft_s}s")
+    prompt_demand = envelope.peak_rate * envelope.mean_prompt * headroom
+    per_p = rp.tokens_per_s_ceiling
+    n_p = max(1, math.ceil(prompt_demand / per_p))
+    decode_demand = envelope.peak_decode_tokens_per_s * headroom
+    per_d = rd.tokens_per_s_ceiling
+    n_d = max(1, math.ceil(decode_demand / per_d))
+    pw_p = replica_power_w(prefill_spec, rp.tp)
+    pw_d = replica_power_w(decode_spec, rd.tp)
+    pre = FleetPlan(
+        spec=prefill_spec, resolved=rp, replicas=n_p, feasible=feasible,
+        reason=reason, per_replica_tokens_per_s=per_p,
+        fleet_tokens_per_s=per_p * n_p, ttft_est_s=ttft_est,
+        power_w=pw_p * n_p, die_mm2=replica_die_mm2(prefill_spec, rp.tp) * n_p,
+        energy_j_per_token=pw_p / per_p)
+    dec = FleetPlan(
+        spec=decode_spec, resolved=rd, replicas=n_d, feasible=feasible,
+        reason=reason, per_replica_tokens_per_s=per_d,
+        fleet_tokens_per_s=per_d * n_d, tpot_est_s=tpot_est,
+        power_w=pw_d * n_d, die_mm2=replica_die_mm2(decode_spec, rd.tp) * n_d,
+        energy_j_per_token=pw_d / per_d)
+    return DisaggFleetPlan(prefill=pre, decode=dec, feasible=feasible,
+                           reason=reason, ttft_est_s=ttft_est,
+                           tpot_est_s=tpot_est, handoff_s=handoff_s,
+                           prompt_demand_tokens_per_s=prompt_demand,
+                           decode_demand_tokens_per_s=decode_demand)
+
+
+def plan_disagg_fleet(model, envelope: TrafficEnvelope, slo: SLO,
+                      prefill_candidates: list[DeploymentSpec],
+                      decode_candidates: list[DeploymentSpec], *,
+                      headroom: float = 1.25, handoff_gbs: float = 64.0,
+                      objective: str = "cost"
+                      ) -> tuple[DisaggFleetPlan, list[DisaggFleetPlan]]:
+    """Cross the phase candidate lists, price each pairing, return
+    (best feasible, all).  Pass ``default_candidates`` for both lists
+    and the planner discovers the phase-specialized split itself —
+    compute-dense SKUs win the prefill tier, bandwidth-dense HBM-CO
+    stacks the decode tier.  Objectives match :func:`plan_fleet`.
+    """
+    plans = [plan_disagg_candidate(model, p, d, envelope, slo,
+                                   headroom=headroom,
+                                   handoff_gbs=handoff_gbs)
+             for p in prefill_candidates for d in decode_candidates]
+    feasible = [p for p in plans if p.feasible]
+    if not feasible:
+        raise DeploymentError(
+            "no disaggregated pairing meets the SLO: "
+            + "; ".join(f"{p.name}: {p.reason}" for p in plans[:8]))
+    if objective == "energy":
+        key = lambda p: (p.energy_j_per_token, p.die_mm2)
+    else:
+        key = lambda p: (p.die_mm2, p.power_w)
+    best = min(feasible, key=key)
+    return best, plans
+
+
+# ---------------------------------------------------------------------------
 # closed loop
 # ---------------------------------------------------------------------------
 

@@ -28,6 +28,7 @@ tenant from melting its favourite replica.
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import Protocol, Sequence
 
 
@@ -102,6 +103,34 @@ class PrefixAffinityRouter:
         self.admitted = 0
         self.retried = 0
         self.shed = 0
+        # drain handoff: block hash -> replica view adopted as the new
+        # home for that prefix when its old replica was scaled down.
+        # Entries give a partial affinity bonus until the adoptive
+        # replica's own index warms up; the LRU cap bounds staleness.
+        self.placement: OrderedDict = OrderedDict()
+        self.placement_cap = 4096
+
+    def adopt_placement(self, keys: Sequence[bytes], replica) -> int:
+        """Point a draining replica's prefix heat at ``replica`` so
+        tenant affinity survives the scale-down (simulator calls this
+        when it marks a victim draining). Returns entries adopted."""
+        n = 0
+        for h in keys:
+            self.placement[h] = replica
+            self.placement.move_to_end(h)
+            n += 1
+        while len(self.placement) > self.placement_cap:
+            self.placement.popitem(last=False)
+        return n
+
+    def _adopted_frac(self, chain: Sequence[bytes], rep) -> float:
+        """Leading fraction of the chain whose adopted home is ``rep``."""
+        n = 0
+        for h in chain:
+            if self.placement.get(h) is not rep:
+                break
+            n += 1
+        return n / max(len(chain), 1)
 
     # -- scoring (overridable) --
     def order(self, now: float, prompt_len: int, chain: Sequence[bytes],
@@ -112,6 +141,11 @@ class PrefixAffinityRouter:
             hit = rep.match_tokens(chain)
             score = (self.affinity_weight * hit / max(prompt_len, 1)
                      - self.load_weight * rep.load())
+            if self.placement:
+                # half-strength credit: the blocks were promised to this
+                # replica at drain time but may not be resident yet
+                score += 0.5 * self.affinity_weight \
+                    * self._adopted_frac(chain, rep)
             scored.append((score, hit, i))
         scored.sort(key=lambda t: (-t[0], t[2]))
         return scored

@@ -112,6 +112,23 @@ class LatencyTable:
                    prefill_chunk=d["prefill_chunk"],
                    overhead_s=d.get("overhead_s", 0.0))
 
+    def save(self, path: str) -> None:
+        """Persist to JSON (``experiments/calibration/`` convention)."""
+        import json
+        import os
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.as_dict(), f, indent=2)
+            f.write("\n")
+
+    @classmethod
+    def load(cls, path: str) -> "LatencyTable":
+        import json
+        with open(path) as f:
+            return cls.from_dict(json.load(f))
+
     @classmethod
     def from_roofline(cls, resolved, *, batches=(1, 8, 32),
                       contexts=(64, 512, 2048)) -> "LatencyTable":
@@ -374,6 +391,10 @@ class FleetStats:
     iterations: int
     retries: int
     energy_j: float | None
+    handoffs: int = 0                 # disaggregated runs only
+    handoff_bytes: float = 0.0
+    handoff_shared_tokens: int = 0
+    prefill_replicas: int = 0
 
     @property
     def total_tokens(self) -> int:
@@ -434,6 +455,11 @@ class FleetStats:
             out["slo_attainment"] = round(self.slo_attainment(slo), 4)
             out["goodput_tokens_per_s"] = round(
                 self.goodput_tokens_per_s(slo), 2)
+        if self.prefill_replicas:
+            out["prefill_replicas"] = self.prefill_replicas
+            out["handoffs"] = self.handoffs
+            out["handoff_bytes"] = round(self.handoff_bytes, 1)
+            out["handoff_shared_tokens"] = self.handoff_shared_tokens
         if self.energy_j is not None:
             out["energy_j"] = round(self.energy_j, 2)
             out["energy_j_per_token"] = round(self.energy_j_per_token(), 6)
@@ -594,10 +620,215 @@ class FleetSimulator:
                 self.replicas.append(SimReplica(self.spec))
         elif desired < len(active):
             # drain the least-loaded replicas; they stop taking traffic
-            # and disappear from routing once empty
+            # and disappear from routing once empty.  A victim's prefix
+            # heat is adopted into the router's placement map pointing at
+            # the coldest survivor, so tenant affinity survives the
+            # scale-down instead of scattering to cold replicas.
             victims = sorted(active, key=lambda r: r.queue_depth())
-            for r in victims[:len(active) - desired]:
+            n_drop = len(active) - desired
+            survivors = [r for r in active if r not in victims[:n_drop]]
+            for r in victims[:n_drop]:
                 r.draining = True
+                if survivors and r.prefix and \
+                        hasattr(self.router, "adopt_placement"):
+                    target = min(survivors, key=lambda s: s.queue_depth())
+                    self.router.adopt_placement(list(r.prefix), target)
+
+
+# ---------------------------------------------------------------------------
+# disaggregated fleet: prefill-class + decode-class replicas
+# ---------------------------------------------------------------------------
+
+_HANDOFF = 3
+
+
+class _DecodeReplica(SimReplica):
+    """Decode-class replica: admission installs the transferred chain
+    into the prefix index (the handoff moved the pages here) but never
+    re-runs prefill — ``remaining_prefill`` arrives already at zero."""
+
+    def _admit(self, now: float):
+        while self.queue and len(self.running) < self.spec.num_slots:
+            sr = self.queue.popleft()
+            if sr.admit_t is None:
+                sr.admit_t = now
+            for h in sr.chain:
+                self.prefix[h] = None
+                self.prefix.move_to_end(h)
+            while len(self.prefix) > self.spec.prefix_blocks:
+                self.prefix.popitem(last=False)
+            self.running.append(sr)
+
+
+def disagg_replica_specs(resolved_prefill, resolved_decode, *,
+                         prefix_blocks: int = 64,
+                         max_queue: int | None = None
+                         ) -> tuple[ReplicaSpec, ReplicaSpec]:
+    """Two :class:`ReplicaSpec` classes from phase-resolved deployments.
+
+    The prefill class prices chunk advancement off the prefill-phase
+    roofline (one step advances every slot by one chunk, so per-row cost
+    is ``step_seconds / num_slots``) and carries a negligible decode
+    grid; the decode class is the decode-phase memory roofline with
+    ``prefill_chunk_s = 0`` — decode steps never interleave with chunks,
+    which is exactly the interference disaggregation removes.
+    """
+    dt = LatencyTable.from_roofline(resolved_decode)
+    dt = dataclasses.replace(dt, prefill_chunk_s=0.0)
+    chunk_s = resolved_prefill.step_seconds \
+        / max(resolved_prefill.num_slots, 1)
+    pt = LatencyTable(
+        batches=dt.batches, contexts=dt.contexts,
+        decode_s=np.full_like(np.asarray(dt.decode_s), 1e-9),
+        prefill_chunk_s=float(chunk_s),
+        prefill_chunk=int(resolved_prefill.prefill_chunk))
+    mk = lambda lat, res: ReplicaSpec(
+        latency=lat, num_slots=res.num_slots,
+        max_queue=max_queue if max_queue is not None else 2 * res.num_slots,
+        page_size=res.page_size, prefix_blocks=prefix_blocks)
+    return mk(pt, resolved_prefill), mk(dt, resolved_decode)
+
+
+class DisaggFleetSimulator(FleetSimulator):
+    """Fleet of prefill-class and decode-class replicas with KV handoff.
+
+    Arrivals route to prefill replicas (prefix affinity applies there —
+    a hit skips chunk compute).  When a request's prefill completes, a
+    decode replica is chosen **KV-aware** via the router's scoring over
+    the decode class: a replica already holding leading blocks of the
+    chain (from an earlier handoff of the same tenant) both scores
+    higher and shrinks the transfer.  The handoff itself costs
+    ``handoff_latency_s + moved_tokens * kv_token_bytes / bandwidth``
+    before the request joins the decode replica's queue.  TTFT lands at
+    prefill completion (the final chunk samples the first token, as in
+    the real engine); TPOT absorbs the transfer delay.
+
+    ``self.replicas`` is the decode class, so the inherited autoscaler
+    path (including drain-heat adoption) scales decode capacity.
+    """
+
+    def __init__(self, prefill_spec: ReplicaSpec, n_prefill: int,
+                 decode_spec: ReplicaSpec, n_decode: int, router, *,
+                 kv_token_bytes: float, handoff_gbs: float = 64.0,
+                 handoff_latency_s: float = 0.0005, autoscaler=None,
+                 prefill_power_w: float | None = None):
+        super().__init__(decode_spec, 0, router, autoscaler=autoscaler)
+        self.replicas = [_DecodeReplica(decode_spec)
+                         for _ in range(n_decode)]
+        self.prefill_spec = prefill_spec
+        self.prefill_replicas = [SimReplica(prefill_spec)
+                                 for _ in range(n_prefill)]
+        self.kv_token_bytes = float(kv_token_bytes)
+        self.handoff_gbs = float(handoff_gbs)
+        self.handoff_latency_s = float(handoff_latency_s)
+        self.prefill_power_w = prefill_power_w
+        self.handoffs = 0
+        self.handoff_bytes = 0.0
+        self.handoff_shared_tokens = 0
+
+    def run(self, trace: tr.Trace) -> FleetStats:
+        chains = tr.tenant_chains(trace, self.spec.page_size)
+        served: list[SimRequest] = []
+        shed: list[SimRequest] = []
+        for r in trace.requests:
+            self._push(r.arrival, _ARRIVE, SimRequest(r, chains[r.tenant]))
+        if self.autoscaler is not None:
+            self._push(self.autoscaler.interval_s, _SCALE, None)
+        t_end = 0.0
+        while self._heap:
+            t, _, kind, payload = heapq.heappop(self._heap)
+            t_end = max(t_end, t)
+            if kind == _ARRIVE:
+                self._route(t, payload, shed)
+            elif kind == _WAKE:
+                rep = payload
+                if rep.plan is not None and rep.plan[0] <= t + 1e-12:
+                    self._apply_jump(t, rep, served)
+                    self._plan(t, rep)
+            elif kind == _HANDOFF:
+                sr, rep = payload
+                rep.queue.append(sr)
+                if rep.plan is None:
+                    self._plan(t, rep)
+            else:   # _SCALE
+                if any(h[2] != _SCALE for h in self._heap):
+                    self._autoscale(t)
+                    self._push(t + self.autoscaler.interval_s, _SCALE, None)
+        duration = max(t_end, trace.duration)
+        reps = self.prefill_replicas + self.replicas
+        return FleetStats(
+            served=served, shed=shed, duration=duration,
+            replicas=len(reps), busy_s=[r.busy_s for r in reps],
+            iterations=sum(r.iterations for r in reps),
+            retries=self._retries, energy_j=self._energy(duration),
+            handoffs=self.handoffs, handoff_bytes=self.handoff_bytes,
+            handoff_shared_tokens=self.handoff_shared_tokens,
+            prefill_replicas=len(self.prefill_replicas))
+
+    def _energy(self, duration: float) -> float | None:
+        dec = None
+        if self.spec.energy_j_per_token is not None:
+            dec = self.spec.energy_j_per_token \
+                * sum(r.tokens_out for r in self.replicas)
+        elif self.spec.power_w is not None:
+            dec = self.spec.power_w \
+                * sum(r.busy_s for r in self.replicas)
+        pre = None
+        if self.prefill_power_w is not None:
+            pre = self.prefill_power_w \
+                * sum(r.busy_s for r in self.prefill_replicas)
+        if dec is None and pre is None:
+            return None
+        return (dec or 0.0) + (pre or 0.0)
+
+    # arrivals go to the prefill class
+    def _route(self, now: float, sr: SimRequest, shed: list):
+        cand = [r for r in self.prefill_replicas if not r.draining] \
+            or self.prefill_replicas
+        d: RouteDecision = self.router.route(
+            now, sr.req.prompt_len, sr.chain, cand, retries=sr.retries)
+        if d.action == "admit":
+            rep = cand[d.replica]
+            sr.replica = self.prefill_replicas.index(rep)
+            rep.queue.append(sr)
+            if rep.plan is None:
+                self._plan(now, rep)
+        elif d.action == "retry":
+            sr.retries += 1
+            self._retries += 1
+            self._push(now + d.delay_s, _ARRIVE, sr)
+        else:
+            sr.shed_reason = d.reason
+            shed.append(sr)
+
+    def _apply_jump(self, now: float, rep, served: list):
+        super()._apply_jump(now, rep, served)
+        if isinstance(rep, _DecodeReplica):
+            return
+        # prefill class: completed prompts leave for the decode tier
+        # instead of decoding in place (single-token outputs already
+        # finished inside the jump, exactly like the real engine)
+        done = [r for r in rep.running if r.remaining_prefill == 0]
+        for r in done:
+            rep.running.remove(r)
+            self._dispatch(now, r)
+
+    def _dispatch(self, now: float, sr: SimRequest):
+        """KV-aware decode placement at prefill-completion time."""
+        cand = [r for r in self.replicas if not r.draining] or self.replicas
+        order = self.router.order(now, sr.req.prompt_len, sr.chain, cand)
+        pick = next((e for e in order if not cand[e[2]].saturated()),
+                    order[0])
+        _, hit, i = pick
+        rep = cand[i]
+        sr.replica = self.replicas.index(rep)
+        hit = min(hit, sr.req.prompt_len)
+        moved = max(sr.req.prompt_len - hit, 0) * self.kv_token_bytes
+        delay = self.handoff_latency_s + moved / (self.handoff_gbs * 1e9)
+        self.handoffs += 1
+        self.handoff_bytes += moved
+        self.handoff_shared_tokens += hit
+        self._push(now + delay, _HANDOFF, (sr, rep))
 
 
 # ---------------------------------------------------------------------------

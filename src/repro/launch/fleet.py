@@ -33,6 +33,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import os
 
 import numpy as np
 
@@ -40,7 +41,8 @@ from repro.configs import get_config, reduced_config
 from repro.fleet import traffic as tr
 from repro.fleet.autoscaler import (ReactiveAutoscaler, TrafficEnvelope,
                                     default_candidates, plan_candidate,
-                                    plan_fleet, replica_power_w)
+                                    plan_disagg_fleet, plan_fleet,
+                                    replica_power_w)
 from repro.fleet.router import SLO, PrefixAffinityRouter, RoundRobinRouter
 from repro.fleet.simulator import (FleetSimulator, LatencyTable, ReplicaSpec,
                                    calibrate, cross_check)
@@ -77,21 +79,38 @@ def _spec_from_args(args) -> DeploymentSpec:
         max_slots=args.max_slots, stacks_per_device=args.stacks)
 
 
+def _calib_path(args, cfg) -> str:
+    """``experiments/calibration/<arch>--<sku-key>.json`` — the (arch,
+    SKU) key the calibrated table is persisted and looked up under."""
+    sku = args.sku if args.sku != "rpu-cu" else f"rpu-cu{args.stacks}"
+    return os.path.join(args.calibration_dir, f"{cfg.name}--{sku}.json")
+
+
 def _simulate(args, trace: tr.Trace, slo: SLO) -> int:
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced_config(cfg)
     model = build_model(cfg)
     spec = _spec_from_args(args)
+    # a persisted calibration for this (arch, SKU) beats the analytic
+    # roofline; the roofline beats the synthetic gate table
+    table = None
+    cpath = _calib_path(args, cfg)
+    if os.path.exists(cpath):
+        table = LatencyTable.load(cpath)
+        print(f"using calibrated table {cpath}")
     try:
         resolved = spec.resolve(model)
-        table = LatencyTable.from_roofline(resolved)
+        if table is None:
+            table = LatencyTable.from_roofline(resolved)
         num_slots = resolved.num_slots
         power = replica_power_w(spec, resolved.tp)
     except Exception as e:   # tiny reduced models may not resolve a SKU
-        print(f"note: roofline table unavailable ({e}); "
-              f"using the synthetic gate table")
-        table, num_slots, power = gate_table(), 8, None
+        if table is None:
+            print(f"note: roofline table unavailable ({e}); "
+                  f"using the synthetic gate table")
+            table = gate_table()
+        num_slots, power = 8, None
     rspec = ReplicaSpec(latency=table, num_slots=num_slots,
                         max_queue=2 * num_slots, page_size=spec.page_size,
                         prefix_blocks=args.prefix_blocks, power_w=power)
@@ -137,6 +156,23 @@ def _plan(args, trace: tr.Trace, slo: SLO) -> int:
           f"{baseline.die_mm2 / best.die_mm2:.1f}x die, "
           f"{baseline.energy_j_per_token / best.energy_j_per_token:.1f}x "
           f"J/token vs chosen")
+    if args.disagg:
+        cands = default_candidates(model, base)
+        dbest, dplans = plan_disagg_fleet(model, env, slo, cands, cands,
+                                          headroom=args.headroom,
+                                          handoff_gbs=args.handoff_gbs)
+        print("--- disaggregated (phase-specialized SKUs)")
+        for p in dplans:
+            if p.feasible:
+                print(json.dumps(p.as_dict()))
+        print(f"chosen: {dbest.prefill.name} x {dbest.prefill.replicas} "
+              f"prefill + {dbest.decode.name} x {dbest.decode.replicas} "
+              f"decode ({dbest.die_mm2:.0f} mm2, {dbest.power_w:.0f} W, "
+              f"{dbest.energy_j_per_token:.4f} J/tok)")
+        print(f"vs colocated {best.name} x {best.replicas}: "
+              f"{best.die_mm2 / dbest.die_mm2:.2f}x die, "
+              f"{best.energy_j_per_token / dbest.energy_j_per_token:.2f}x "
+              f"J/token")
     return 0
 
 
@@ -148,6 +184,10 @@ def _calibrate(args, trace: tr.Trace, slo: SLO) -> int:
     cfg = reduced_config(get_config(args.arch))
     model = build_model(cfg)
     params = jax.device_put(model.init(jax.random.PRNGKey(args.seed)))
+    if trace.vocab > cfg.vocab_size:
+        # materialized prompts must be valid token ids for the reduced
+        # model that replays them (presence rows index by token id)
+        trace = dataclasses.replace(trace, vocab=cfg.vocab_size)
     max_len = max(trace.lengths.prompt_max + trace.lengths.output_max + 8,
                   args.max_len)
     eng = ContinuousServeEngine(
@@ -156,7 +196,10 @@ def _calibrate(args, trace: tr.Trace, slo: SLO) -> int:
         cache_dtype=jnp.float32, prefill_chunk=32,
         enable_prefix_cache=False)
     res = cross_check(eng, trace)
-    res.pop("table")
+    table = LatencyTable.from_dict(res.pop("table"))
+    cpath = _calib_path(args, cfg)
+    table.save(cpath)
+    print(f"calibration table -> {cpath}")
     print(json.dumps(res, indent=2))
     return 0
 
@@ -199,6 +242,14 @@ def main(argv=None) -> int:
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--headroom", type=float, default=1.25)
     ap.add_argument("--baseline-sku", default="h200")
+    ap.add_argument("--disagg", action="store_true",
+                    help="with --plan: also price phase-specialized "
+                         "prefill/decode SKU pairings")
+    ap.add_argument("--handoff-gbs", type=float, default=64.0,
+                    help="KV handoff bandwidth between phases, GB/s")
+    ap.add_argument("--calibration-dir", default="experiments/calibration",
+                    help="persisted (arch, SKU) latency tables: "
+                         "--calibrate writes, simulate reads")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 

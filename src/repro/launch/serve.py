@@ -132,6 +132,12 @@ def main(argv=None) -> int:
                          "target itself (acceptance ~1; a plumbing check)")
     ap.add_argument("--gamma", type=int, default=4,
                     help="draft lookahead per speculative window")
+    ap.add_argument("--disaggregate", default=None, metavar="P:D",
+                    help="phase-split continuous serving behind the KV-page "
+                         "handoff: with --mesh, prefill runs on the first P "
+                         "and decode on the next D device slices of the "
+                         "model axis (P+D <= its size); without --mesh the "
+                         "two phase engines share the host device")
     ap.add_argument("--mesh", default=None, metavar="DxM",
                     help="shard the continuous serve path over a "
                          "(data=D, model=M) mesh: KV page pools split "
@@ -189,6 +195,23 @@ def main(argv=None) -> int:
         print("--mesh shards the continuous backend; "
               f"ignoring it for backend={backend}")
         serve_mesh = None
+    disagg = None
+    if args.disaggregate:
+        if backend != "continuous":
+            print("--disaggregate splits the continuous backend; "
+                  f"ignoring it for backend={backend}")
+        else:
+            try:
+                p_dev, d_dev = (int(x) for x in args.disaggregate.split(":"))
+            except ValueError:
+                print(f"--disaggregate wants 'P:D', got "
+                      f"{args.disaggregate!r}")
+                return 1
+            disagg = (p_dev, d_dev)
+    pmesh = dmesh = serve_mesh
+    if disagg is not None and serve_mesh is not None:
+        from repro.parallel.plan import split_mesh
+        pmesh, dmesh = split_mesh(serve_mesh, disagg[0], disagg[1])
     mesh = make_small_mesh()
     plan = make_plan(cfg, mesh, global_batch=args.batch, shape_kind="decode")
     max_len = args.prompt_len + args.max_new + 1
@@ -249,12 +272,17 @@ def main(argv=None) -> int:
             mix = parse_mix(args.sampling_mix, base) if args.sampling_mix \
                 else [base]
             sps = [mix[i % len(mix)] for i in range(n_req)]
+            dkw = dict(disaggregate=disagg is not None,
+                       prefill_mesh=pmesh, decode_mesh=dmesh)
             if spec is not None:
                 # hardware-derived pool/slots — no manual num_pages knob
                 llm = LLMEngine(model, params, backend="continuous",
                                 spec=spec, speculative=spec_cfg,
-                                enable_prefix_cache=args.prefix_cache)
+                                enable_prefix_cache=args.prefix_cache,
+                                **dkw)
                 print(llm.deployment.describe())
+                if disagg is not None:
+                    print(llm._eng.prefill.deployment.describe())
                 slots = llm._eng.num_slots
             else:
                 slots = args.batch
@@ -265,7 +293,7 @@ def main(argv=None) -> int:
                     prefill_chunk=args.prefill_chunk,
                     cache_dtype=cache_dtype,
                     enable_prefix_cache=args.prefix_cache, mesh=serve_mesh,
-                    tp_reduce=args.tp_reduce, speculative=spec_cfg)
+                    tp_reduce=args.tp_reduce, speculative=spec_cfg, **dkw)
             t0 = time.time()
             outs = llm.generate([pool_prompts[picks[i]] for i in range(n_req)],
                                 sps, max_new_tokens=args.max_new,
@@ -302,6 +330,11 @@ def main(argv=None) -> int:
                       f"accepted/window={stats.accepted_per_window:.2f} "
                       f"drafted={stats.spec_drafted} "
                       f"wasted={stats.spec_wasted}")
+            if disagg is not None:
+                print(f"handoff: {stats.handoffs} chains, "
+                      f"{stats.handoff_pages} pages, "
+                      f"{stats.handoff_bytes} bytes, "
+                      f"{stats.handoff_shared_tokens} prefix-shared tokens")
             q = stats.ttft_quantiles()
             if q is not None:
                 print(f"ttft p50={q[0] * 1e3:.1f}ms p99={q[1] * 1e3:.1f}ms")

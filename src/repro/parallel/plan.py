@@ -509,6 +509,35 @@ def make_paged_serve_plan(cfg: ModelConfig, mesh: Mesh,
                           kv_repl=kv_repl)
 
 
+def split_mesh(mesh: Mesh, n_first: int, n_second: int | None = None,
+               axis: str = "model") -> tuple[Mesh, Mesh]:
+    """Split ``mesh`` into two disjoint submeshes along ``axis`` — the
+    phase slices of a disaggregated deployment (prefill gets the first
+    ``n_first`` positions, decode the next ``n_second``, default the
+    rest).  Each submesh keeps every other axis intact, so the two phase
+    engines can build independent serve plans with DIFFERENT TP degrees
+    over the same pod of devices."""
+    if axis not in mesh.axis_names:
+        raise ValueError(f"mesh {mesh.axis_names} has no {axis!r} axis")
+    ai = mesh.axis_names.index(axis)
+    size = mesh.devices.shape[ai]
+    if n_second is None:
+        n_second = size - n_first
+    if n_first < 1 or n_second < 1 or n_first + n_second > size:
+        raise ValueError(
+            f"cannot split a {size}-way {axis!r} axis into "
+            f"{n_first}+{n_second} device slices")
+    sl = [slice(None)] * mesh.devices.ndim
+    sl[ai] = slice(0, n_first)
+    first = mesh.devices[tuple(sl)]
+    sl[ai] = slice(n_first, n_first + n_second)
+    second = mesh.devices[tuple(sl)]
+    # type(mesh), not Mesh: keeps duck-typed mesh stand-ins (tests, dry
+    # runs on a single host device) flowing through unchanged
+    cls = type(mesh)
+    return cls(first, mesh.axis_names), cls(second, mesh.axis_names)
+
+
 def _as_tuple(x) -> tuple:
     return x if isinstance(x, tuple) else (x,)
 

@@ -101,7 +101,10 @@ class DeploymentSpec:
     cache_dtype    KV-pool dtype (None = engine default bf16).
     max_len        per-request token capacity (prompt + generated).
     page_size      KV page tokens.
-    prefill_chunk  admission chunk tokens (None = 4 pages).
+    prefill_chunk  admission chunk tokens (None = derived from the SKU's
+                   FLOPs knee: the chunk where compute time crosses the
+                   weight-stream time, page-rounded and clamped to
+                   [page_size, min(512, max_len)]).
     max_slots      upper bound on the derived slot count.
     overcommit     capacity admission optimism: slots may cover
                    ``overcommit x`` the pool's worst-case token capacity
@@ -176,6 +179,32 @@ class DeploymentSpec:
         return DeviceBudget(name=chip.name, capacity_bytes=chip.hbm_capacity,
                             decode_bw=bw)
 
+    def _device_compute(self) -> tuple[float, float]:
+        """(effective prefill FLOP/s, weight-stream bytes/s) per device —
+        the compute roofline prefill chunks run against.  The decode
+        bandwidth derate does NOT apply here: a prefill chunk streams the
+        weights once at full sequential bandwidth.  RPU CUs provision
+        compute at ``ops_per_byte`` x their memory bandwidth (paper §IV),
+        so their prefill roofline is weak by design — decode is the phase
+        they are priced for."""
+        hbm = self.hbmco
+        if isinstance(hbm, str):
+            hbm = hbmco_by_name(hbm)
+        if isinstance(self.sku, str) and self.sku == "rpu-cu":
+            hbm = hbm or CANDIDATE_CO
+            rpu = hardware.RPU_DEFAULT
+            bw = min(rpu.cu_mem_bw,
+                     self.stacks_per_device * hbm.bandwidth_gbs * 1e9)
+            return rpu.cu_tops, bw
+        chip = self.sku if isinstance(self.sku, hardware.ChipSpec) \
+            else CHIP_SKUS[self.sku]
+        bw = chip.hbm_bw
+        if hbm is not None:
+            bw = min(chip.hbm_bw,
+                     self.stacks_per_device * hbm.bandwidth_gbs * 1e9)
+        eff = getattr(chip, "compute_efficiency", 0.7)
+        return chip.peak_flops_bf16 * eff, bw
+
     def _resolve_mesh(self, override=None):
         mesh = override if override is not None else self.mesh
         if mesh is None or isinstance(mesh, jax.sharding.Mesh):
@@ -193,12 +222,21 @@ class DeploymentSpec:
     # ---------------- resolution ----------------
     def resolve(self, model, params=None, mesh=None, *, draft=None,
                 draft_params=None, gamma: int = 8,
-                spec_accept_rate: float = 0.7) -> "ResolvedDeployment":
+                spec_accept_rate: float = 0.7,
+                phase: str = "colocated") -> "ResolvedDeployment":
         """Turn the spec into runtime numbers for ``model``.
 
         ``params`` makes the weight budget exact (per-leaf bytes through
         the serve plan's partition specs); without it the footprint
         estimate is used.  ``mesh`` overrides the spec's mesh.
+
+        ``phase`` prices the deployment for one side of a disaggregated
+        split: "prefill" budgets slots/pages for chunked prompt compute
+        (the compute roofline — ``step_seconds`` becomes the batched
+        chunk iteration time and the ceiling counts PROMPT tokens/s),
+        "decode" is the bandwidth-roofline point with no prefill
+        interference (the colocated numbers, tagged), and "colocated"
+        (default) is the single-engine budget.
 
         ``draft`` prices a speculative deployment: the draft's weights
         join the capacity budget, every logical KV page carries BOTH
@@ -213,6 +251,9 @@ class DeploymentSpec:
         from repro.parallel.plan import make_paged_serve_plan, \
             paged_kv_token_bytes
 
+        if phase not in ("colocated", "prefill", "decode"):
+            raise ValueError(f"phase={phase!r}: expected 'colocated', "
+                             f"'prefill', or 'decode'")
         cfg = model.cfg
         # Reject MLA + quantized KV up front with a deployment-level error
         # instead of letting pool construction explode layers deep inside
@@ -316,8 +357,39 @@ class DeploymentSpec:
         # plus prefix-cache slack (caps host allocation on huge SKUs)
         num_pages = 1 + min(budget_pages, 4 * num_slots * max_blocks)
 
+        # -- compute roofline: prefill chunk from the SKU's FLOPs knee --
+        # A chunk of C tokens costs ~2 x active_params x C FLOPs against
+        # one weight stream; the knee C* = F_eff x bytes/weight / (2 x BW)
+        # is where chunk compute time crosses the weight-stream time —
+        # smaller chunks waste bandwidth re-streaming weights, larger ones
+        # only add TTFT.  Rounded to whole pages, clamped to
+        # [page_size, min(512, max_len)]; an explicit prefill_chunk wins.
+        flops_eff, stream_bw = self._device_compute()
+        chunk_knee = flops_eff * per_w / (2.0 * stream_bw)
+        chunk_derived = self.prefill_chunk is None
+        if chunk_derived:
+            prefill_chunk = round(chunk_knee / self.page_size) \
+                * self.page_size
+            prefill_chunk = max(self.page_size,
+                                min(prefill_chunk, 512, self.max_len))
+        else:
+            prefill_chunk = self.prefill_chunk
+
         step_s = (active_bytes + num_slots * kv_ctx) / dev.decode_bw
         ceiling = num_slots / step_s
+        if phase == "prefill":
+            # compute-phase budget: enough concurrent chunks to cover the
+            # weight stream at the chosen width (+1 for admission overlap);
+            # the iteration time is the max of batched chunk compute and
+            # one weight stream, and the ceiling counts PROMPT tokens/s
+            num_slots = max(1, min(slots_cap, self.max_slots,
+                                   int(math.ceil(chunk_knee / prefill_chunk))
+                                   + 1))
+            num_pages = 1 + min(budget_pages, 4 * num_slots * max_blocks)
+            tokens = num_slots * prefill_chunk
+            compute_s = 2.0 * fp.active_params * tokens / (flops_eff * tp)
+            step_s = max(compute_s, active_bytes / stream_bw)
+            ceiling = tokens / step_s
         j_per_tok = None
         if dev.energy_pj_per_bit is not None:
             stream = (active_bytes + num_slots * kv_ctx) * tp
@@ -355,15 +427,18 @@ class DeploymentSpec:
             kv_token_bytes=kv_token,
             budget_tokens=budget_tokens,
             max_len=self.max_len, page_size=self.page_size,
-            prefill_chunk=(self.prefill_chunk
-                           if self.prefill_chunk is not None
-                           else 4 * self.page_size),
+            prefill_chunk=prefill_chunk,
             num_pages=num_pages, num_slots=num_slots,
             max_decode_slots=max_decode_slots,
             mean_context=ctx,
             step_seconds=step_s,
             tokens_per_s_ceiling=ceiling,
-            modeled_j_per_token=j_per_tok)
+            modeled_j_per_token=j_per_tok,
+            phase=phase,
+            chunk_knee_tokens=chunk_knee,
+            prefill_chunk_derived=chunk_derived,
+            prefill_flops=flops_eff,
+            stream_bw=stream_bw)
 
     def _weight_bytes_exact(self, params, plan, tp: int,
                             kv_repl: int) -> float:
@@ -435,6 +510,12 @@ class ResolvedDeployment:
     spec_expected_accepted: float | None = None   # per window, modeled
     spec_window_seconds: float | None = None      # gamma drafts + 1 verify
     spec_tokens_per_s_ceiling: float | None = None
+    # phase-split deployments (resolve(phase=...))
+    phase: str = "colocated"
+    chunk_knee_tokens: float | None = None   # FLOPs-knee chunk, unclamped
+    prefill_chunk_derived: bool = False      # chunk came from the knee
+    prefill_flops: float | None = None       # effective FLOP/s per device
+    stream_bw: float | None = None           # full weight-stream bytes/s
 
     @property
     def pool_bytes_per_device(self) -> int:
@@ -444,6 +525,7 @@ class ResolvedDeployment:
         d = self.device
         lines = [
             f"deployment: {d.name}"
+            + (f" [{self.phase}]" if self.phase != "colocated" else "")
             + (f" x tp={self.tp}" + (f" (kv_repl={self.kv_repl})"
                                      if self.kv_repl > 1 else "")
                if self.tp > 1 else ""),
@@ -462,6 +544,15 @@ class ResolvedDeployment:
             f"ctx {self.mean_context} "
             f"({self.step_seconds * 1e3:.2f} ms/step)",
         ]
+        if self.prefill_chunk_derived and self.chunk_knee_tokens is not None:
+            lines.append(
+                f"  chunk     {self.prefill_chunk} tok from the FLOPs knee "
+                f"({self.prefill_flops / 1e12:.1f} TFLOP/s x "
+                f"{self.spec.weight_format or 'bf16'} weights / "
+                f"2 x {_fmt_bytes(self.stream_bw)}/s = "
+                f"{self.chunk_knee_tokens:.0f} tok, page-rounded)")
+        else:
+            lines.append(f"  chunk     {self.prefill_chunk} tok (explicit)")
         if self.modeled_j_per_token is not None:
             lines.append(f"  energy    "
                          f"{self.modeled_j_per_token * 1e3:.3f} mJ/token "
@@ -501,6 +592,9 @@ class ResolvedDeployment:
             "spec_expected_accepted": self.spec_expected_accepted,
             "spec_window_seconds": self.spec_window_seconds,
             "spec_tokens_per_s_ceiling": self.spec_tokens_per_s_ceiling,
+            "phase": self.phase,
+            "chunk_knee_tokens": self.chunk_knee_tokens,
+            "prefill_chunk_derived": self.prefill_chunk_derived,
         }
 
 

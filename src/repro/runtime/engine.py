@@ -54,7 +54,7 @@ from repro.quant.linear import quantize_params
 from repro.runtime import sampling
 from repro.runtime.sampling import SamplingParams
 from repro.runtime.kv_cache import PagedKVCache
-from repro.runtime.scheduler import RUNNING, Request, Scheduler
+from repro.runtime.scheduler import HANDOFF, RUNNING, Request, Scheduler
 from repro.runtime.speculative import SpeculativeConfig, _check_rewindable
 
 
@@ -244,6 +244,11 @@ class ContinuousStats:
     spec_windows: int = 0         # draft/verify windows across all requests
     spec_drafted: int = 0         # draft proposals made (gamma per window)
     spec_accepted: int = 0        # draft proposals accepted
+    # -- disaggregated serving (all zero on a colocated engine) --
+    handoffs: int = 0             # chains transferred prefill -> decode
+    handoff_pages: int = 0        # pages physically moved
+    handoff_bytes: int = 0        # pool bytes moved (all leaves, both sets)
+    handoff_shared_tokens: int = 0  # transfer skipped via decode-side prefix
     per_request: dict = dataclasses.field(default_factory=dict)
     # per_request[rid] = {"preemptions", "chunks", "shared_tokens", "ttft",
     #                     "tpot", "finish_time", "spec_windows",
@@ -334,10 +339,15 @@ class ContinuousServeEngine:
                  max_top_k: int = sampling.MAX_TOP_K,
                  mesh=None, tp_reduce: str = "auto",
                  max_decode_slots: int | None = None,
-                 speculative: SpeculativeConfig | None = None):
+                 speculative: SpeculativeConfig | None = None,
+                 phase: str = "colocated"):
         if model.cfg.frontend is not None:
             raise NotImplementedError(
                 "continuous batching serves token frontends only")
+        if phase not in ("colocated", "prefill", "decode"):
+            raise ValueError(f"phase={phase!r}: expected 'colocated', "
+                             f"'prefill', or 'decode'")
+        self.phase = phase
         self.model = model
         self.params = params
         # -- DeploymentSpec resolution: pool/slot knobs derived from the
@@ -354,7 +364,8 @@ class ContinuousServeEngine:
                                          if speculative.draft_model
                                          is not None else params),
                            gamma=speculative.gamma)
-            dep = spec.resolve(model, params=params, mesh=mesh, **rkw)
+            dep = spec.resolve(model, params=params, mesh=mesh, phase=phase,
+                               **rkw)
             self.deployment = dep
             mesh = dep.mesh
             num_slots = dep.num_slots if num_slots is None else num_slots
@@ -529,6 +540,19 @@ class ContinuousServeEngine:
         self._copy_page = jax.jit(
             functools.partial(self._copy_page_impl, self._pool_model.plan),
             donate_argnums=(0,))
+        # KV-handoff seam: gather page rows to host / scatter staged rows
+        # into the pools.  One compile per pow-2 chain-length bucket.
+        self._gather_pages = jax.jit(
+            functools.partial(self._gather_pages_impl, self._pool_model.plan))
+        self._scatter_pages = jax.jit(
+            functools.partial(self._scatter_pages_impl, self._pool_model.plan),
+            donate_argnums=(0,))
+        if speculative is not None:
+            self._gather_pages_draft = jax.jit(functools.partial(
+                self._gather_pages_impl, self._draft_pool_model.plan))
+            self._scatter_pages_draft = jax.jit(functools.partial(
+                self._scatter_pages_impl, self._draft_pool_model.plan),
+                donate_argnums=(0,))
         self._sched: Scheduler | None = None
 
     # -- sharded execution --------------------------------------------------
@@ -767,6 +791,34 @@ class ContinuousServeEngine:
         return new_pools
 
     @staticmethod
+    def _gather_pages_impl(plan, pools, ids):
+        """Pull page rows ``ids`` out of every pool leaf (KV handoff read
+        side).  Per-token quantization scale leaves ride in the pools, so
+        they travel with the codes for free."""
+        out = []
+        for si, seg in enumerate(plan):
+            axis = 0 if seg.reps == 1 else 1
+            out.append(tuple(
+                {k: jnp.take(v, ids, axis=axis) for k, v in pool.items()}
+                for pool in pools[si]))
+        return out
+
+    @staticmethod
+    def _scatter_pages_impl(plan, pools, staged, ids):
+        """Write staged page rows into pool pages ``ids`` (KV handoff write
+        side; ``pools`` donated)."""
+        new_pools = []
+        for si, seg in enumerate(plan):
+            if seg.reps == 1:
+                put = lambda a, vals: a.at[ids].set(vals)
+            else:
+                put = lambda a, vals: a.at[:, ids].set(vals)
+            new_pools.append(tuple(
+                {k: put(v, staged[si][pi][k]) for k, v in pool.items()}
+                for pi, pool in enumerate(pools[si])))
+        return new_pools
+
+    @staticmethod
     def _permute_pools(plan, pools, gather):
         """Apply a defrag page permutation to every pool leaf."""
         gather = jnp.asarray(gather)
@@ -857,6 +909,11 @@ class ContinuousServeEngine:
                     sampling_params: SamplingParams | None = None) -> None:
         """Submit one request; it enters the slot batch on a later
         ``step()`` once a slot and pages free up (honoring arrival_time)."""
+        if self.phase == "decode":
+            raise RuntimeError(
+                "a decode-phase engine only accepts requests through the "
+                "KV handoff; submit to the prefill engine (or the "
+                "DisaggServeEngine front)")
         if self._sched is None:
             self.reset()
         if req.sampling is None:
@@ -880,6 +937,73 @@ class ContinuousServeEngine:
                 + f" exceeds max_len {self.max_blocks * self.page_size}")
         self._requests.append(req)
         self._sched.submit([req])
+
+    # -- disaggregated handoff seam (prefill phase <-> decode phase) --------
+    def handoff_ready(self) -> list[Request]:
+        """Requests whose chains are complete and parked for transfer
+        (prefill-phase engines only; deterministic rid order)."""
+        return self._sched.handoff_ready()
+
+    def admit_handoff(self, req: Request, now: float) -> int | None:
+        """Decode-phase admission of a transferred request: binds a slot
+        and allocates/shares its page chain (HANDOFF -> RUNNING).  Returns
+        the shared-token count — decode-side prefix hits shrink the
+        transfer — or None when no slot or pages are free (the chain stays
+        parked on the prefill side: backpressure, not an error)."""
+        return self._sched.admit_handoff(req, now)
+
+    def extract_pages(self, ids: list[int]) -> tuple[list, int]:
+        """Gather the bytes of pool pages ``ids`` to host staging buffers.
+
+        Returns (staged, nbytes): a list of one numpy pool-pytree per pool
+        set (target, then draft when speculative) and the exact payload
+        byte count.  Page-id lists are padded to a pow-2 bucket (scratch
+        page 0) for stable jit shapes; padding bytes are excluded from the
+        accounting."""
+        n = self._bucket(max(len(ids), 1))
+        padded = np.zeros((n,), np.int32)
+        padded[:len(ids)] = ids
+        idx = jnp.asarray(padded)
+        staged = [jax.device_get(self._gather_pages(self._pools, idx))]
+        if self.spec is not None:
+            staged.append(jax.device_get(
+                self._gather_pages_draft(self._draft_pools, idx)))
+        nbytes = sum(int(l.nbytes) for l in jax.tree_util.tree_leaves(staged))
+        return staged, (nbytes * len(ids)) // n
+
+    def install_pages(self, staged: list, ids: list[int]) -> None:
+        """Scatter staged page bytes into this engine's pool pages ``ids``
+        (decode-phase write side of the handoff).  The caller guarantees
+        ``staged`` came from an engine with identical pool geometry and an
+        id list of the same length."""
+        n = self._bucket(max(len(ids), 1))
+        padded = np.zeros((n,), np.int32)
+        padded[:len(ids)] = ids
+        idx = jnp.asarray(padded)
+        self._pools = self._scatter_pages(self._pools, staged[0], idx)
+        if self.spec is not None:
+            self._draft_pools = self._scatter_pages_draft(
+                self._draft_pools, staged[1], idx)
+
+    def finish_handoff(self, req: Request) -> None:
+        """Complete decode-side adoption once the page bytes landed: slot
+        sampling state, the presence row (prompt + already-emitted tokens,
+        exactly what a colocated engine holds at this point), and the
+        decode-side prefix index — transferred chains keep their hashes,
+        so they are shareable and CoW-protected like local ones."""
+        slot = req.slot
+        self._slots.set(slot, req.sampling)
+        self._presence_np[slot] = False
+        self._presence_np[slot][np.asarray(req.prompt)] = True
+        for t in req.tokens:
+            self._presence_np[slot, t] = True
+        self._presence_dirty = True
+        self.cache.index_prompt(slot, req.prompt)
+
+    def release_handoff(self, slot: int) -> None:
+        """Free a transferred chain's prefill-side slot (pages shared into
+        the prefix index keep their refs)."""
+        self._sched.release_handoff(slot)
 
     # -- host loop ----------------------------------------------------------
     @staticmethod
@@ -1009,6 +1133,11 @@ class ContinuousServeEngine:
                     r.first_token_time = self._now()
                 self.cache.index_prompt(r.slot, r.prompt)
                 self._progress(r, outs)
+                if self.phase == "prefill" and r.state == RUNNING:
+                    # disaggregated: park the finished chain for transfer;
+                    # the slot (and its pages) stays held until the decode
+                    # engine adopts it
+                    r.state = HANDOFF
 
     def step(self) -> list[RequestOutput]:
         """One scheduler iteration: admit arrived requests, advance every
@@ -1020,11 +1149,15 @@ class ContinuousServeEngine:
             return []
         sched = self._sched
         outs: list[RequestOutput] = []
-        for r in sched.admit(self._now()):
-            self._slots.set(r.slot, r.sampling)
-            self._presence_np[r.slot] = False
-            self._presence_np[r.slot][np.asarray(r.prompt)] = True
-            self._presence_dirty = True
+        if self.phase != "decode":
+            # a decode-phase engine admits only through admit_handoff();
+            # preemption victims drain back to the prefill engine instead
+            # of re-entering here
+            for r in sched.admit(self._now()):
+                self._slots.set(r.slot, r.sampling)
+                self._presence_np[r.slot] = False
+                self._presence_np[r.slot][np.asarray(r.prompt)] = True
+                self._presence_dirty = True
         # -- chunked prefill, interleaved with the decode iterations --
         if sched.prefilling():
             self._run_prefill_chunks(outs)
@@ -1152,6 +1285,10 @@ class ContinuousServeEngine:
         produced.  ``key`` is the legacy entropy argument: it only seeds
         requests that carry no ``SamplingParams`` of their own when the
         engine default is stochastic."""
+        if self.phase != "colocated":
+            raise RuntimeError(
+                "phase-split engines are driven by DisaggServeEngine.run(), "
+                "not directly")
         if self._sched is not None and self._sched.has_work():
             raise RuntimeError(
                 "run() would reset the engine while incrementally-submitted "
@@ -1204,6 +1341,260 @@ class ContinuousServeEngine:
             spec_windows=self._spec_windows,
             spec_drafted=self._spec_drafted,
             spec_accepted=self._spec_accepted,
+            per_request=per_request,
+            outputs=outputs)
+
+
+class KVHandoff:
+    """KV-page transfer channel between a prefill-phase and a decode-phase
+    engine.
+
+    ``transfer`` moves one finished chain: admit on the decode side (slot +
+    fresh/shared pages in ITS allocator's id space), gather the
+    non-shared source pages to host staging, scatter them into the decode
+    pools (all pool leaves — quantized-KV scale leaves and speculative
+    draft pools travel with the chain), then release the prefill slot.
+    Decode-side prefix hits skip the matched leading pages entirely —
+    the same chained hashes index both sides, so a transferred chain lands
+    in the decode prefix index and later requests with the same prefix
+    transfer only their tail.  Byte accounting is exact (padding pages for
+    the pow-2 jit buckets are excluded).
+
+    Single-host staging (device -> host -> device); a multi-host transport
+    and transfer/decode overlap are recorded follow-ons (ROADMAP).
+    """
+
+    def __init__(self, src: "ContinuousServeEngine",
+                 dst: "ContinuousServeEngine"):
+        for attr in ("page_size", "max_blocks", "cache_dtype"):
+            a, b = getattr(src, attr), getattr(dst, attr)
+            if a != b:
+                raise ValueError(
+                    f"handoff geometry mismatch: {attr}={a!r} on the "
+                    f"prefill side vs {b!r} on the decode side")
+        if (src.spec is None) != (dst.spec is None):
+            raise ValueError(
+                "speculative decoding must be on for both sides of a "
+                "handoff (draft pools travel with the chain) or neither")
+        src_repl = src.serve_plan.kv_repl if src.serve_plan else 1
+        dst_repl = dst.serve_plan.kv_repl if dst.serve_plan else 1
+        if src_repl != dst_repl:
+            raise ValueError(
+                f"handoff across kv_repl {src_repl} vs {dst_repl} meshes "
+                f"needs a head-regrouping repack (recorded follow-on)")
+        self.src = src
+        self.dst = dst
+        self.reset_counters()
+
+    def reset_counters(self) -> None:
+        self.transfers = 0
+        self.pages_moved = 0
+        self.bytes_moved = 0
+        self.shared_tokens = 0
+        self.deferrals = 0
+
+    def transfer(self, req: Request, now: float) -> bool:
+        """Move ``req``'s chain into the decode engine; False when the
+        decode side has no capacity yet (the chain stays parked)."""
+        src, dst = self.src, self.dst
+        src_slot = req.slot
+        src_chain = src.cache.chain(src_slot, req.prompt_len)
+        shared = dst.admit_handoff(req, now)
+        if shared is None:
+            self.deferrals += 1
+            return False
+        dst_chain = dst.cache.chain(req.slot, req.prompt_len)
+        skip = shared // src.page_size   # matched prefix pages: no copy
+        ids_src, ids_dst = src_chain[skip:], dst_chain[skip:]
+        self.shared_tokens += shared
+        if ids_src:
+            staged, nbytes = src.extract_pages(ids_src)
+            dst.install_pages(staged, ids_dst)
+            self.pages_moved += len(ids_src)
+            self.bytes_moved += nbytes
+        dst.finish_handoff(req)
+        src.release_handoff(src_slot)
+        self.transfers += 1
+        return True
+
+
+class DisaggServeEngine:
+    """Disaggregated serving: a prefill-phase and a decode-phase
+    ``ContinuousServeEngine`` joined by a :class:`KVHandoff`.
+
+    Prompts are chunk-prefilled on the prefill engine (its own mesh or
+    mesh slice, its own pool budget), then the finished page chain moves
+    through the handoff into the decode engine, which runs pure fused
+    decode steps — no prefill chunks stealing decode iterations, so TPOT
+    is flat under prompt bursts and TTFT never queues behind a full decode
+    batch (the paper's compute-bound/bandwidth-bound phase split made
+    structural).  Greedy outputs are byte-identical to a colocated engine:
+    seeded per-request sampling streams are keyed by absolute position,
+    the transferred bytes are exact, and decode-side preemption drains
+    back to the prefill engine for a seeded re-prefill restart.
+
+    Same incremental surface as ``ContinuousServeEngine`` —
+    ``add_request()`` / ``step()`` / ``run()`` — with one merged
+    ``ContinuousStats`` (handoff counters filled in).
+    """
+
+    def __init__(self, model: Model, params: Any, *, spec=None,
+                 prefill_mesh=None, decode_mesh=None,
+                 num_slots: int | None = None, page_size: int | None = None,
+                 num_pages: int | None = None, max_len: int | None = None,
+                 prefill_slots: int | None = None,
+                 prefill_pages: int | None = None,
+                 prefill_chunk: int | None = None,
+                 sampling_params: SamplingParams | None = None,
+                 cache_dtype=None, weight_format: str | None = None,
+                 enable_prefix_cache: bool = True,
+                 max_top_k: int = sampling.MAX_TOP_K,
+                 tp_reduce: str = "auto",
+                 max_decode_slots: int | None = None,
+                 speculative: SpeculativeConfig | None = None):
+        common = dict(spec=spec, page_size=page_size, max_len=max_len,
+                      sampling_params=sampling_params,
+                      cache_dtype=cache_dtype, weight_format=weight_format,
+                      enable_prefix_cache=enable_prefix_cache,
+                      max_top_k=max_top_k, tp_reduce=tp_reduce,
+                      speculative=speculative)
+        # each phase resolves its own deployment budget (phase=) — the
+        # prefill side may size fewer slots and pages than decode, and a
+        # different mesh (TP degree) per phase is allowed as long as the
+        # pool geometry matches (KVHandoff checks)
+        self.prefill = ContinuousServeEngine(
+            model, params, phase="prefill", mesh=prefill_mesh,
+            num_slots=prefill_slots if prefill_slots is not None
+            else num_slots,
+            num_pages=prefill_pages if prefill_pages is not None
+            else num_pages,
+            prefill_chunk=prefill_chunk, **common)
+        self.decode = ContinuousServeEngine(
+            model, params, phase="decode", mesh=decode_mesh,
+            num_slots=num_slots, num_pages=num_pages,
+            max_decode_slots=max_decode_slots, **common)
+        self.handoff = KVHandoff(self.prefill, self.decode)
+        self.model = model
+        self.default_sampling = self.decode.default_sampling
+        self._requests: list[Request] = []
+
+    # the decode side is the steady-state resident (the LLM facade's
+    # introspection points: budget, plan, per-token pool bytes)
+    @property
+    def deployment(self):
+        return self.decode.deployment
+
+    @property
+    def serve_plan(self):
+        return self.decode.serve_plan
+
+    @property
+    def num_slots(self) -> int:
+        return self.decode.num_slots
+
+    def kv_token_bytes_per_device(self) -> int:
+        return self.decode.kv_token_bytes_per_device()
+
+    def reset(self) -> None:
+        self.prefill.reset()
+        self.decode.reset()
+        # one clock across both phases: TTFT stamps on the prefill side
+        # and finish stamps on the decode side share an origin
+        self.decode._t0 = self.prefill._t0
+        self.handoff.reset_counters()
+        self._requests = []
+
+    def has_unfinished(self) -> bool:
+        return self.prefill.has_unfinished() or self.decode.has_unfinished()
+
+    def add_request(self, req: Request,
+                    sampling_params: SamplingParams | None = None) -> None:
+        if self.prefill._sched is None or self.decode._sched is None:
+            self.reset()
+        self.prefill.add_request(req, sampling_params)
+        self._requests.append(req)
+
+    def step(self) -> list[RequestOutput]:
+        """One disaggregated iteration: prefill chunks, then chain
+        transfers (in rid order, stopping at decode backpressure), then
+        one fused decode step, then decode-side preemption drain back to
+        the prefill queue."""
+        outs = self.prefill.step()
+        now = self.prefill._now()
+        for r in self.prefill.handoff_ready():
+            if not self.handoff.transfer(r, now):
+                break               # decode side full; chain stays parked
+        outs += self.decode.step()
+        for r in self.decode._sched.drain_preempted():
+            # a decode-side eviction restarts on the PREFILL engine — the
+            # chain is recomputed there and handed off again; seeded
+            # streams and the emitted watermark make the restart invisible
+            self.prefill._sched.requeue(r)
+        return outs
+
+    def run(self, requests: Iterable[Request], *, key=None,
+            defrag_every: int = 0,
+            on_output: Callable[[RequestOutput], None] | None = None
+            ) -> ContinuousStats:
+        """Serve ``requests`` to completion across both engines; same
+        contract as ``ContinuousServeEngine.run``."""
+        if self.has_unfinished():
+            raise RuntimeError(
+                "run() would reset the engines while incrementally-"
+                "submitted requests are unfinished; drive step() to "
+                "completion first")
+        self.reset()
+        self.decode.defrag_every = defrag_every
+        default = None
+        if (key is not None and not self.default_sampling.is_greedy
+                and self.default_sampling.seed == 0):
+            default = dataclasses.replace(self.default_sampling,
+                                          seed=_seed_from_key(key))
+        requests = list(requests)
+        for r in requests:
+            self.add_request(r, sampling_params=default)
+        pe, de = self.prefill._sched, self.decode._sched
+        while pe.has_work() or de.has_work():
+            if not pe.running and not de.running:
+                nxt_t = pe.next_arrival()
+                if nxt_t is None:
+                    break
+                time.sleep(max(nxt_t - self.prefill._now(), 0.0))
+            for o in self.step():
+                if on_output is not None:
+                    on_output(o)
+
+        results = {r.rid: np.asarray(r.tokens[:r.max_new_tokens], np.int32)
+                   for r in requests}
+        per_request = {r.rid: {"preemptions": r.preemptions,
+                               "chunks": r.chunks,
+                               "shared_tokens": r.shared_tokens,
+                               "ttft": r.ttft,
+                               "tpot": r.tpot,
+                               "finish_time": r.finish_time,
+                               "spec_windows": r.spec_windows,
+                               "spec_accepted": r.spec_accepted}
+                       for r in requests}
+        outputs = {r.rid: self.decode._make_output(r, [], finished=True)
+                   for r in requests}
+        pf, dc, ho = self.prefill, self.decode, self.handoff
+        return ContinuousStats(
+            results=results, steps=dc._steps,
+            occupancy=dc._occ_sum / max(dc._steps, 1),
+            wall=pf._now(),
+            preemptions=sum(r.preemptions for r in requests),
+            chunks=pf._n_chunks,
+            prefill_tokens=pf._prefill_tokens,
+            prompt_tokens=pf.cache.lookup_tokens,
+            prefix_hit_tokens=pf.cache.hit_tokens,
+            cow_events=pf.cache.cow_events + dc.cache.cow_events,
+            spec_windows=dc._spec_windows,
+            spec_drafted=dc._spec_drafted,
+            spec_accepted=dc._spec_accepted,
+            handoffs=ho.transfers,
+            handoff_pages=ho.pages_moved,
+            handoff_bytes=ho.bytes_moved,
+            handoff_shared_tokens=ho.shared_tokens,
             per_request=per_request,
             outputs=outputs)
 

@@ -228,6 +228,13 @@ class PagedKVCache:
     def blocks_of(self, slot: int) -> int:
         return len(self.allocator.pages_of(("slot", slot)))
 
+    def chain(self, slot: int, n_tokens: int) -> list[int]:
+        """The page ids backing ``slot``'s first ``n_tokens`` positions, in
+        block order — the unit the disaggregated ``KVHandoff`` transfers
+        between engines (every id is live and owned/shared by the slot)."""
+        return [int(p) for p in
+                self._table[slot, :self._needed_blocks(n_tokens)]]
+
     @property
     def occupancy(self) -> float:
         """Fraction of non-scratch pages currently live."""

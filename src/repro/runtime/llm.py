@@ -46,7 +46,7 @@ import numpy as np
 from repro.models.model import Model
 from repro.runtime import sampling
 from repro.runtime.engine import (
-    ContinuousServeEngine, RequestOutput, ServeEngine,
+    ContinuousServeEngine, DisaggServeEngine, RequestOutput, ServeEngine,
 )
 from repro.runtime.sampling import SamplingParams
 from repro.runtime.scheduler import Request
@@ -82,10 +82,18 @@ class LLMEngine:
                  draft_model: Model | None = None, draft_params: Any = None,
                  gamma: int = 8, speculative=None,
                  default_sampling: SamplingParams | None = None,
-                 mesh=None, tp_reduce: str = "auto"):
+                 mesh=None, tp_reduce: str = "auto",
+                 disaggregate: bool = False,
+                 prefill_mesh=None, decode_mesh=None,
+                 prefill_slots: int | None = None,
+                 prefill_pages: int | None = None):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, "
                              f"got {backend!r}")
+        if disaggregate and backend != "continuous":
+            raise ValueError("disaggregate=True splits the continuous "
+                             "backend into phase engines; other backends "
+                             "have no prefill/decode split to make")
         if mesh is not None and backend != "continuous":
             raise ValueError(
                 "mesh= shards the continuous paged serve path; run the "
@@ -117,15 +125,31 @@ class LLMEngine:
         if backend == "continuous":
             if spec is None and num_pages is None:
                 num_pages = 1 + 2 * num_slots * -(-max_len // page_size)
-            self._eng = ContinuousServeEngine(
-                model, params, num_slots=num_slots, page_size=page_size,
-                num_pages=num_pages, max_len=max_len, spec=spec,
-                sampling_params=self.default_sampling,
-                cache_dtype=cache_dtype, weight_format=weight_format,
-                prefill_chunk=prefill_chunk,
-                enable_prefix_cache=enable_prefix_cache,
-                max_top_k=self.max_top_k, mesh=mesh, tp_reduce=tp_reduce,
-                speculative=speculative)
+            if disaggregate:
+                self._eng = DisaggServeEngine(
+                    model, params, num_slots=num_slots, page_size=page_size,
+                    num_pages=num_pages, max_len=max_len, spec=spec,
+                    prefill_mesh=prefill_mesh if prefill_mesh is not None
+                    else mesh,
+                    decode_mesh=decode_mesh if decode_mesh is not None
+                    else mesh,
+                    prefill_slots=prefill_slots, prefill_pages=prefill_pages,
+                    sampling_params=self.default_sampling,
+                    cache_dtype=cache_dtype, weight_format=weight_format,
+                    prefill_chunk=prefill_chunk,
+                    enable_prefix_cache=enable_prefix_cache,
+                    max_top_k=self.max_top_k, tp_reduce=tp_reduce,
+                    speculative=speculative)
+            else:
+                self._eng = ContinuousServeEngine(
+                    model, params, num_slots=num_slots, page_size=page_size,
+                    num_pages=num_pages, max_len=max_len, spec=spec,
+                    sampling_params=self.default_sampling,
+                    cache_dtype=cache_dtype, weight_format=weight_format,
+                    prefill_chunk=prefill_chunk,
+                    enable_prefix_cache=enable_prefix_cache,
+                    max_top_k=self.max_top_k, mesh=mesh, tp_reduce=tp_reduce,
+                    speculative=speculative)
         elif backend == "static":
             self._eng = ServeEngine(
                 model, params, max_len=max_len, spec=spec,

@@ -5,6 +5,14 @@ Request lifecycle:  PENDING --admit--> PREFILL --chunks done--> RUNNING
                         +----preempt------+------------------------+
                                                 RUNNING --finish--> FINISHED
 
+Disaggregated serving splits the lifecycle across two engines: on a
+prefill-phase engine, chunk completion parks the request in HANDOFF
+(pages held, no decode) until the ``KVHandoff`` seam transfers its page
+chain into a decode-phase engine, where it enters RUNNING directly via
+``admit_handoff``.  A decode-side preemption re-queues the victim as
+PENDING; the disaggregated driver drains it back to the prefill engine
+(``drain_preempted``), whose re-prefill reproduces the identical chain.
+
 The scheduler owns admission policy only; the engine drives the loop
 (run one prefill **chunk** for each admitted-but-unfilled request, run one
 fused decode step over every decoding slot, retire finished slots).
@@ -42,6 +50,8 @@ from repro.runtime.kv_cache import PagedKVCache
 from repro.runtime.sampling import SamplingParams
 
 PENDING, PREFILL, RUNNING, FINISHED = "pending", "prefill", "running", "finished"
+# disaggregated serving: prefill finished, page chain awaiting transfer
+HANDOFF = "handoff"
 
 
 @dataclasses.dataclass
@@ -198,6 +208,67 @@ class Scheduler:
             self.running[slot] = req
             admitted.append(req)
         return admitted
+
+    # -- disaggregated handoff ---------------------------------------------
+    def handoff_ready(self) -> list[Request]:
+        """Requests whose prefill finished and whose page chain is parked
+        awaiting transfer to a decode-phase engine."""
+        return sorted((r for r in self.running.values()
+                       if r.state == HANDOFF),
+                      key=lambda r: r.rid)
+
+    def admit_handoff(self, req: Request, now: float) -> int | None:
+        """Admit a prefilled request straight into RUNNING (decode phase).
+
+        Allocates the prompt's page chain in THIS scheduler's cache —
+        consulting the local prefix index, so previously-transferred
+        tenant chains are shared instead of re-copied — and returns the
+        shared token count, or None when no slot/pages are available
+        (the transfer stays queued on the prefill side)."""
+        if not self._free_slots or len(self.running) >= self.max_running:
+            return None
+        slot = self._free_slots[-1]
+        plp = bool(req.sampling and req.sampling.prompt_logprobs)
+        shared = self.cache.admit(slot, req.prompt_len,
+                                  tokens=None if plp else req.prompt)
+        if shared is None:
+            return None
+        self._free_slots.pop()
+        req.state, req.slot = RUNNING, slot
+        req.admit_time = now
+        self.running[slot] = req
+        return shared
+
+    def release_handoff(self, slot: int) -> None:
+        """Free a HANDOFF request's slot after its chain was transferred.
+
+        Slot-keyed (not request-keyed): by transfer time the request's
+        ``slot`` field already points at its decode-side slot.  The
+        request is NOT finished — ownership moved to the decode engine.
+        Pages shared into the prefix index keep their refs, so later
+        prompts with the same prefix skip recompute on this side."""
+        self.cache.release(slot)
+        self.running.pop(slot)
+        self._free_slots.append(slot)
+        if self.on_release:
+            self.on_release(slot)
+
+    def drain_preempted(self) -> list[Request]:
+        """Pop every preempted (PENDING) request off the waiting queue.
+
+        A decode-phase engine cannot re-prefill a preemption victim; the
+        disaggregated driver drains them back to the prefill engine."""
+        out = [r for r in self.waiting if r.state == PENDING]
+        if out:
+            self.waiting = deque(r for r in self.waiting
+                                 if r.state != PENDING)
+        return out
+
+    def requeue(self, req: Request) -> None:
+        """Front-queue a preemption victim returned by the decode engine
+        (mirrors ``preempt``'s appendleft priority on this side)."""
+        req.state = PENDING
+        self.waiting.appendleft(req)
 
     def ensure_capacity(self, req: Request, upto: int | None = None) -> bool:
         """Back ``req``'s write positions through ``upto`` (default: just

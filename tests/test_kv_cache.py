@@ -11,7 +11,8 @@ from repro.kernels.decode_attention.ref import (
     decode_attention_ref, paged_decode_attention_ref,
 )
 from repro.models.model import build_model
-from repro.runtime.engine import ContinuousServeEngine, ServeEngine
+from repro.runtime.engine import (ContinuousServeEngine, DisaggServeEngine,
+                                  ServeEngine)
 from repro.runtime.kv_cache import SCRATCH_PAGE, PageAllocator, PagedKVCache
 from repro.runtime.scheduler import Request, Scheduler
 
@@ -470,3 +471,130 @@ def test_unsupported_families_raise():
     hy = build_model(reduced_config(get_config("hymba-1-5b")))
     with pytest.raises(NotImplementedError):
         hy.init_paged_cache(8, 4)
+
+
+# ---------------------------------------------------------------------------
+# Disaggregated handoff: page-chain transfer invariants
+# ---------------------------------------------------------------------------
+
+
+def _page_bytes(model, pools, page: int) -> dict:
+    """Every pool leaf's bytes for one physical page, keyed by
+    (segment, kind, leaf name) — the unit the handoff must move intact."""
+    out = {}
+    for si, seg in enumerate(model.plan):
+        ax = 0 if seg.reps == 1 else 1            # page axis per stacking
+        for ki in range(len(seg.kinds)):
+            for leaf in pools[si][ki]:
+                arr = np.asarray(pools[si][ki][leaf])
+                out[(si, ki, leaf)] = np.take(arr, page, axis=ax).copy()
+    return out
+
+
+def _assert_conserved(cache) -> None:
+    a = cache.allocator
+    a.check()
+    assert a.num_free + a.num_live == a.num_pages - 1
+
+
+def test_handoff_refcount_conservation_every_step(small):
+    """Ref-counts stay conserved on BOTH allocators through a full
+    disaggregated serve: transfer releases the prefill slot, admission
+    may prefix-share on the decode side, and no page leaks or
+    double-frees survive either pool."""
+    cfg, model, params = small
+    eng = DisaggServeEngine(model, params, num_slots=3, page_size=4,
+                            num_pages=24, max_len=32, prefill_chunk=5,
+                            enable_prefix_cache=True)
+    base = jax.random.randint(jax.random.PRNGKey(2), (2, 12), 0,
+                              cfg.vocab_size)
+    prompts = np.asarray(base)[np.array([0, 1, 0, 1, 0, 0])]
+    for i in range(len(prompts)):
+        eng.add_request(Request(rid=i, prompt=prompts[i], max_new_tokens=6))
+    steps = 0
+    while eng.has_unfinished():
+        eng.step()
+        _assert_conserved(eng.prefill.cache)
+        _assert_conserved(eng.decode.cache)
+        steps += 1
+        assert steps < 500, "disaggregated serve did not converge"
+    assert eng.handoff.transfers == len(prompts)
+    assert eng.handoff.shared_tokens > 0          # decode-side prefix hits
+    # all slots drained: live pages are exactly the indexed prefix pages
+    _assert_conserved(eng.prefill.cache)
+    _assert_conserved(eng.decode.cache)
+
+
+def test_handoff_cow_donor_bytes_identical(small):
+    """A transferred chain lands in the decode prefix index with its
+    hashes intact; a second request sharing it must never perturb the
+    donor's page bytes through its own handoff + decode writes."""
+    cfg, model, params = small
+    eng = DisaggServeEngine(model, params, num_slots=2, page_size=4,
+                            num_pages=24, max_len=32, prefill_chunk=5,
+                            enable_prefix_cache=True)
+    prompt = np.asarray(jax.random.randint(jax.random.PRNGKey(4), (13,), 0,
+                                           cfg.vocab_size))
+    a = Request(rid=0, prompt=prompt, max_new_tokens=6)
+    eng.add_request(a)
+    steps = 0
+    while eng.handoff.transfers == 0:
+        eng.step()
+        steps += 1
+        assert steps < 100, "first chain never transferred"
+    # after transfer, a.slot is the DECODE-side slot; its full prompt
+    # blocks are the shareable donor pages
+    donor = eng.decode.cache.chain(a.slot, a.prompt_len)[:3]
+    snap = {p: _page_bytes(model, eng.decode._pools, p) for p in donor}
+    while eng.has_unfinished():
+        eng.step()
+    # same prompt again: handoff admission shares the donor's full blocks
+    b = Request(rid=1, prompt=prompt.copy(), max_new_tokens=6)
+    eng.add_request(b)
+    while eng.has_unfinished():
+        eng.step()
+    assert b.shared_tokens == 12                  # 3 full blocks matched
+    assert eng.handoff.shared_tokens >= 12
+    for p in donor:
+        after = _page_bytes(model, eng.decode._pools, p)
+        for key, before in snap[p].items():
+            np.testing.assert_array_equal(
+                after[key], before,
+                err_msg=f"donor page {p} leaf {key} perturbed")
+    _assert_conserved(eng.decode.cache)
+
+
+def test_handoff_moves_quantized_scale_leaves(small):
+    """fp8 page pools carry per-token k_scale/v_scale metadata leaves;
+    the handoff must move them with the codes, byte for byte, or the
+    decode side dequantizes garbage."""
+    cfg, model, params = small
+    eng = DisaggServeEngine(model, params, num_slots=2, page_size=4,
+                            num_pages=16, max_len=32, prefill_chunk=4,
+                            cache_dtype="fp8", enable_prefix_cache=True)
+    prompt = np.asarray(jax.random.randint(jax.random.PRNGKey(6), (11,), 0,
+                                           cfg.vocab_size))
+    r = Request(rid=0, prompt=prompt, max_new_tokens=4)
+    eng.add_request(r)
+    steps = 0
+    while not eng.prefill.handoff_ready():
+        eng.prefill.step()
+        steps += 1
+        assert steps < 100, "prefill never parked the chain"
+    src_chain = eng.prefill.cache.chain(r.slot, r.prompt_len)
+    src = [_page_bytes(model, eng.prefill._pools, p) for p in src_chain]
+    assert eng.handoff.transfer(r, 0.0)
+    dst_chain = eng.decode.cache.chain(r.slot, r.prompt_len)
+    assert len(dst_chain) == len(src_chain)
+    leaf_names = set()
+    for s, d in zip(src, dst_chain):
+        got = _page_bytes(model, eng.decode._pools, d)
+        for key, before in s.items():
+            leaf_names.add(key[2])
+            np.testing.assert_array_equal(
+                got[key], before, err_msg=f"leaf {key} lost in transfer")
+    assert {"k_scale", "v_scale"} <= leaf_names   # the metadata travelled
+    assert eng.handoff.pages_moved == len(src_chain)
+    assert eng.handoff.bytes_moved > 0
+    _assert_conserved(eng.prefill.cache)
+    _assert_conserved(eng.decode.cache)
