@@ -23,6 +23,7 @@ MODULES = [
     ("spec_decode", "Fig 14 — speculative decoding comparison"),
     ("fleet", "ours — fleet router + autoscaler gates (simulated)"),
     ("disagg", "ours — disaggregated prefill/decode gates"),
+    ("state_cache", "ours — stateful cache layouts: ring + state residency"),
     ("roofline_table", "ours — 40-cell roofline table from the dry-run"),
 ]
 

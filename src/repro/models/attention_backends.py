@@ -33,6 +33,7 @@ import jax.numpy as jnp
 
 from repro.models import layers
 from repro.models.common import NEG_INF, ModelConfig, blocked_attention
+from repro.models.ssm import init_ssm_state
 from repro.kernels.decode_attention.ref import gather_pages, paged_valid_mask
 from repro.parallel.hints import tp_row_dot
 from repro.quant import kv as kvq
@@ -115,6 +116,69 @@ def backend_for_kind(kind: str) -> AttentionBackend | None:
     except KeyError:
         raise ValueError(f"unknown block kind {kind!r}") from None
     return get_backend(name) if name else None
+
+
+# ---------------------------------------------------------------------------
+# Cache layouts: what a block kind keeps resident per serving slot
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheLayout:
+    """Per-slot cache residency contract for one block kind.
+
+    The attention backends above describe *how* a family computes; the
+    cache layout describes *what it keeps resident* while serving — the
+    axis ``DeploymentSpec.resolve`` budgets and ``runtime.state_cache``
+    allocates:
+
+      * ``kv``     — the kind writes token-indexed pages (full-context for
+        prefix layers, ring-reclaimed O(window) for sliding-window layers;
+        which of the two is a property of the segment's window, not the
+        kind, so it lives in ``runtime.state_cache.SegmentCacheLayout``);
+      * ``state``  — the kind carries constant-size recurrent state (SSM
+        conv tail + SSD state), pooled per slot by the engine and stepped
+        via ``ssm_decode_step``;
+      * ``init_state_pool`` — constructor for the slot-indexed state
+        pytree, ``(cfg, num_slots) -> pytree``, leading axis = slot;
+      * ``state_partition_spec`` — leaf key -> UNSTACKED state-leaf dim
+        sharded over the mesh's model axis (None = replicated), mirroring
+        ``AttentionBackend.paged_partition_spec`` for state pools.
+    """
+    kv: bool
+    state: bool
+    init_state_pool: Callable[..., dict] | None = None
+    state_partition_spec: dict[str, int | None] | None = None
+
+
+_SSM_STATE_LAYOUT = dict(
+    state=True,
+    init_state_pool=lambda cfg, num_slots: init_ssm_state(cfg, num_slots),
+    # conv (slot, K-1, conv_dim) and ssm (slot, H, P, N) state replicates
+    # across the TP ring today (sharded stateful serving is gated in
+    # ``parallel.plan.make_paged_serve_plan``); the seam is declared here
+    # so lifting that gate means editing specs, not the engine.
+    state_partition_spec={"conv": None, "ssm": None},
+)
+
+# block kind -> residency layout.  Attention kinds are pure-KV; ssm is
+# pure-state; hybrid blocks own both a KV half and a state half in the
+# SAME slot (admission/eviction moves them together).
+KIND_LAYOUT: dict[str, CacheLayout] = {
+    "attn_dense": CacheLayout(kv=True, state=False),
+    "attn_moe": CacheLayout(kv=True, state=False),
+    "mla_dense": CacheLayout(kv=True, state=False),
+    "mla_moe": CacheLayout(kv=True, state=False),
+    "hybrid": CacheLayout(kv=True, **_SSM_STATE_LAYOUT),
+    "ssm": CacheLayout(kv=False, **_SSM_STATE_LAYOUT),
+}
+
+
+def layout_for_kind(kind: str) -> CacheLayout:
+    try:
+        return KIND_LAYOUT[kind]
+    except KeyError:
+        raise ValueError(f"unknown block kind {kind!r}") from None
 
 
 # ---------------------------------------------------------------------------

@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import layers, moe as moe_lib, ssm as ssm_lib
-from repro.models.attention_backends import backend_for_kind
+from repro.models.attention_backends import backend_for_kind, layout_for_kind
 from repro.models.common import (
     ModelConfig, count_params, dense_init, embed_init, rmsnorm, split_keys,
 )
@@ -185,10 +185,14 @@ def _init_block_page_pool(kind: str, cfg: ModelConfig, num_pages: int,
                           page_size: int, dtype=None):
     dtype = dtype or jnp.bfloat16
     be = backend_for_kind(kind)
-    if be is None or kind == "hybrid" or not be.supports_paged:
+    if be is None:
+        # pure-state kinds (ssm) write no token-indexed pages: an empty
+        # pool keeps the pytree structure parallel so the scanned segment
+        # protocol (and the engine's page walkers) need no special case
+        return {}
+    if not be.supports_paged:
         raise NotImplementedError(
-            f"continuous batching: no paged cache for block kind {kind!r} "
-            "(ssm/hybrid state is per-slot, not positional — future PR)")
+            f"continuous batching: no paged cache for block kind {kind!r}")
     pool = be.init_page_pool(cfg, num_pages, page_size, dtype=dtype)
     # quantized pools may carry extra metadata leaves (k_scale/v_scale)
     # beyond the declared token-axis leaves
@@ -198,10 +202,49 @@ def _init_block_page_pool(kind: str, cfg: ModelConfig, num_pages: int,
     return pool
 
 
+def _gather_state_rows(state, slot_idx, start):
+    """Pick per-slot state rows for a prefill chunk's bucket rows.
+
+    Rows whose chunk starts at position 0 read a ZERO state in-graph:
+    admission and preemption-restart both begin at ``start == 0``, so the
+    host never has to reset state-pool rows between tenants — the zeroing
+    is part of the traced step, like the scratch-page redirect for pages."""
+    def pick(a):
+        rows = a[slot_idx]
+        fresh = (start == 0).reshape((-1,) + (1,) * (rows.ndim - 1))
+        return jnp.where(fresh, jnp.zeros_like(rows), rows)
+    return jax.tree.map(pick, state)
+
+
+def _scatter_state_rows(state, rows, slot_idx, valid):
+    """Write updated rows back into the slot-indexed pool; bucket padding
+    rows (``valid == 0``) are dropped via an out-of-bounds index."""
+    def put(a, r):
+        safe = jnp.where(valid > 0, slot_idx, a.shape[0])
+        return a.at[safe].set(r.astype(a.dtype), mode="drop")
+    return jax.tree.map(put, state, rows)
+
+
+def _commit_state_rows(state, new, ok):
+    """Decode-step commit: only rows actually decoding this step replace
+    their state (other slots may be mid-prefill in the same iteration)."""
+    def put(a, n):
+        m = ok.reshape((-1,) + (1,) * (a.ndim - 1))
+        return jnp.where(m, n.astype(a.dtype), a)
+    return jax.tree.map(put, state, new)
+
+
 def _block_decode_paged(kind: str, p: dict, x, cfg: ModelConfig, window,
-                        pool, page_table, pos, moe_impl: str):
+                        pool, page_table, pos, moe_impl: str,
+                        state=None, state_ok=None):
     """Paged analogue of ``_block_decode``: per-slot ragged positions and
     K/V streamed through the page table.  x: (B, D).
+
+    Stateful kinds (ssm, the SSM half of hybrid) run the exact
+    single-token recurrence over their slot-indexed ``state`` rows and
+    commit only rows flagged by ``state_ok`` (slots actually decoding).
+    Returns ``(x, new_pool, new_state)`` — stateless kinds pass their
+    (possibly empty) state through untouched.
 
     The ``tp_psum`` marks close the Megatron column->row pairs when this
     traces inside the sharded serve path's manual region (one reduction
@@ -209,7 +252,21 @@ def _block_decode_paged(kind: str, p: dict, x, cfg: ModelConfig, window,
     there, so their output is already complete).  Off-mesh they are
     identity."""
     be = backend_for_kind(kind)
-    if be is None or be.decode_paged is None or kind == "hybrid":
+    if kind == "ssm":
+        out, st = ssm_lib.ssm_decode_step(rmsnorm(x, p["ln1"], cfg.norm_eps),
+                                          p["ssm"], cfg, state)
+        return x + out, pool, _commit_state_rows(state, st, state_ok)
+    if kind == "hybrid":
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        a, c = be.decode_paged(p["attn"], h, cfg, pool, page_table, pos,
+                               window=window)
+        s, st = ssm_lib.ssm_decode_step(h, p["ssm"], cfg, state)
+        mix = 0.5 * (rmsnorm(a, p["attn_out_norm"], cfg.norm_eps)
+                     + rmsnorm(s, p["ssm_out_norm"], cfg.norm_eps))
+        x = x + mix
+        x = x + layers.mlp_forward(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps))
+        return x, c, _commit_state_rows(state, st, state_ok)
+    if be is None or be.decode_paged is None:
         raise NotImplementedError(kind)
     h = rmsnorm(x, p["ln1"], cfg.norm_eps)
     a, c = be.decode_paged(p["attn"], h, cfg, pool, page_table, pos,
@@ -218,16 +275,37 @@ def _block_decode_paged(kind: str, p: dict, x, cfg: ModelConfig, window,
     f = _ffn(kind, p, rmsnorm(x[:, None, :], p["ln2"], cfg.norm_eps), cfg,
              moe_impl)[:, 0]
     x = x + (f if kind.endswith("_moe") else tp_psum(f).astype(x.dtype))
-    return x, c
+    return x, c, state
 
 
 def _block_prefill_chunk_paged(kind: str, p: dict, x, cfg: ModelConfig,
                                window, pool, page_table, start, valid,
-                               moe_impl: str):
+                               moe_impl: str, state=None, slot_idx=None):
     """Paged chunked-prefill analogue of ``_block_prefill``.  x: (B, C, D);
-    start/valid: (B,) per-slot chunk offset and real-token count."""
+    start/valid: (B,) per-slot chunk offset and real-token count.
+
+    Stateful kinds gather their ``slot_idx`` state rows (zeroed at
+    ``start == 0``), run the chunked SSD with ``valid`` masking so the
+    carried state lands exactly at the valid boundary, and scatter the
+    rows back.  Returns ``(x, new_pool, new_state)``."""
     be = backend_for_kind(kind)
-    if be is None or be.prefill_chunk_paged is None or kind == "hybrid":
+    if kind == "ssm":
+        rows = _gather_state_rows(state, slot_idx, start)
+        out, st = ssm_lib.ssm_forward(rmsnorm(x, p["ln1"], cfg.norm_eps),
+                                      p["ssm"], cfg, rows, valid=valid)
+        return x + out, pool, _scatter_state_rows(state, st, slot_idx, valid)
+    if kind == "hybrid":
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        a, c = be.prefill_chunk_paged(p["attn"], h, cfg, pool, page_table,
+                                      start, valid, window=window)
+        rows = _gather_state_rows(state, slot_idx, start)
+        s, st = ssm_lib.ssm_forward(h, p["ssm"], cfg, rows, valid=valid)
+        mix = 0.5 * (rmsnorm(a, p["attn_out_norm"], cfg.norm_eps)
+                     + rmsnorm(s, p["ssm_out_norm"], cfg.norm_eps))
+        x = x + mix
+        x = x + layers.mlp_forward(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps))
+        return x, c, _scatter_state_rows(state, st, slot_idx, valid)
+    if be is None or be.prefill_chunk_paged is None:
         raise NotImplementedError(kind)
     h = rmsnorm(x, p["ln1"], cfg.norm_eps)
     a, c = be.prefill_chunk_paged(p["attn"], h, cfg, pool, page_table, start,
@@ -235,7 +313,7 @@ def _block_prefill_chunk_paged(kind: str, p: dict, x, cfg: ModelConfig,
     x = x + tp_psum(a).astype(x.dtype)
     f = _ffn(kind, p, rmsnorm(x, p["ln2"], cfg.norm_eps), cfg, moe_impl)
     x = x + (f if kind.endswith("_moe") else tp_psum(f).astype(x.dtype))
-    return x, c
+    return x, c, state
 
 
 def _block_decode_multi_paged(kind: str, p: dict, x, cfg: ModelConfig,
@@ -249,7 +327,10 @@ def _block_decode_multi_paged(kind: str, p: dict, x, cfg: ModelConfig,
     scan here but a one-shot conv prefill there)."""
     be = backend_for_kind(kind)
     if be is None or be.decode_multi_paged is None or kind == "hybrid":
-        raise NotImplementedError(kind)
+        raise NotImplementedError(
+            f"multi-token decode (speculative verify) over block kind "
+            f"{kind!r}: state pools advance one token per step — the "
+            f"engine gates speculation off for stateful layouts")
     h = rmsnorm(x, p["ln1"], cfg.norm_eps)
     a, c = be.decode_multi_paged(p["attn"], h, cfg, pool, page_table, start,
                                  valid, window=window)
@@ -300,6 +381,9 @@ class Model:
         self.cfg = cfg
         self.plan = build_plan(cfg)
         self.moe_impl = moe_impl
+        # stateful serving: any kind carrying per-slot recurrent state
+        self._needs_state = any(layout_for_kind(k).state
+                                for seg in self.plan for k in seg.kinds)
         assert sum(len(s.kinds) * s.reps for s in self.plan) == cfg.n_layers
         for seg in self.plan:               # windowed segments need a
             for kind in seg.kinds:          # sliding-capable dense backend
@@ -434,12 +518,18 @@ class Model:
 
     # ----- paged cache (continuous-batching serve) -----
     def init_paged_cache(self, num_pages: int, page_size: int,
-                         dtype=None) -> list:
+                         dtype=None, *, ring_pages: int | None = None) -> list:
         """Physical page pools, one per layer, in the same nested structure
         as ``init_cache`` (list over segments, tuple over kinds, stacked
-        along a leading reps axis for scanned segments).  All layers share
-        one logical page-id space — the allocator in ``runtime.kv_cache``
-        is model-agnostic."""
+        along a leading reps axis for scanned segments).  All full-KV
+        layers share one logical page-id space — the allocator in
+        ``runtime.kv_cache`` is model-agnostic.
+
+        ``ring_pages``: pool size for sliding-window segments, which live
+        in their own (smaller) page-id space managed by
+        ``runtime.state_cache.RingPageSpace`` — O(window) pages per slot
+        instead of O(context).  When None (legacy callers), windowed
+        segments share the full space and simply never reclaim."""
         cfg = self.cfg
         pools = []
         for seg in self.plan:
@@ -449,10 +539,12 @@ class Model:
                     for k in seg.kinds):
                 raise NotImplementedError(
                     "continuous batching over sliding-window segments needs "
-                    "ring-aware pages — future PR")
+                    "a sliding-capable paged backend")
+            size = (ring_pages if (seg.window is not None
+                                   and ring_pages is not None) else num_pages)
             kinds_pools = []
             for kind in seg.kinds:
-                single = _init_block_page_pool(kind, cfg, num_pages,
+                single = _init_block_page_pool(kind, cfg, size,
                                                page_size, dtype)
                 if seg.reps == 1:
                     kinds_pools.append(single)
@@ -463,10 +555,33 @@ class Model:
             pools.append(tuple(kinds_pools))
         return pools
 
+    def init_state_pools(self, num_slots: int) -> list:
+        """Per-slot recurrent state pools (SSM conv tail + SSD state), in
+        the same nested structure as ``init_paged_cache``; stateless kinds
+        get empty subtrees so the scanned-segment protocol is uniform."""
+        cfg = self.cfg
+        states = []
+        for seg in self.plan:
+            kinds_states = []
+            for kind in seg.kinds:
+                lay = layout_for_kind(kind)
+                single = (lay.init_state_pool(cfg, num_slots)
+                          if lay.state else {})
+                if seg.reps == 1:
+                    kinds_states.append(single)
+                else:
+                    kinds_states.append(jax.tree.map(
+                        lambda a: jnp.tile(a[None], (seg.reps,) + (1,) * a.ndim),
+                        single))
+            states.append(tuple(kinds_states))
+        return states
+
     def prefill_chunk_paged(self, params: dict, tokens: jnp.ndarray,
                             pools: list, page_table: jnp.ndarray,
-                            start: jnp.ndarray, valid: jnp.ndarray
-                            ) -> tuple[jnp.ndarray, list]:
+                            start: jnp.ndarray, valid: jnp.ndarray, *,
+                            states: list | None = None,
+                            ring_table: jnp.ndarray | None = None,
+                            slot_idx: jnp.ndarray | None = None):
         """One fixed-size prefill chunk over a slot batch, straight into the
         page pools.
 
@@ -478,106 +593,179 @@ class Model:
         chunks, or prefix-cache pages shared from another request — so long
         prompts prefill incrementally, interleaved with decode iterations.
 
+        Stateful models additionally thread ``states`` (slot-indexed
+        pools from ``init_state_pools``) with ``slot_idx`` (B,) mapping
+        bucket rows to slots, and ``ring_table`` for sliding-window
+        segments; the return gains a third element, the updated states.
+
         Returns per-row logits at the row's last valid position (the
         first-token logits once a request's final chunk lands) and the
         updated pools."""
-        x, new_pools = self._prefill_chunk_body(params, tokens, pools,
-                                                page_table, start, valid)
+        x, new_pools, new_states = self._prefill_chunk_body(
+            params, tokens, pools, page_table, start, valid,
+            states=states, ring_table=ring_table, slot_idx=slot_idx)
         b, c = tokens.shape
         last = jnp.clip(valid - 1, 0, c - 1)
         x_last = x[jnp.arange(b), last]
         logits = self._head(params, x_last[:, None, :])[:, 0]
-        return logits, new_pools
+        if states is None:
+            return logits, new_pools
+        return logits, new_pools, new_states
 
     def prefill_chunk_scored_paged(self, params: dict, tokens: jnp.ndarray,
                                    pools: list, page_table: jnp.ndarray,
-                                   start: jnp.ndarray, valid: jnp.ndarray
-                                   ) -> tuple[jnp.ndarray, jnp.ndarray, list]:
+                                   start: jnp.ndarray, valid: jnp.ndarray, *,
+                                   states: list | None = None,
+                                   ring_table: jnp.ndarray | None = None,
+                                   slot_idx: jnp.ndarray | None = None):
         """Chunked paged prefill that also SCORES the chunk (prompt
         logprobs): returns (last_logits (B, V), full_logits (B, C, V),
-        pools).  ``last_logits`` comes through exactly the same
+        pools[, states]).  ``last_logits`` comes through exactly the same
         last-position head shape as ``prefill_chunk_paged``, so a scored
         admission samples the identical first token; ``full_logits`` feed
         raw prompt-token scoring, where rounding parity doesn't matter."""
-        x, new_pools = self._prefill_chunk_body(params, tokens, pools,
-                                                page_table, start, valid)
+        x, new_pools, new_states = self._prefill_chunk_body(
+            params, tokens, pools, page_table, start, valid,
+            states=states, ring_table=ring_table, slot_idx=slot_idx)
         b, c = tokens.shape
         last = jnp.clip(valid - 1, 0, c - 1)
         x_last = x[jnp.arange(b), last]
         last_logits = self._head(params, x_last[:, None, :])[:, 0]
-        return last_logits, self._head(params, x), new_pools
+        if states is None:
+            return last_logits, self._head(params, x), new_pools
+        return last_logits, self._head(params, x), new_pools, new_states
 
     def _prefill_chunk_body(self, params, tokens, pools, page_table, start,
-                            valid):
+                            valid, states=None, ring_table=None,
+                            slot_idx=None):
         cfg = self.cfg
         assert cfg.frontend is None, "chunked paged prefill serves tokens only"
+        if states is None and self._needs_state:
+            raise NotImplementedError(
+                f"{cfg.name}: ssm/hybrid serving needs per-slot state pools "
+                f"— pass states=init_state_pools(num_slots) (the continuous "
+                f"engine threads them automatically)")
         x = params["embed"][tokens]                        # (B, C, D)
         x = shard_hint(x, "act_bsd")
         new_pools = []
+        new_states = [] if states is not None else None
         for si, seg in enumerate(self.plan):
             stack = params["stacks"][si]
+            # sliding-window segments index their own (ring) page space
+            tbl = (ring_table if (seg.window is not None
+                                  and ring_table is not None) else page_table)
 
-            def seg_step(xc, layer, seg=seg):
-                ps, cs = layer
-                new_cs = []
-                for kind, p, c in zip(seg.kinds, ps, cs):
-                    xc, nc = _block_prefill_chunk_paged(
-                        kind, p, xc, cfg, seg.window, c, page_table, start,
-                        valid, self.moe_impl)
+            def seg_step(xc, layer, seg=seg, tbl=tbl):
+                if states is None:
+                    ps, cs = layer
+                    ss = ({},) * len(seg.kinds)
+                else:
+                    ps, cs, ss = layer
+                new_cs, new_ss = [], []
+                for kind, p, c, s in zip(seg.kinds, ps, cs, ss):
+                    xc, nc, ns = _block_prefill_chunk_paged(
+                        kind, p, xc, cfg, seg.window, c, tbl, start,
+                        valid, self.moe_impl, state=s, slot_idx=slot_idx)
                     new_cs.append(nc)
-                return xc, tuple(new_cs)
+                    new_ss.append(ns)
+                if states is None:
+                    return xc, tuple(new_cs)
+                return xc, (tuple(new_cs), tuple(new_ss))
 
+            layer = ((stack, pools[si]) if states is None
+                     else (stack, pools[si], states[si]))
             if seg.reps == 1:
-                x, nc = seg_step(x, (stack, pools[si]))
+                x, ys = seg_step(x, layer)
             else:
-                x, nc = jax.lax.scan(seg_step, x, (stack, pools[si]))
-            new_pools.append(nc)
-        return x, new_pools
+                x, ys = jax.lax.scan(seg_step, x, layer)
+            if states is None:
+                new_pools.append(ys)
+            else:
+                new_pools.append(ys[0])
+                new_states.append(ys[1])
+        return x, new_pools, new_states
 
     def decode_step_paged(self, params: dict, tokens: jnp.ndarray,
                           pools: list, page_table: jnp.ndarray,
-                          pos: jnp.ndarray, valid: jnp.ndarray | None = None
-                          ) -> tuple[jnp.ndarray, list]:
+                          pos: jnp.ndarray, valid: jnp.ndarray | None = None,
+                          *, states: list | None = None,
+                          ring_table: jnp.ndarray | None = None,
+                          state_ok: jnp.ndarray | None = None):
         """One continuous-batching decode step over the slot batch.
 
         tokens: (B,) int32 (one per slot); pos: (B,) int32 per-slot ragged
         positions; page_table: (B, n_blocks) int32.  Inactive slots point
         at the scratch page and are masked out by the caller.
 
+        Stateful models thread ``states`` (slot-indexed pools, B ==
+        num_slots rows aligned with the decode batch), ``ring_table``
+        (the sliding-window segments' own page space), and ``state_ok``
+        (B,) bool marking slots actually decoding (their state rows
+        commit; all other rows keep their value).  The return gains a
+        third element, the updated states.
+
         Multi-token form (speculative verify / prompt scoring): tokens
         (B, C) int32 of C *already-chosen* tokens per slot starting at
         per-slot position ``pos`` with ``valid`` (B,) real rows (the rest
         scatter to the scratch page) — returns (B, C, V) logits, one
         next-token distribution per fed position, through the backends'
-        ``decode_multi_paged`` ragged-q_offset path."""
+        ``decode_multi_paged`` ragged-q_offset path (unsupported for
+        stateful layouts — speculation is gated off there)."""
         cfg = self.cfg
         assert cfg.frontend != "audio", "encoder-only models have no decode step"
         if tokens.ndim == 2:
+            if states is not None:
+                raise NotImplementedError(
+                    "multi-token decode over state pools (speculative "
+                    "verify) is unsupported — the engine gates it off")
             return self._decode_multi_paged(params, tokens, pools, page_table,
                                             pos, valid)
+        if states is None and self._needs_state:
+            raise NotImplementedError(
+                f"{cfg.name}: ssm/hybrid serving needs per-slot state pools "
+                f"— pass states=init_state_pools(num_slots) (the continuous "
+                f"engine threads them automatically)")
         x = params["embed"][tokens]
         x = shard_hint(x, "act_bd")
         new_pools = []
+        new_states = [] if states is not None else None
         for si, seg in enumerate(self.plan):
             stack = params["stacks"][si]
+            tbl = (ring_table if (seg.window is not None
+                                  and ring_table is not None) else page_table)
 
-            def seg_step(xc, layer, seg=seg):
-                ps, cs = layer
-                new_cs = []
-                for kind, p, c in zip(seg.kinds, ps, cs):
-                    xc, nc = _block_decode_paged(kind, p, xc, cfg, seg.window,
-                                                 c, page_table, pos,
-                                                 self.moe_impl)
+            def seg_step(xc, layer, seg=seg, tbl=tbl):
+                if states is None:
+                    ps, cs = layer
+                    ss = ({},) * len(seg.kinds)
+                else:
+                    ps, cs, ss = layer
+                new_cs, new_ss = [], []
+                for kind, p, c, s in zip(seg.kinds, ps, cs, ss):
+                    xc, nc, ns = _block_decode_paged(
+                        kind, p, xc, cfg, seg.window, c, tbl, pos,
+                        self.moe_impl, state=s, state_ok=state_ok)
                     new_cs.append(nc)
-                return xc, tuple(new_cs)
+                    new_ss.append(ns)
+                if states is None:
+                    return xc, tuple(new_cs)
+                return xc, (tuple(new_cs), tuple(new_ss))
 
+            layer = ((stack, pools[si]) if states is None
+                     else (stack, pools[si], states[si]))
             if seg.reps == 1:
-                x, nc = seg_step(x, (stack, pools[si]))
+                x, ys = seg_step(x, layer)
             else:
-                x, nc = jax.lax.scan(seg_step, x, (stack, pools[si]))
-            new_pools.append(nc)
+                x, ys = jax.lax.scan(seg_step, x, layer)
+            if states is None:
+                new_pools.append(ys)
+            else:
+                new_pools.append(ys[0])
+                new_states.append(ys[1])
         logits = self._head(params, x[:, None, :])[:, 0]
-        return logits, new_pools
+        if states is None:
+            return logits, new_pools
+        return logits, new_pools, new_states
 
     def _decode_multi_paged(self, params: dict, tokens: jnp.ndarray,
                             pools: list, page_table: jnp.ndarray,

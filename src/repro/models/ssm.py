@@ -63,10 +63,14 @@ def _in_proj(x: jnp.ndarray, p: dict, cfg: ModelConfig):
 
 
 def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
-                 state: jnp.ndarray | None = None):
+                 state: jnp.ndarray | None = None, valid=None):
     """Depthwise causal conv1d.  x: (B, S, C); w: (K, C).
 
     Returns (out, new_state) where state is the last (K-1) inputs.
+    ``valid`` (B,) counts real (non-padding) positions per row; the carried
+    state then ends at the valid boundary instead of the padded tail, so a
+    short chunk leaves exactly the state a full-length pass would have
+    (``valid=0`` rows return their incoming state unchanged).
     """
     k = w.shape[0]
     if state is None:
@@ -74,7 +78,14 @@ def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
     xp = jnp.concatenate([state, x], axis=1)          # (B, S+K-1, C)
     out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :] for i in range(k))
     out = jax.nn.silu((out + b[None, None, :]).astype(jnp.float32)).astype(x.dtype)
-    new_state = xp[:, -(k - 1):] if k > 1 else state
+    if k <= 1:
+        return out, state
+    if valid is None:
+        return out, xp[:, -(k - 1):]
+    # window of the last K-1 inputs ENDING at the valid position:
+    # new_state[b, j] = xp[b, valid_b + j] (valid = S reproduces the tail)
+    idx = valid[:, None] + jnp.arange(k - 1)[None, :]            # (B, K-1)
+    new_state = jnp.take_along_axis(xp, idx[:, :, None], axis=1)
     return out, new_state
 
 
@@ -150,21 +161,33 @@ def _ssd_chunked(x, b, c, dt, A, cfg: ModelConfig, h0=None):
 
 
 def ssm_forward(x: jnp.ndarray, p: dict, cfg: ModelConfig,
-                state: dict | None = None):
-    """Full SSM mixer over (B, S, D).  Returns (out, new_state)."""
+                state: dict | None = None, valid=None):
+    """Full SSM mixer over (B, S, D).  Returns (out, new_state).
+
+    ``valid`` (B,) int32 masks per-row padding at the tail of the chunk:
+    padded positions enter the SSD with ``dt = 0`` (decay ``exp(0) = 1``,
+    zero input — an identity state update), and the conv state is taken at
+    the valid boundary, so ``new_state`` equals what an unpadded pass over
+    the first ``valid`` tokens would produce.  Outputs at padded positions
+    are garbage and must be discarded by the caller.
+    """
     B_, S, D = x.shape
     H, P, N, G = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
     z, xin, b, c, dt = _in_proj(x, p, cfg)
 
     conv_in = jnp.concatenate([xin, b, c], axis=-1)
     conv_state = None if state is None else state["conv"]
-    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"], conv_state)
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"],
+                                      conv_state, valid=valid)
     xin, b, c = jnp.split(conv_out, [cfg.d_inner, cfg.d_inner + G * N], axis=-1)
 
     xh = xin.reshape(B_, S, H, P)
     bg = b.reshape(B_, S, G, N)
     cg = c.reshape(B_, S, G, N)
     dt_sp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    if valid is not None:
+        ok = jnp.arange(S)[None, :] < valid[:, None]             # (B, S)
+        dt_sp = jnp.where(ok[:, :, None], dt_sp, 0.0)
     A = jnp.exp(p["A_log"])
 
     h0 = None if state is None else state["ssm"]

@@ -440,10 +440,29 @@ def paged_kv_token_bytes(model, *, tp: int = 1, dtype_bytes: int = 4,
     fp8/int8 pools then report the *packed* bytes — 1-byte codes plus the
     f32 per-token scale leaves — so the deployment budget equals what the
     engine allocates."""
+    full, ring = paged_kv_token_bytes_split(model, tp=tp,
+                                            dtype_bytes=dtype_bytes,
+                                            kv_repl=kv_repl,
+                                            cache_dtype=cache_dtype)
+    return full + ring
+
+
+def paged_kv_token_bytes_split(model, *, tp: int = 1, dtype_bytes: int = 4,
+                               kv_repl: int = 1,
+                               cache_dtype=None) -> tuple[int, int]:
+    """``paged_kv_token_bytes`` split into its ``(full, ring)`` residency
+    halves: bytes/token in full-context segments vs sliding-window
+    segments.  Windowed layers hold O(window) tokens per slot (the ring
+    space reclaims pages behind the window — ``runtime.state_cache``)
+    while full layers hold O(context), so deployment budgeting prices the
+    two classes differently.  SSM segments write no token-indexed pages
+    and contribute to neither half (their per-SLOT state is priced by
+    ``state_cache.state_bytes_per_slot``)."""
     from repro.models.attention_backends import backend_for_kind
 
-    total = 0
+    full = ring = 0
     for seg in model.plan:
+        seg_total = 0
         for kind in seg.kinds:
             be = backend_for_kind(kind)
             if be is None or not be.supports_paged:
@@ -460,8 +479,12 @@ def paged_kv_token_bytes(model, *, tp: int = 1, dtype_bytes: int = 4,
             for key, per_tok in leaf_bytes.items():
                 if tp > 1 and part.get(key) is not None:
                     per_tok = per_tok * kv_repl // tp
-                total += per_tok * seg.reps
-    return total
+                seg_total += per_tok * seg.reps
+        if seg.window is not None:
+            ring += seg_total
+        else:
+            full += seg_total
+    return full, ring
 
 
 def make_paged_serve_plan(cfg: ModelConfig, mesh: Mesh,

@@ -249,12 +249,44 @@ class DeploymentSpec:
         modeled per-token acceptance probability alpha; a window emits
         ``alpha(1-alpha^gamma)/(1-alpha) + 1`` expected tokens."""
         from repro.parallel.plan import make_paged_serve_plan, \
-            paged_kv_token_bytes
+            paged_kv_token_bytes, paged_kv_token_bytes_split
+        from repro.runtime.state_cache import model_cache_layout, \
+            ring_pages_needed, state_bytes_per_slot
 
         if phase not in ("colocated", "prefill", "decode"):
             raise ValueError(f"phase={phase!r}: expected 'colocated', "
                              f"'prefill', or 'decode'")
         cfg = model.cfg
+        # Stateful cache layouts (sliding-window ring pages, SSM state
+        # pools — runtime/state_cache.py) change what a slot keeps
+        # resident; combinations the runtime cannot serve are rejected
+        # here with a deployment-level error, mirroring the MLA+quantized
+        # treatment below, instead of failing layers deep in the engine.
+        lay = model_cache_layout(model.plan)
+        dlay = model_cache_layout(draft.plan) if draft is not None else None
+        if draft is not None and (lay.stateful or dlay.stateful):
+            role, c = ("model", cfg) if lay.stateful else ("draft", draft.cfg)
+            raise DeploymentError(
+                f"speculative decoding is unsupported for the "
+                f"stateful-cache {role} {c.name!r}: draft/verify rewinds "
+                f"token-indexed KV pages on rejection, but recurrent SSM "
+                f"state and reclaimed ring pages cannot rewind. Serve "
+                f"this architecture without a draft (state rewind is a "
+                f"recorded follow-on).")
+        if lay.has_state and kvq.is_quantized_cache_dtype(self.cache_dtype):
+            raise DeploymentError(
+                f"cache_dtype={self.cache_dtype!r} is unsupported for the "
+                f"state-carrying model {cfg.name!r}: SSM state pools stay "
+                f"bf16 (conv tail) / f32 (SSD state) — quantized state "
+                f"pools are a recorded follow-on. Use cache_dtype=None "
+                f"(bf16) or jnp.float32 for this architecture.")
+        if lay.stateful and phase != "colocated":
+            raise DeploymentError(
+                f"phase={phase!r} is unsupported for the stateful-cache "
+                f"model {cfg.name!r}: the disaggregated KV handoff moves "
+                f"full-space page chains only — recurrent SSM state and "
+                f"ring residency need their own transfer (recorded "
+                f"follow-on). Use phase='colocated'.")
         # Reject MLA + quantized KV up front with a deployment-level error
         # instead of letting pool construction explode layers deep inside
         # paged_kv_token_bytes: latent pages have no dequant seam yet.
@@ -323,39 +355,21 @@ class DeploymentSpec:
         # measured from an actual tiny pool at this dtype, so quantized
         # fp8/int8 pools price codes + scale metadata — the bytes the
         # engine allocates, not a nominal itemsize.  With a draft, every
-        # logical page costs both pool sets.
-        kv_token = paged_kv_token_bytes(model, tp=tp, kv_repl=kv_repl,
-                                        cache_dtype=cache_dtype) \
-            + draft_kv_token
+        # logical page costs both pool sets.  The split prices the two
+        # token-indexed residency classes separately: full-context
+        # segments hold O(max_len) per slot, sliding-window segments only
+        # O(window) once the ring space reclaims pages behind the window.
+        kv_full, kv_ring = paged_kv_token_bytes_split(
+            model, tp=tp, kv_repl=kv_repl, cache_dtype=cache_dtype)
+        kv_full += draft_kv_token      # draft pages live in the full space
+        kv_token = kv_full + kv_ring
         max_blocks = -(-self.max_len // self.page_size)
-        page_bytes = kv_token * self.page_size
-        if kv_budget < page_bytes * max_blocks:
-            raise DeploymentError(
-                f"{dev.name}: {_fmt_bytes(dev.capacity_bytes)} capacity "
-                f"leaves {_fmt_bytes(max(kv_budget, 0))} for KV after "
-                f"{_fmt_bytes(weight_bytes)} weights + "
-                f"{_fmt_bytes(workspace)} workspace — cannot back one "
-                f"max_len={self.max_len} request "
-                f"({max_blocks} pages x {_fmt_bytes(page_bytes)}); pick a "
-                "larger-capacity SKU, quantize (weight_format/cache_dtype), "
-                "or lower max_len")
-        budget_pages = int(kv_budget // page_bytes)
-        budget_tokens = budget_pages * self.page_size
 
-        # -- bandwidth model (memory roofline; decode is BW-bound §II) --
+        # -- bandwidth-model inputs --
         per_w = (wbits / 8.0) if wbits else 2.0
         active_bytes = fp.active_params * per_w / tp
         ctx = self.mean_context if self.mean_context is not None \
             else max(self.max_len // 2, 1)
-        kv_ctx = max(kv_token * ctx, 1.0)
-        knee = max(1, round(active_bytes / kv_ctx))
-        slots_cap = max(1, int(budget_tokens * self.overcommit
-                               // self.max_len))
-        num_slots = max(1, min(knee, slots_cap, self.max_slots))
-        max_decode_slots = max(1, min(knee, self.max_slots))
-        # the pool never needs more pages than a fully-occupied slot set
-        # plus prefix-cache slack (caps host allocation on huge SKUs)
-        num_pages = 1 + min(budget_pages, 4 * num_slots * max_blocks)
 
         # -- compute roofline: prefill chunk from the SKU's FLOPs knee --
         # A chunk of C tokens costs ~2 x active_params x C FLOPs against
@@ -364,6 +378,8 @@ class DeploymentSpec:
         # smaller chunks waste bandwidth re-streaming weights, larger ones
         # only add TTFT.  Rounded to whole pages, clamped to
         # [page_size, min(512, max_len)]; an explicit prefill_chunk wins.
+        # (Derived before the capacity math: the ring space's transient
+        # residency bound depends on the chunk width.)
         flops_eff, stream_bw = self._device_compute()
         chunk_knee = flops_eff * per_w / (2.0 * stream_bw)
         chunk_derived = self.prefill_chunk is None
@@ -374,6 +390,93 @@ class DeploymentSpec:
                                 min(prefill_chunk, 512, self.max_len))
         else:
             prefill_chunk = self.prefill_chunk
+
+        # -- capacity -> slots/pages --
+        if not lay.stateful:
+            page_bytes = kv_token * self.page_size
+            if kv_budget < page_bytes * max_blocks:
+                raise DeploymentError(
+                    f"{dev.name}: {_fmt_bytes(dev.capacity_bytes)} capacity "
+                    f"leaves {_fmt_bytes(max(kv_budget, 0))} for KV after "
+                    f"{_fmt_bytes(weight_bytes)} weights + "
+                    f"{_fmt_bytes(workspace)} workspace — cannot back one "
+                    f"max_len={self.max_len} request "
+                    f"({max_blocks} pages x {_fmt_bytes(page_bytes)}); pick "
+                    "a larger-capacity SKU, quantize "
+                    "(weight_format/cache_dtype), or lower max_len")
+            budget_pages = int(kv_budget // page_bytes)
+            budget_tokens = budget_pages * self.page_size
+            kv_ctx = max(kv_token * ctx, 1.0)
+            knee = max(1, round(active_bytes / kv_ctx))
+            slots_cap = max(1, int(budget_tokens * self.overcommit
+                                   // self.max_len))
+            num_slots = max(1, min(knee, slots_cap, self.max_slots))
+            max_decode_slots = max(1, min(knee, self.max_slots))
+            # the pool never needs more pages than a fully-occupied slot
+            # set plus prefix-cache slack (caps host allocation on huge
+            # SKUs)
+            num_pages = 1 + min(budget_pages, 4 * num_slots * max_blocks)
+            num_ring_pages = 0
+            state_b = 0
+        else:
+            # Per-family residency: a slot's worst case holds max_blocks
+            # full pages + the ring's transient bound + its state entry,
+            # and its decode stream reads O(window) ring tokens rather
+            # than O(context).
+            state_b = state_bytes_per_slot(cfg) if lay.has_state else 0
+            ring_w = lay.ring_window or 0
+            ring_cap = min(max_blocks,
+                           -(-(ring_w + prefill_chunk) // self.page_size)
+                           + 1) if lay.has_ring else 0
+            slot_resident = (kv_full * self.page_size * max_blocks
+                             + kv_ring * self.page_size * ring_cap
+                             + state_b)
+            if kv_budget < slot_resident:
+                raise DeploymentError(
+                    f"{dev.name}: {_fmt_bytes(dev.capacity_bytes)} capacity "
+                    f"leaves {_fmt_bytes(max(kv_budget, 0))} for the cache "
+                    f"after {_fmt_bytes(weight_bytes)} weights + "
+                    f"{_fmt_bytes(workspace)} workspace — cannot back one "
+                    f"max_len={self.max_len} slot of {cfg.name!r} "
+                    f"({_fmt_bytes(slot_resident)} resident: full pages + "
+                    f"ring window + state); pick a larger-capacity SKU, "
+                    "quantize the weights, or lower max_len")
+            kv_ctx = max(kv_full * ctx + kv_ring * min(ctx, ring_w)
+                         + state_b, 1.0)
+            knee = max(1, round(active_bytes / kv_ctx))
+            slots_cap = max(1, int(kv_budget * self.overcommit
+                                   // slot_resident))
+            num_slots = max(1, min(knee, slots_cap, self.max_slots))
+            max_decode_slots = max(1, min(knee, self.max_slots))
+            num_ring_pages = ring_pages_needed(
+                num_slots=num_slots, window=ring_w,
+                page_size=self.page_size, max_blocks=max_blocks,
+                prefill_chunk=prefill_chunk) if lay.has_ring else 0
+            ring_pool = max(num_ring_pages - 1, 0) * kv_ring \
+                * self.page_size
+            rem = kv_budget - num_slots * state_b - ring_pool
+            if lay.has_full:
+                fpage = kv_full * self.page_size
+                budget_pages = int(max(rem, 0.0) // fpage)
+                if budget_pages < max_blocks:
+                    raise DeploymentError(
+                        f"{dev.name}: state pools "
+                        f"({num_slots} x {_fmt_bytes(state_b)}) + ring "
+                        f"space ({_fmt_bytes(ring_pool)}) leave "
+                        f"{_fmt_bytes(max(rem, 0.0))} for full-context KV "
+                        f"— cannot back one max_len={self.max_len} "
+                        f"request of {cfg.name!r}; pick a larger-capacity "
+                        "SKU or lower max_len")
+                budget_tokens = budget_pages * self.page_size
+                num_pages = 1 + min(budget_pages,
+                                    4 * num_slots * max_blocks)
+            else:
+                # no full-context layers: the full space never allocates
+                # a page, but the engine still sizes its (empty) pool
+                # table for max_blocks
+                budget_pages = 0
+                budget_tokens = slots_cap * self.max_len
+                num_pages = 1 + max_blocks
 
         step_s = (active_bytes + num_slots * kv_ctx) / dev.decode_bw
         ceiling = num_slots / step_s
@@ -425,6 +528,10 @@ class DeploymentSpec:
             workspace_bytes=workspace,
             kv_budget_bytes=kv_budget,
             kv_token_bytes=kv_token,
+            ring_token_bytes=kv_ring,
+            ring_window=lay.ring_window,
+            num_ring_pages=num_ring_pages,
+            state_bytes_per_slot=state_b,
             budget_tokens=budget_tokens,
             max_len=self.max_len, page_size=self.page_size,
             prefill_chunk=prefill_chunk,
@@ -516,10 +623,22 @@ class ResolvedDeployment:
     prefill_chunk_derived: bool = False      # chunk came from the knee
     prefill_flops: float | None = None       # effective FLOP/s per device
     stream_bw: float | None = None           # full weight-stream bytes/s
+    # stateful cache layouts (runtime/state_cache.py); all zero/None for
+    # the classic all-full-KV layout
+    ring_token_bytes: int = 0       # bytes/token in sliding-window layers
+    ring_window: int | None = None
+    num_ring_pages: int = 0         # ring space incl. scratch (0 = none)
+    state_bytes_per_slot: int = 0   # SSM state pool bytes per slot
 
     @property
     def pool_bytes_per_device(self) -> int:
-        return (self.num_pages - 1) * self.kv_token_bytes * self.page_size
+        """Exactly the bytes the engine's pools allocate: full-space
+        pages (scratch excluded) + ring-space pages + state pools."""
+        full_tok = self.kv_token_bytes - self.ring_token_bytes
+        return ((self.num_pages - 1) * full_tok * self.page_size
+                + max(self.num_ring_pages - 1, 0) * self.ring_token_bytes
+                * self.page_size
+                + self.num_slots * self.state_bytes_per_slot)
 
     def describe(self) -> str:
         d = self.device
@@ -536,6 +655,12 @@ class ResolvedDeployment:
             f"  KV pool   {self.num_pages} pages x {self.page_size} tok x "
             f"{_fmt_bytes(self.kv_token_bytes)}/tok = "
             f"{_fmt_bytes(self.pool_bytes_per_device)}/device",
+            *([f"  stateful  ring {max(self.num_ring_pages - 1, 0)} pages "
+               f"x {_fmt_bytes(self.ring_token_bytes * self.page_size)} "
+               f"(window {self.ring_window}) + state "
+               f"{_fmt_bytes(self.state_bytes_per_slot)}/slot x "
+               f"{self.num_slots}"]
+              if self.num_ring_pages or self.state_bytes_per_slot else []),
             f"  slots     {self.num_slots} "
             f"(admission hint {self.max_decode_slots}; "
             f"{self.budget_tokens} budget tokens, max_len {self.max_len})",
@@ -595,6 +720,10 @@ class ResolvedDeployment:
             "phase": self.phase,
             "chunk_knee_tokens": self.chunk_knee_tokens,
             "prefill_chunk_derived": self.prefill_chunk_derived,
+            "ring_token_bytes": self.ring_token_bytes,
+            "ring_window": self.ring_window,
+            "num_ring_pages": self.num_ring_pages,
+            "state_bytes_per_slot": self.state_bytes_per_slot,
         }
 
 

@@ -56,6 +56,8 @@ from repro.runtime.sampling import SamplingParams
 from repro.runtime.kv_cache import PagedKVCache
 from repro.runtime.scheduler import HANDOFF, RUNNING, Request, Scheduler
 from repro.runtime.speculative import SpeculativeConfig, _check_rewindable
+from repro.runtime.state_cache import (RingPageSpace, model_cache_layout,
+                                       ring_pages_needed)
 
 
 @dataclasses.dataclass
@@ -412,6 +414,48 @@ class ContinuousServeEngine:
         self.enable_prefix_cache = enable_prefix_cache
         self.defrag_every = 0
         self._vocab = model.cfg.padded_vocab
+        # -- stateful cache layouts (runtime.state_cache): SSM/hybrid state
+        # pools and ring-page reclamation for sliding-window layers --
+        lay = model_cache_layout(model.plan)
+        self._layout = lay
+        if not lay.has_full:
+            # no full-KV segment -> no shareable, CoW-protected chains;
+            # the prefix index must never hand out ring or state "hits"
+            self.enable_prefix_cache = False
+        if lay.stateful:
+            arch = model.cfg.name
+            if speculative is not None:
+                raise NotImplementedError(
+                    f"speculative decoding is unsupported for {arch!r}: "
+                    f"draft/verify rewinds token-indexed KV pages, but "
+                    f"recurrent SSM state and reclaimed ring pages cannot "
+                    f"rewind (recorded follow-on)")
+            if phase != "colocated":
+                raise NotImplementedError(
+                    f"disaggregated serving is unsupported for {arch!r}: "
+                    f"the KV handoff moves page chains only — recurrent "
+                    f"state and ring residency need their own transfer "
+                    f"(recorded follow-on)")
+        if lay.has_state:
+            if kvq.is_quantized_cache_dtype(cache_dtype):
+                raise NotImplementedError(
+                    f"cache_dtype={cache_dtype!r} is unsupported for the "
+                    f"state-carrying arch {model.cfg.name!r}: SSM state "
+                    f"pools stay bf16/f32 — quantized state is a recorded "
+                    f"follow-on")
+            if mesh is not None:
+                raise NotImplementedError(
+                    f"tensor-parallel serving of the state-carrying arch "
+                    f"{model.cfg.name!r} needs sharded state pools "
+                    f"(recorded follow-on); run it single-device")
+        self.ring_pages = 0
+        if lay.has_ring:
+            # size the ring pool so ensure() can never fail: every slot at
+            # its transient (mid-prefill-chunk) residency peak at once
+            self.ring_pages = ring_pages_needed(
+                num_slots=num_slots, window=lay.ring_window,
+                page_size=page_size, max_blocks=self.max_blocks,
+                prefill_chunk=self.prefill_chunk)
         # -- mesh execution (tensor-parallel paged serving) --
         self.mesh = mesh
         self.serve_plan = None
@@ -454,6 +498,55 @@ class ContinuousServeEngine:
             self._paged_decode = model.decode_step_paged
             self._paged_chunk = model.prefill_chunk_paged
             self._paged_chunk_scored = model.prefill_chunk_scored_paged
+        # ring/state entry points: same model fns with the extra operands
+        # threaded (ring tables are replicated data like page tables, so
+        # the TP path wraps them as plain extras; state pools are
+        # single-device only — guarded above)
+        if lay.has_ring:
+            if mesh is not None:
+                lm = self._local_model
+                self._paged_decode_ring = self._shard_paged(
+                    lambda p, t, pl, tab, pos, ring:
+                        lm.decode_step_paged(p, t, pl, tab, pos,
+                                             ring_table=ring),
+                    n_extra=2)
+                self._paged_chunk_ring = self._shard_paged(
+                    lambda p, t, pl, tab, s, v, ring:
+                        lm.prefill_chunk_paged(p, t, pl, tab, s, v,
+                                               ring_table=ring),
+                    n_extra=3)
+                self._paged_chunk_scored_ring = self._shard_paged(
+                    lambda p, t, pl, tab, s, v, ring:
+                        lm.prefill_chunk_scored_paged(p, t, pl, tab, s, v,
+                                                      ring_table=ring),
+                    n_extra=3, n_out=2)
+            else:
+                self._paged_decode_ring = (
+                    lambda p, t, pl, tab, pos, ring:
+                        model.decode_step_paged(p, t, pl, tab, pos,
+                                                ring_table=ring))
+                self._paged_chunk_ring = (
+                    lambda p, t, pl, tab, s, v, ring:
+                        model.prefill_chunk_paged(p, t, pl, tab, s, v,
+                                                  ring_table=ring))
+                self._paged_chunk_scored_ring = (
+                    lambda p, t, pl, tab, s, v, ring:
+                        model.prefill_chunk_scored_paged(p, t, pl, tab, s, v,
+                                                         ring_table=ring))
+        if lay.has_state:
+            self._paged_decode_state = (
+                lambda p, t, pl, tab, pos, st, ring, ok:
+                    model.decode_step_paged(p, t, pl, tab, pos, states=st,
+                                            ring_table=ring, state_ok=ok))
+            self._paged_chunk_state = (
+                lambda p, t, pl, tab, s, v, st, ring, sl:
+                    model.prefill_chunk_paged(p, t, pl, tab, s, v, states=st,
+                                              ring_table=ring, slot_idx=sl))
+            self._paged_chunk_scored_state = (
+                lambda p, t, pl, tab, s, v, st, ring, sl:
+                    model.prefill_chunk_scored_paged(
+                        p, t, pl, tab, s, v, states=st, ring_table=ring,
+                        slot_idx=sl))
         # -- speculative decoding: per-slot draft state is a SECOND set of
         # pool leaves over the SAME logical page-id space (one allocator,
         # one set of page tables), so prefix sharing, copy-on-write,
@@ -533,10 +626,10 @@ class ContinuousServeEngine:
                 functools.partial(self._copy_page_impl,
                                   self._draft_pool_model.plan),
                 donate_argnums=(0,))
-        self._step_fn = jax.jit(self._step_impl, donate_argnums=(1, 2))
-        self._chunk = jax.jit(self._chunk_impl, donate_argnums=(1,))
+        self._step_fn = jax.jit(self._step_impl, donate_argnums=(1, 2, 3))
+        self._chunk = jax.jit(self._chunk_impl, donate_argnums=(1, 2))
         self._chunk_scored = jax.jit(self._chunk_scored_impl,
-                                     donate_argnums=(1,))
+                                     donate_argnums=(1, 2))
         self._copy_page = jax.jit(
             functools.partial(self._copy_page_impl, self._pool_model.plan),
             donate_argnums=(0,))
@@ -586,10 +679,20 @@ class ContinuousServeEngine:
             axis_names={sp.axis}, check_vma=False)
 
     # -- jitted pieces ------------------------------------------------------
-    def _step_impl(self, params, pools, presence, tokens, pos, page_table,
-                   temp, topk, topp, minp, seed, rep, bias_ids, bias_vals):
-        logits, pools = self._paged_decode(params, tokens, pools,
-                                           page_table, pos)
+    def _step_impl(self, params, pools, states, presence, tokens, pos,
+                   page_table, ring_table, state_ok, temp, topk, topp, minp,
+                   seed, rep, bias_ids, bias_vals):
+        lay = self._layout
+        if lay.has_state:
+            logits, pools, states = self._paged_decode_state(
+                params, tokens, pools, page_table, pos, states, ring_table,
+                state_ok)
+        elif lay.has_ring:
+            logits, pools = self._paged_decode_ring(
+                params, tokens, pools, page_table, pos, ring_table)
+        else:
+            logits, pools = self._paged_decode(params, tokens, pools,
+                                               page_table, pos)
         # the incoming token sits at index pos; the one being generated at
         # pos + 1 — its PRNG key is fold_in(seed, pos + 1)
         nxt, lp = sampling.sample_slots(logits, temp, topk, topp, minp, seed,
@@ -601,13 +704,22 @@ class ContinuousServeEngine:
         # step's repetition penalty (rows of inactive slots accumulate
         # garbage harmlessly — admission re-uploads the host mirror)
         presence = presence.at[jnp.arange(nxt.shape[0]), nxt].set(True)
-        return nxt, lp, pools, presence
+        return nxt, lp, pools, states, presence
 
-    def _chunk_impl(self, params, pools, presence, tokens, page_table,
-                    start, valid, temp, topk, topp, minp, seed, rep,
-                    bias_ids, bias_vals):
-        logits, pools = self._paged_chunk(
-            params, tokens, pools, page_table, start, valid)
+    def _chunk_impl(self, params, pools, states, presence, tokens, page_table,
+                    ring_table, slot_idx, start, valid, temp, topk, topp,
+                    minp, seed, rep, bias_ids, bias_vals):
+        lay = self._layout
+        if lay.has_state:
+            logits, pools, states = self._paged_chunk_state(
+                params, tokens, pools, page_table, start, valid, states,
+                ring_table, slot_idx)
+        elif lay.has_ring:
+            logits, pools = self._paged_chunk_ring(
+                params, tokens, pools, page_table, start, valid, ring_table)
+        else:
+            logits, pools = self._paged_chunk(
+                params, tokens, pools, page_table, start, valid)
         # a request's first token is generated at index prompt_len ==
         # start + valid of its final chunk (other rows' draws are ignored);
         # presence rows carry the slot's full prompt already
@@ -617,18 +729,28 @@ class ContinuousServeEngine:
                                           rep_penalty=rep, bias_ids=bias_ids,
                                           bias_vals=bias_vals,
                                           presence=presence)
-        return first, lp, pools
+        return first, lp, pools, states
 
-    def _chunk_scored_impl(self, params, pools, presence, tokens, page_table,
-                           start, valid, tgt, temp, topk, topp, minp, seed,
-                           rep, bias_ids, bias_vals):
+    def _chunk_scored_impl(self, params, pools, states, presence, tokens,
+                           page_table, ring_table, slot_idx, start, valid,
+                           tgt, temp, topk, topp, minp, seed, rep, bias_ids,
+                           bias_vals):
         """The prompt-logprobs variant of ``_chunk_impl``: the chunk's full
         (B, C, V) logits additionally score the NEXT prompt token at every
         chunk position (``tgt[i, j] = prompt[start + j + 1]``, host-built).
         The first-token draw still goes through the last-position head
         logits, so scored admissions sample the identical first token."""
-        last_logits, full, pools = self._paged_chunk_scored(
-            params, tokens, pools, page_table, start, valid)
+        lay = self._layout
+        if lay.has_state:
+            last_logits, full, pools, states = self._paged_chunk_scored_state(
+                params, tokens, pools, page_table, start, valid, states,
+                ring_table, slot_idx)
+        elif lay.has_ring:
+            last_logits, full, pools = self._paged_chunk_scored_ring(
+                params, tokens, pools, page_table, start, valid, ring_table)
+        else:
+            last_logits, full, pools = self._paged_chunk_scored(
+                params, tokens, pools, page_table, start, valid)
         first, lp = sampling.sample_slots(last_logits, temp, topk, topp, minp,
                                           seed, start + valid,
                                           max_top_k=self.max_top_k,
@@ -638,7 +760,7 @@ class ContinuousServeEngine:
         lf = full.astype(jnp.float32)
         lse = jax.nn.logsumexp(lf, axis=-1)
         plp = jnp.take_along_axis(lf, tgt[..., None], axis=-1)[..., 0] - lse
-        return first, lp, plp, pools
+        return first, lp, plp, pools, states
 
     def _draft_chunk_impl(self, dparams, dpools, tokens, page_table, start,
                           valid):
@@ -781,9 +903,15 @@ class ContinuousServeEngine:
         """pools[dst] = pools[src] on every pool leaf (copy-on-write).
         ``plan`` is bound per pool set (functools.partial): the target and
         the speculative draft pools each get a copy jit over their own
-        segment layout."""
+        segment layout.  Ring segments (``seg.window``) live in their own
+        page-id space and are never shared, so full-space copy-on-write
+        ids must not touch them; SSM segments carry empty pools and fall
+        through the dict comprehension untouched."""
         new_pools = []
         for si, seg in enumerate(plan):
+            if seg.window is not None:
+                new_pools.append(pools[si])
+                continue
             copy = ((lambda a: a.at[dst].set(a[src])) if seg.reps == 1
                     else (lambda a: a.at[:, dst].set(a[:, src])))
             new_pools.append(tuple(
@@ -794,9 +922,13 @@ class ContinuousServeEngine:
     def _gather_pages_impl(plan, pools, ids):
         """Pull page rows ``ids`` out of every pool leaf (KV handoff read
         side).  Per-token quantization scale leaves ride in the pools, so
-        they travel with the codes for free."""
+        they travel with the codes for free.  Ring segments are excluded
+        (stateful layouts reject phase splitting at construction)."""
         out = []
         for si, seg in enumerate(plan):
+            if seg.window is not None:
+                out.append(tuple({} for _ in pools[si]))
+                continue
             axis = 0 if seg.reps == 1 else 1
             out.append(tuple(
                 {k: jnp.take(v, ids, axis=axis) for k, v in pool.items()}
@@ -809,6 +941,9 @@ class ContinuousServeEngine:
         side; ``pools`` donated)."""
         new_pools = []
         for si, seg in enumerate(plan):
+            if seg.window is not None:
+                new_pools.append(pools[si])
+                continue
             if seg.reps == 1:
                 put = lambda a, vals: a.at[ids].set(vals)
             else:
@@ -820,10 +955,16 @@ class ContinuousServeEngine:
 
     @staticmethod
     def _permute_pools(plan, pools, gather):
-        """Apply a defrag page permutation to every pool leaf."""
+        """Apply a defrag page permutation to every full-space pool leaf
+        (defrag compacts the full allocator only; ring pages are exclusive
+        and short-lived, so the ring space never fragments across owners
+        in a way compaction could improve)."""
         gather = jnp.asarray(gather)
         new_pools = []
         for si, seg in enumerate(plan):
+            if seg.window is not None:
+                new_pools.append(pools[si])
+                continue
             axis = 0 if seg.reps == 1 else 1
             new_pools.append(tuple(
                 {k: jnp.take(v, gather, axis=axis) for k, v in pool.items()}
@@ -834,11 +975,22 @@ class ContinuousServeEngine:
     def reset(self) -> None:
         """Drop all serving state and start an empty session (jitted
         functions and their compile caches survive across sessions)."""
+        lay = self._layout
+        ring = None
+        if lay.has_ring:
+            ring = RingPageSpace(num_slots=self.num_slots,
+                                 num_pages=self.ring_pages,
+                                 page_size=self.page_size,
+                                 max_blocks=self.max_blocks,
+                                 window=lay.ring_window)
         self.cache = PagedKVCache(num_slots=self.num_slots,
                                   num_pages=self.num_pages,
                                   page_size=self.page_size,
                                   max_blocks=self.max_blocks,
-                                  enable_prefix_cache=self.enable_prefix_cache)
+                                  enable_prefix_cache=self.enable_prefix_cache,
+                                  has_full=lay.has_full, ring=ring,
+                                  recompute_shared=(lay.has_state
+                                                    and lay.has_full))
         self._sched = Scheduler(self.cache, on_release=self._on_release,
                                 max_running=self.max_decode_slots)
         self._slots = sampling.SlotSampling(self.num_slots)
@@ -847,9 +999,11 @@ class ContinuousServeEngine:
         self._presence_np = np.zeros((self.num_slots, self._vocab), np.bool_)
         self._presence = self._presence_to_device(self._presence_np)
         self._presence_dirty = False
-        self._pools = self._pool_model.init_paged_cache(self.num_pages,
-                                                        self.page_size,
-                                                        dtype=self.cache_dtype)
+        self._pools = self._pool_model.init_paged_cache(
+            self.num_pages, self.page_size, dtype=self.cache_dtype,
+            ring_pages=self.ring_pages if lay.has_ring else None)
+        self._states = (self._pool_model.init_state_pools(self.num_slots)
+                        if lay.has_state else None)
         if self.serve_plan is not None:
             # per-shard pools: each device holds its model-axis slice of
             # every physical page (shared logical page-id space)
@@ -1062,6 +1216,18 @@ class ContinuousServeEngine:
         sched = self._sched
         pre = sched.prefilling()
         c = self.prefill_chunk
+        if self.cache.ring is not None:
+            # ring pages back lazily (admission sizes the full space only);
+            # grow each slot's ring to this chunk's frontier BEFORE the
+            # table snapshot.  ``ring_pages_needed`` sizing makes the
+            # all-or-nothing alloc infallible.
+            for r in pre:
+                n = min(c, r.prompt_len - r.pos)
+                if not self.cache.ensure(r.slot, r.pos + n - 1):
+                    raise RuntimeError(
+                        "ring page pool exhausted during prefill — the "
+                        "engine sizes it via ring_pages_needed(), so this "
+                        "is an allocator invariant violation")
         bucket = self._bucket(len(pre))
         need = max(-(-(r.pos + min(c, r.prompt_len - r.pos)) // self.page_size)
                    for r in pre)
@@ -1071,18 +1237,29 @@ class ContinuousServeEngine:
         start = np.zeros((bucket,), np.int32)
         valid = np.zeros((bucket,), np.int32)
         table = self.cache.table()
+        rtab = self.cache.ring_table()
+        rtables = (np.zeros((bucket, nb), np.int32)
+                   if rtab is not None else None)
+        slots_ix = (np.zeros((bucket,), np.int32)
+                    if self._layout.has_state else None)
         for i, r in enumerate(pre):
             n = min(c, r.prompt_len - r.pos)
             tokens[i, :n] = r.prompt[r.pos:r.pos + n]
             tables[i] = table[r.slot, :nb]
             start[i] = r.pos
             valid[i] = n
+            if rtables is not None:
+                rtables[i] = rtab[r.slot, :nb]
+            if slots_ix is not None:
+                slots_ix[i] = r.slot
         samp = sampling.stack_params([r.sampling for r in pre], bucket)
         extras = sampling.stack_extras([r.sampling for r in pre], bucket)
         pres = np.zeros((bucket, self._vocab), np.bool_)
         for i, r in enumerate(pre):
             pres[i] = self._presence_np[r.slot]
         sargs = (jnp.asarray(pres), jnp.asarray(tokens), jnp.asarray(tables),
+                 None if rtables is None else jnp.asarray(rtables),
+                 None if slots_ix is None else jnp.asarray(slots_ix),
                  jnp.asarray(start), jnp.asarray(valid))
         pargs = (*(jnp.asarray(a) for a in samp),
                  *(jnp.asarray(a) for a in extras))
@@ -1095,16 +1272,20 @@ class ContinuousServeEngine:
             for i, r in enumerate(pre):
                 nxt = r.prompt[int(start[i]) + 1:int(start[i]) + int(valid[i]) + 1]
                 tgt[i, :len(nxt)] = nxt
-            first, lp, plp, self._pools = self._chunk_scored(
-                self.params, self._pools, *sargs, jnp.asarray(tgt), *pargs)
+            first, lp, plp, self._pools, self._states = self._chunk_scored(
+                self.params, self._pools, self._states, *sargs,
+                jnp.asarray(tgt), *pargs)
             plp = np.asarray(plp)
         else:
-            first, lp, self._pools = self._chunk(
-                self.params, self._pools, *sargs, *pargs)
+            first, lp, self._pools, self._states = self._chunk(
+                self.params, self._pools, self._states, *sargs, *pargs)
         if self.spec is not None:
-            # the draft pools take the same chunk (same tables/offsets)
+            # the draft pools take the same chunk (same tables/offsets);
+            # speculation is rejected for ring/state layouts, so the ring
+            # and slot operands of sargs never reach this path
             self._draft_pools = self._draft_chunk(
-                self._draft_params, self._draft_pools, *sargs[1:])
+                self._draft_params, self._draft_pools, sargs[1], sargs[2],
+                sargs[5], sargs[6])
         first = np.asarray(first)                      # device sync
         lp = np.asarray(lp)
         for i, r in enumerate(pre):
@@ -1119,6 +1300,9 @@ class ContinuousServeEngine:
                 keep = n - 1 if int(start[i]) + n == r.prompt_len else n
                 r.prompt_logprobs.extend(float(x) for x in plp[i, :keep])
             r.pos += int(valid[i])
+            # the window slid past whole blocks during this chunk: return
+            # their ring pages now (between dispatches, never mid-graph)
+            self.cache.reclaim(r.slot, r.pos)
             if r.pos == r.prompt_len:                  # prefill complete
                 r.state = RUNNING
                 r.tokens.append(int(first[i]))
@@ -1199,18 +1383,31 @@ class ContinuousServeEngine:
         # slots still prefilling (or free) must not touch live pages:
         # their rows are routed to the scratch page for this step
         step_table = np.zeros_like(self.cache.table())
+        rtab = self.cache.ring_table()
+        ring_step = None if rtab is None else np.zeros_like(rtab)
+        state_ok = (np.zeros((self.num_slots,), np.bool_)
+                    if self._layout.has_state else None)
         for req in decoding:
             tokens[req.slot] = req.tokens[-1]
             pos[req.slot] = req.pos
             step_table[req.slot] = self.cache.table()[req.slot]
+            if ring_step is not None:
+                ring_step[req.slot] = rtab[req.slot]
+            if state_ok is not None:
+                # non-decoding slots run the step too (fixed batch) but
+                # must not commit their garbage recurrent-state update
+                state_ok[req.slot] = True
         if self._presence_dirty:       # admissions/releases since last step
             self._presence = self._presence_to_device(self._presence_np)
             self._presence_dirty = False
         if self.spec is not None:
             return self._spec_window(decoding, tokens, pos, step_table, outs)
-        nxt, lp, self._pools, self._presence = self._step_fn(
-            self.params, self._pools, self._presence, jnp.asarray(tokens),
-            jnp.asarray(pos), jnp.asarray(step_table), *self._slots.arrays())
+        nxt, lp, self._pools, self._states, self._presence = self._step_fn(
+            self.params, self._pools, self._states, self._presence,
+            jnp.asarray(tokens), jnp.asarray(pos), jnp.asarray(step_table),
+            None if ring_step is None else jnp.asarray(ring_step),
+            None if state_ok is None else jnp.asarray(state_ok),
+            *self._slots.arrays())
         nxt = np.asarray(nxt)                          # device sync
         lp = np.asarray(lp)
         self._occ_sum += len(decoding) / self.num_slots
@@ -1224,6 +1421,7 @@ class ContinuousServeEngine:
             if req.sampling.logprobs:
                 req.logprobs.append(float(lp[req.slot]))
             req.pos += 1
+            self.cache.reclaim(req.slot, req.pos)
             self._progress(req, outs)
         return outs
 

@@ -206,11 +206,30 @@ class PagedKVCache:
     """
 
     def __init__(self, *, num_slots: int, num_pages: int, page_size: int,
-                 max_blocks: int, enable_prefix_cache: bool = False):
+                 max_blocks: int, enable_prefix_cache: bool = False,
+                 has_full: bool = True, ring=None,
+                 recompute_shared: bool = False):
         self.num_slots = num_slots
         self.max_blocks = max_blocks
         self.page_size = page_size
         self.enable_prefix_cache = enable_prefix_cache
+        # -- stateful cache layouts (runtime.state_cache) --
+        # has_full=False: no segment streams full-context KV (pure
+        # SSM / pure sliding-window models) — admission is slot-based
+        # only, the full table stays parked on scratch.
+        # ring: a RingPageSpace for the model's sliding-window segments,
+        # grown with ``ensure`` and pruned with ``reclaim`` alongside
+        # the full space so eviction moves both together.
+        # recompute_shared: prefix hits share pages for CAPACITY but
+        # report 0 shared tokens, so prefill recomputes from position 0
+        # (hybrid models must replay the whole prompt to rebuild SSM
+        # state and ring pages; the rewrites into shared attention
+        # pages are byte-identical, so donors are unaffected).
+        self.has_full = has_full
+        self.ring = ring
+        self.recompute_shared = recompute_shared
+        if enable_prefix_cache and not has_full:
+            raise ValueError("prefix cache requires full-KV pages")
         self.allocator = PageAllocator(num_pages, page_size)
         self._table = np.zeros((num_slots, max_blocks), np.int32)
         self._slots: dict[int, SlotView] = {}
@@ -321,6 +340,12 @@ class PagedKVCache:
             raise ValueError(
                 f"request needs {n_blocks} blocks > max_blocks={self.max_blocks}")
         owner = ("slot", slot)
+        if not self.has_full:
+            # slot-based admission only: ring pages (and state-pool rows)
+            # are backed lazily by ``ensure`` as prefill advances
+            self._slots[slot] = SlotView(owner=owner, num_tokens=n_tokens)
+            self.lookup_tokens += n_tokens
+            return 0
         shared: list[int] = []
         if self.enable_prefix_cache and tokens is not None:
             shared = self._match_prefix(np.asarray(tokens))
@@ -339,29 +364,52 @@ class PagedKVCache:
         self._table[slot, len(shared):n_blocks] = fresh
         self.lookup_tokens += n_tokens
         self.hit_tokens += len(shared) * self.page_size
-        return len(shared) * self.page_size
+        return 0 if self.recompute_shared else len(shared) * self.page_size
 
     def ensure(self, slot: int, pos: int) -> bool:
-        """Grow ``slot`` so position ``pos`` has a backing page."""
+        """Grow ``slot`` so position ``pos`` has a backing page (in every
+        page space the model uses — full and ring grow together, so one
+        preemption decision covers both)."""
         view = self._slots[slot]
-        have = self.blocks_of(slot)
         need = self._needed_blocks(pos + 1)
         if need > self.max_blocks:
             return False
-        if need > have:
-            pages = self._alloc_with_reclaim(view.owner, need - have)
-            if pages is None:
-                return False
-            self._table[slot, have:need] = pages
+        if self.has_full:
+            have = self.blocks_of(slot)
+            if need > have:
+                pages = self._alloc_with_reclaim(view.owner, need - have)
+                if pages is None:
+                    return False
+                self._table[slot, have:need] = pages
+        if self.ring is not None and not self.ring.ensure(slot, pos):
+            return False
         view.num_tokens = max(view.num_tokens, pos + 1)
         return True
 
+    def reclaim(self, slot: int, pos_next: int) -> int:
+        """Return ``slot``'s out-of-window ring pages to the ring
+        allocator (no-op for pure full-KV layouts); returns pages freed.
+        The engine calls this after every prefill chunk and decode step
+        with the NEXT query position, keeping windowed residency at
+        O(window) per slot."""
+        if self.ring is None:
+            return 0
+        return self.ring.reclaim(slot, pos_next)
+
+    def ring_table(self) -> np.ndarray | None:
+        return None if self.ring is None else self.ring.table()
+
     def release(self, slot: int) -> int:
         """Drop every reference of ``slot`` (finish or eviction); returns
-        pages actually freed (shared/indexed pages stay resident)."""
+        pages actually freed (shared/indexed pages stay resident).
+        Releases every space the slot owns — full pages, ring pages —
+        together (the engine separately resets the slot's state-pool
+        rows at its next admission)."""
         self._slots.pop(slot, None)
         freed = self.allocator.free_owner(("slot", slot))
         self._table[slot, :] = SCRATCH_PAGE
+        if self.ring is not None:
+            freed += self.ring.release(slot)
         return freed
 
     # -- copy-on-write ------------------------------------------------------

@@ -32,8 +32,11 @@ instead of hand-tuned kwargs::
                                         max_len=4096))
     print(llm.deployment.describe())
 
-Future backends (SWA ring pages, SSM state admission, real-TPU serving)
-plug in behind this façade instead of growing new ad-hoc entrypoints.
+Stateful cache layouts (SWA ring pages, SSM state pools —
+``runtime.state_cache``) serve through the same façade: the continuous
+engine classifies the model's plan and sizes ring/state pools itself.
+Future backends (real-TPU serving) plug in behind this façade instead of
+growing new ad-hoc entrypoints.
 """
 from __future__ import annotations
 

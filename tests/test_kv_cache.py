@@ -15,6 +15,7 @@ from repro.runtime.engine import (ContinuousServeEngine, DisaggServeEngine,
                                   ServeEngine)
 from repro.runtime.kv_cache import SCRATCH_PAGE, PageAllocator, PagedKVCache
 from repro.runtime.scheduler import Request, Scheduler
+from repro.runtime.speculative import SpeculativeConfig
 
 
 # ---------------------------------------------------------------------------
@@ -440,9 +441,11 @@ def test_continuous_engine_matches_static_greedy_mla():
 def test_continuous_engine_matches_static_greedy_sliding_window():
     """Sliding-window masks through the gqa backend's paged dispatch: a
     SWA arch (prompt longer than the window) serves continuously and
-    matches the static engine's ring-cache decode token for token.  Pages
-    behind the window stay allocated (ring-aware reclamation is the
-    remaining capacity half, see ROADMAP)."""
+    matches the static engine's ring-cache decode token for token.  The
+    engine serves this arch through the ring space
+    (``runtime.state_cache``): pages wholly behind the window are
+    reclaimed mid-stream, which is logit-neutral because the sliding
+    mask already excludes those positions — this test pins that."""
     cfg = reduced_config(get_config("h2o-danube-1-8b"))
     assert cfg.sliding_window is not None
     model = build_model(cfg)
@@ -462,15 +465,33 @@ def test_continuous_engine_matches_static_greedy_sliding_window():
     np.testing.assert_array_equal(np.asarray(ref.tokens), cont)
 
 
-def test_unsupported_families_raise():
+def test_unsupported_stateful_combinations_raise():
+    """SSM/hybrid archs serve through state pools now
+    (``runtime.state_cache``), so pool construction no longer raises —
+    what raises is (a) driving a state-carrying model without threading
+    its states and (b) engine combinations the state protocol cannot
+    support (speculative draft/verify rewinds, which recurrent state
+    cannot follow)."""
     cfg = reduced_config(get_config("mamba2-370m"))
     model = build_model(cfg)
-    with pytest.raises(NotImplementedError):
-        model.init_paged_cache(8, 4)
-    # hybrid SWA still needs per-slot SSM state admission
-    hy = build_model(reduced_config(get_config("hymba-1-5b")))
-    with pytest.raises(NotImplementedError):
-        hy.init_paged_cache(8, 4)
+    pools = model.init_paged_cache(8, 4)          # no longer raises
+    table = jnp.zeros((2, 2), jnp.int32)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(NotImplementedError, match="state"):
+        model.decode_step_paged(params, jnp.zeros((2,), jnp.int32), pools,
+                                table, jnp.zeros((2,), jnp.int32))
+    with pytest.raises(NotImplementedError, match="state"):
+        model.prefill_chunk_paged(params, jnp.zeros((2, 4), jnp.int32),
+                                  pools, table, jnp.zeros((2,), jnp.int32),
+                                  jnp.zeros((2,), jnp.int32))
+    # an SSM/hybrid DRAFT is rejected at config construction...
+    with pytest.raises(ValueError, match="rewindable"):
+        SpeculativeConfig(draft_model=model, draft_params=params)
+    # ...and a stateful TARGET at engine construction (self-draft)
+    with pytest.raises(NotImplementedError, match="speculative"):
+        ContinuousServeEngine(model, params, num_slots=2, page_size=4,
+                              num_pages=8, max_len=8,
+                              speculative=SpeculativeConfig(gamma=2))
 
 
 # ---------------------------------------------------------------------------

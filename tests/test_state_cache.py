@@ -1,0 +1,394 @@
+"""Stateful cache layouts (``runtime.state_cache``): ring-page
+reclamation and SSM/hybrid state pools behind the attention-backend
+registry.
+
+Covers the PR-10 acceptance surface: layout classification, RingPageSpace
+allocator/refcount invariants through reclamation + release, O(window)
+per-slot residency during decode, byte-identity continuous == static for
+the SSM and hybrid families under forced preemption-restart and slot
+permutation, prefix-cache scoping (no hits from ring or state, hybrid
+attention pages still share), and DeploymentSpec residency accounting
+that matches the engine's actual pool allocations byte for byte.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.models.model import Model, build_model, build_plan
+from repro.runtime.deployment import DeploymentError, DeploymentSpec
+from repro.runtime.engine import ContinuousServeEngine, ServeEngine
+from repro.runtime.kv_cache import SCRATCH_PAGE, PagedKVCache
+from repro.runtime.scheduler import Request
+from repro.runtime.state_cache import (
+    RingPageSpace, model_cache_layout, ring_blocks_cap, ring_pages_needed,
+    state_bytes_per_slot,
+)
+
+
+def _hybrid_cfg():
+    """A reduced hymba that actually exercises all three residency
+    classes: 2-layer reduced configs make every layer global (layer 0 and
+    the last layer are always global), so stretch to 3 layers with the
+    middle one windowed."""
+    return dataclasses.replace(reduced_config(get_config("hymba-1.5b")),
+                               n_layers=3, global_attn_every=3)
+
+
+# ---------------------------------------------------------------------------
+# Layout classification
+# ---------------------------------------------------------------------------
+
+
+def test_model_cache_layout_classification():
+    ssm = model_cache_layout(build_plan(reduced_config(
+        get_config("mamba2-370m"))))
+    assert (ssm.has_full, ssm.has_ring, ssm.has_state) == (False, False, True)
+    assert ssm.stateful and ssm.ring_window is None
+
+    ring = model_cache_layout(build_plan(reduced_config(
+        get_config("h2o-danube-1.8b"))))
+    assert (ring.has_full, ring.has_ring, ring.has_state) == (False, True,
+                                                              False)
+    assert ring.stateful and ring.ring_window == 8
+
+    hyb = model_cache_layout(build_plan(_hybrid_cfg()))
+    assert (hyb.has_full, hyb.has_ring, hyb.has_state) == (True, True, True)
+    assert hyb.ring_window == 8 and hyb.ring_layers() == 1
+
+    dense = model_cache_layout(build_plan(reduced_config(
+        get_config("qwen3-14b"))))
+    assert not dense.stateful and dense.has_full
+
+
+def test_ring_caps():
+    assert ring_blocks_cap(8, 4) == 3                  # ceil(8/4)+1
+    assert ring_blocks_cap(9, 4) == 4
+    # transient bound: +prefill_chunk positions before reclamation runs
+    assert ring_pages_needed(num_slots=2, window=8, page_size=4,
+                             max_blocks=100, prefill_chunk=4) == 1 + 2 * 4
+    # never more than max_blocks per slot
+    assert ring_pages_needed(num_slots=2, window=8, page_size=4,
+                             max_blocks=3, prefill_chunk=64) == 1 + 2 * 3
+
+
+# ---------------------------------------------------------------------------
+# RingPageSpace invariants
+# ---------------------------------------------------------------------------
+
+
+def test_ring_space_reclaim_release_invariants():
+    ring = RingPageSpace(num_slots=3, num_pages=1 + 3 * 4, page_size=4,
+                         max_blocks=16, window=8)
+    alloc = ring.allocator
+    rng = np.random.default_rng(0)
+    pos = [0, 0, 0]
+    for step in range(300):
+        slot = int(rng.integers(0, 3))
+        op = rng.integers(0, 10)
+        if op < 7:                                     # advance one token
+            if ring.ensure(slot, pos[slot]):
+                ring.reclaim(slot, pos[slot] + 1)
+                pos[slot] += 1
+            else:                                      # pool pressure:
+                ring.release(slot)                     # preempt-restart
+                pos[slot] = 0
+        elif op < 9:                                   # mid-stream reclaim
+            ring.reclaim(slot, pos[slot])
+        else:                                          # finish
+            ring.release(slot)
+            pos[slot] = 0
+        ring.check()
+        assert alloc.num_free + alloc.num_live == alloc.num_pages - 1
+        for s in range(3):
+            # steady-state bound: reclaim runs after every advance
+            assert ring.live_blocks(s) <= ring.decode_cap
+    # reclaimed blocks read as scratch, live ones never do
+    for s in range(3):
+        ring.release(s)
+        assert all(int(p) == SCRATCH_PAGE for p in ring.table()[s])
+    assert alloc.num_live == 0
+
+
+def test_ring_ensure_all_or_nothing():
+    ring = RingPageSpace(num_slots=2, num_pages=4, page_size=4,
+                         max_blocks=8, window=8)
+    assert ring.ensure(0, 11)                          # 3 blocks
+    assert not ring.ensure(1, 7)                       # needs 2, has 0 free
+    assert ring.live_blocks(1) == 0                    # nothing leaked
+    ring.check()
+    ring.release(0)
+    assert ring.ensure(1, 7)
+
+
+def test_prefix_cache_requires_full_space():
+    ring = RingPageSpace(num_slots=2, num_pages=8, page_size=4,
+                         max_blocks=4, window=8)
+    with pytest.raises(ValueError, match="prefix"):
+        PagedKVCache(num_slots=2, num_pages=8, page_size=4, max_blocks=4,
+                     enable_prefix_cache=True, has_full=False, ring=ring)
+
+
+def test_state_bytes_per_slot_exact():
+    for mk in ("mamba2-370m", "hymba-1.5b"):
+        cfg = reduced_config(get_config(mk))
+        model = Model(cfg)
+        states = model.init_state_pools(num_slots=3)
+        nbytes = sum(a.nbytes for a in jax.tree.leaves(states))
+        assert state_bytes_per_slot(cfg) * 3 == nbytes
+    assert state_bytes_per_slot(reduced_config(get_config("qwen3-14b"))) == 0
+
+
+# ---------------------------------------------------------------------------
+# End-to-end byte-identity: continuous == static for stateful families
+# ---------------------------------------------------------------------------
+
+
+def _static_refs(model, prompts, lens, max_len):
+    eng = ServeEngine(model, params=model._params, max_len=max_len,
+                      donate_cache=False)
+    return {i: np.asarray(eng.generate(
+        {"tokens": jnp.asarray(prompts[i])[None]},
+        max_new_tokens=lens[i]).tokens[0]) for i in range(len(prompts))}
+
+
+@pytest.fixture(scope="module")
+def mamba():
+    cfg = reduced_config(get_config("mamba2-370m"))
+    model = build_model(cfg)
+    model._params = model.init(jax.random.PRNGKey(0))
+    return cfg, model
+
+
+@pytest.fixture(scope="module")
+def hybrid():
+    cfg = _hybrid_cfg()
+    model = build_model(cfg)
+    model._params = model.init(jax.random.PRNGKey(0))
+    return cfg, model
+
+
+def test_mamba2_continuous_matches_static_forced_preemption(mamba):
+    """Pure-state serving: 3 requests over 2 slots (slot permutation on
+    requeue) with an explicit mid-decode preemption — the restart replays
+    the prompt + emitted tokens through chunked SSD prefill and must
+    still emit the static engine's greedy stream byte for byte.  (SSM
+    slots hold no pages, so pool pressure cannot preempt them; the test
+    preempts through the scheduler, as an operator eviction would.)"""
+    cfg, model = mamba
+    G = [8, 6, 7]
+    rng = np.random.default_rng(0)
+    # chunk-aligned prompt lengths: SSD chunk boundaries must land on
+    # ssm_chunk multiples for bitwise prefill/decode-chain equality
+    prompts = [rng.integers(1, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (16, 32, 16)]
+    refs = _static_refs(model, prompts, G, max_len=48)
+
+    ceng = ContinuousServeEngine(model, model._params, num_slots=2,
+                                 page_size=4, num_pages=13, max_len=48,
+                                 prefill_chunk=cfg.ssm_chunk)
+    for i in range(3):
+        ceng.add_request(Request(rid=i, prompt=prompts[i],
+                                 max_new_tokens=G[i],
+                                 arrival_time=0.01 * i))
+    outs, preempted = {}, False
+    steps = 0
+    while ceng.has_unfinished():
+        for o in ceng.step():
+            if o.finished:
+                outs[o.rid] = o.token_ids
+        steps += 1
+        if steps == 4 and not preempted:
+            decoding = ceng._sched.decoding()
+            assert decoding, "no decoding request to preempt"
+            ceng._sched.preempt(decoding[-1])
+            preempted = True
+        assert steps < 500
+    assert preempted
+    assert sum(r.preemptions for r in ceng._requests) > 0
+    for i in range(3):
+        np.testing.assert_array_equal(refs[i], outs[i])
+
+
+def test_hybrid_continuous_matches_static_preemption_defrag(hybrid):
+    """Full + ring + state in one slot: ragged lengths under a tight full
+    pool (evictions move all three residencies together) + periodic
+    defrag (which must leave ring pages untouched) still reproduce the
+    static engine's greedy stream, and both allocators' invariants hold
+    afterwards."""
+    cfg, model = hybrid
+    R = 5
+    lens = [6, 9, 5, 8, 7]
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(1, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (16, 32, 16, 32, 16)]
+    refs = _static_refs(model, prompts, lens, max_len=48)
+
+    ceng = ContinuousServeEngine(model, model._params, num_slots=2,
+                                 page_size=4, num_pages=14, max_len=44,
+                                 prefill_chunk=cfg.ssm_chunk)
+    reqs = [Request(rid=i, prompt=prompts[i], max_new_tokens=lens[i],
+                    arrival_time=0.002 * i) for i in range(R)]
+    stats = ceng.run(reqs, defrag_every=3)
+    for i in range(R):
+        np.testing.assert_array_equal(refs[i], stats.results[i])
+    assert stats.preemptions > 0                       # pressure was real
+    ceng.cache.allocator.check()
+    a = ceng.cache.allocator
+    assert a.num_free + a.num_live == a.num_pages - 1
+    ceng.cache.ring.check()
+    ra = ceng.cache.ring.allocator
+    assert ra.num_free + ra.num_live == ra.num_pages - 1
+
+
+def test_windowed_residency_bounded_per_step():
+    """The capacity half of sliding-window serving: during decode a
+    slot's live ring blocks never exceed ceil(window/page) + 1, however
+    long the stream runs (the full-KV baseline holds ceil(pos/page))."""
+    cfg = reduced_config(get_config("h2o-danube-1.8b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    G = 40                                             # >> window (8)
+    prompt = np.arange(1, 13, dtype=np.int32) % cfg.vocab_size
+    ceng = ContinuousServeEngine(model, params, num_slots=2, page_size=4,
+                                 num_pages=17, max_len=64, prefill_chunk=5)
+    ceng.add_request(Request(rid=0, prompt=prompt, max_new_tokens=G))
+    cap = ring_blocks_cap(cfg.sliding_window, 4)
+    assert cap == 3
+    seen_decode_steps = 0
+    while ceng.has_unfinished():
+        ceng.step()
+        ring = ceng.cache.ring
+        ring.check()
+        decoding = ceng._sched.decoding()
+        for r in decoding:
+            assert ring.live_blocks(r.slot) <= cap, \
+                (r.pos, ring.live_blocks(r.slot))
+        seen_decode_steps += bool(decoding)
+    # the final decode step finishes the request before the check above
+    # sees it, so the count under-reads by a step or two
+    assert seen_decode_steps >= G - 3
+
+
+# ---------------------------------------------------------------------------
+# Prefix-cache scoping
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_cache_disabled_for_pure_ring_and_state():
+    """Reclaimed ring blocks and never-written SSM 'blocks' must not be
+    handed out as prefix hits: models with no full-KV space serve with
+    the prefix index force-disabled."""
+    for mk in ("h2o-danube-1.8b", "mamba2-370m"):
+        cfg = reduced_config(get_config(mk))
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        ceng = ContinuousServeEngine(model, params, num_slots=2, page_size=4,
+                                     num_pages=9, max_len=32,
+                                     enable_prefix_cache=True)
+        assert ceng.enable_prefix_cache is False
+        prompt = np.arange(1, 13, dtype=np.int32) % cfg.vocab_size
+        reqs = [Request(rid=i, prompt=prompt.copy(), max_new_tokens=4,
+                        arrival_time=0.05 * i) for i in range(3)]
+        stats = ceng.run(reqs)
+        assert stats.prefix_hit_tokens == 0
+        assert len({tuple(stats.results[i]) for i in range(3)}) == 1
+
+
+def test_prefix_cache_hybrid_shares_pages_but_recomputes(hybrid):
+    """Hybrid prompts still share full-space attention pages for CAPACITY
+    (the index hands out matched pages), but admission reports 0 shared
+    tokens so the whole prompt replays — rebuilding SSM state and ring
+    pages — and outputs stay byte-identical to static."""
+    cfg, model = hybrid
+    prompt = (np.arange(1, 33, dtype=np.int32) * 7) % cfg.vocab_size
+    refs = _static_refs(model, [prompt] * 3, [5, 5, 5], max_len=48)
+    ceng = ContinuousServeEngine(model, model._params, num_slots=2,
+                                 page_size=4, num_pages=40, max_len=48,
+                                 prefill_chunk=cfg.ssm_chunk,
+                                 enable_prefix_cache=True)
+    assert ceng.enable_prefix_cache is True
+    reqs = [Request(rid=i, prompt=prompt.copy(), max_new_tokens=5,
+                    arrival_time=0.05 * i) for i in range(3)]
+    stats = ceng.run(reqs)
+    for i in range(3):
+        np.testing.assert_array_equal(refs[i], stats.results[i])
+    assert ceng.cache.hit_tokens > 0                   # pages were shared
+    # ...but no prompt compute was skipped (state must be rebuilt)
+    assert stats.prefill_tokens == stats.prompt_tokens
+    assert all(r["shared_tokens"] == 0 for r in stats.per_request.values())
+
+
+# ---------------------------------------------------------------------------
+# DeploymentSpec residency accounting
+# ---------------------------------------------------------------------------
+
+
+def _pool_nbytes(tree):
+    return sum(a.nbytes for a in jax.tree.leaves(tree))
+
+
+@pytest.mark.parametrize("mk", ["mamba2-370m", "hymba-1.5b",
+                                "h2o-danube-1.8b"])
+def test_resolve_prices_exactly_what_the_pools_allocate(mk):
+    """Acceptance: ``resolve`` reports exactly the bytes the engine's
+    pools allocate — full pages + ring pages (scratch rows excluded, per
+    the existing convention) + state pools."""
+    cfg = reduced_config(get_config(mk))
+    if mk == "hymba-1.5b":
+        cfg = _hybrid_cfg()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    spec = DeploymentSpec(sku="rpu-cu", max_len=64, page_size=4,
+                          max_slots=4, prefill_chunk=16)
+    r = spec.resolve(model, params=params)
+    eng = ContinuousServeEngine(model, params, spec=spec)
+    eng.reset()
+    lay = model_cache_layout(model.plan)
+    assert eng.ring_pages == r.num_ring_pages
+    assert (r.ring_window == lay.ring_window)
+    total = _pool_nbytes(eng._pools)
+    if eng._states is not None:
+        state_total = _pool_nbytes(eng._states)
+        assert state_total == r.num_slots * r.state_bytes_per_slot
+        total += state_total
+    else:
+        assert r.state_bytes_per_slot == 0
+    full_tok = r.kv_token_bytes - r.ring_token_bytes
+    scratch = full_tok * r.page_size \
+        + (r.ring_token_bytes * r.page_size if r.num_ring_pages else 0)
+    assert r.pool_bytes_per_device == total - scratch
+    d = r.as_dict()
+    assert d["num_ring_pages"] == r.num_ring_pages
+    assert "stateful" in r.describe()
+
+
+def test_resolve_rejects_unsupported_stateful_combinations():
+    hy = Model(_hybrid_cfg())
+    dense = Model(reduced_config(get_config("qwen3-14b")))
+    spec = DeploymentSpec(sku="rpu-cu", max_len=64, page_size=4)
+    with pytest.raises(DeploymentError, match="speculative.*hymba"):
+        spec.resolve(hy, draft=dense)
+    with pytest.raises(DeploymentError, match="phase.*hymba"):
+        spec.resolve(hy, phase="prefill")
+    with pytest.raises(DeploymentError, match="cache_dtype.*hymba"):
+        DeploymentSpec(sku="rpu-cu", max_len=64, page_size=4,
+                       cache_dtype="fp8").resolve(hy)
+    # quantized RING pages (no state) are fine — only state pools reject
+    danube = Model(reduced_config(get_config("h2o-danube-1.8b")))
+    r = DeploymentSpec(sku="rpu-cu", max_len=64, page_size=4,
+                       cache_dtype="fp8").resolve(danube)
+    assert r.num_ring_pages > 0
+
+
+def test_benchmark_smoke_ring_gate():
+    """Fast tier of ``benchmarks/state_cache``: the measured ring
+    residency gate (bounded pages/slot vs the no-reclamation baseline)
+    runs clean at reduced scale."""
+    from benchmarks.state_cache import ring_residency_rows
+    rows = ring_residency_rows(max_new=24)
+    peak, baseline = rows[0].value, rows[1].value
+    assert peak < baseline
